@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks (framework table, not from the paper).
+
+Times the XLA oracle paths on CPU (wall time is CPU-only and indicative;
+the Pallas kernels target TPU and are validated in interpret mode) and
+derives achieved GFLOP/s for the attention/SSD/WKV shapes the full configs
+use per layer.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> List[Dict]:
+    rows = []
+    key = jax.random.key(0)
+
+    # attention: tinyllama layer shape at seq 1024 (CPU-sized)
+    B, S, Hq, Hkv, d = 1, 1024, 32, 4, 64
+    q = jax.random.normal(key, (B, S, Hq, d), jnp.float32)
+    k = jax.random.normal(key, (B, S, Hkv, d), jnp.float32)
+    v = jax.random.normal(key, (B, S, Hkv, d), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    dt = _time(f, q, k, v)
+    flops = 4 * B * S * S * Hq * d / 2  # causal half
+    rows.append({"name": "kernel/attention_ref_cpu", "us_per_call": dt * 1e6,
+                 "derived": f"gflops={flops/dt/1e9:.1f} shape=B{B}S{S}H{Hq}d{d}"})
+
+    # SSD: zamba2 layer shape (scaled batch)
+    B, S, H, P, N = 1, 1024, 64, 64, 64
+    x = jax.random.normal(key, (B, S, H, P), jnp.float32)
+    ld = -jax.nn.softplus(jax.random.normal(key, (B, S, H)))
+    bmat = jax.random.normal(key, (B, S, N)) * 0.5
+    cmat = jax.random.normal(key, (B, S, N)) * 0.5
+    f = jax.jit(lambda *a: ref.ssd_chunked_ref(*a, chunk=64)[0])
+    dt = _time(f, x, ld, bmat, cmat)
+    flops = 2 * B * S * 64 * H * (N + P) + 4 * B * S * H * P * N
+    rows.append({"name": "kernel/ssd_ref_cpu", "us_per_call": dt * 1e6,
+                 "derived": f"gflops={flops/dt/1e9:.1f} shape=B{B}S{S}H{H}P{P}N{N}"})
+
+    # WKV6: rwkv6 layer shape
+    B, S, H, N = 1, 512, 32, 64
+    r = jax.random.normal(key, (B, S, H, N)) * 0.5
+    kk = jax.random.normal(key, (B, S, H, N)) * 0.5
+    vv = jax.random.normal(key, (B, S, H, N)) * 0.5
+    lw = -jnp.exp(jax.random.normal(key, (B, S, H, N)))
+    u = jax.random.normal(key, (H, N)) * 0.5
+    f = jax.jit(lambda *a: ref.wkv6_chunked_ref(*a, chunk=16)[0])
+    dt = _time(f, r, kk, vv, lw, u)
+    flops = 2 * B * S * 16 * H * N * 2 + 4 * B * S * H * N * N
+    rows.append({"name": "kernel/wkv6_ref_cpu", "us_per_call": dt * 1e6,
+                 "derived": f"gflops={flops/dt/1e9:.1f} shape=B{B}S{S}H{H}N{N}"})
+    return rows

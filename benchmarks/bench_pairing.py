@@ -1,0 +1,49 @@
+"""Table I — average round time under different pairing mechanisms.
+
+Reports FedPairing's greedy (joint), random, location-based and
+computation-resource-based pairing on the calibrated latency model,
+averaged over fleet draws, plus the paper's numbers for reference.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import latency, pairing
+from repro.core.latency import ChannelModel, WorkloadModel
+
+PAPER = {"fedpairing": 1553.0, "random": 4063.0, "location": 7275.0,
+         "compute": 1807.0}
+
+
+def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18
+        ) -> List[Dict]:
+    chan = ChannelModel()
+    w = WorkloadModel(num_layers=num_layers)
+    acc = {k: [] for k in PAPER}
+    t0 = time.perf_counter()
+    for seed in range(n_fleets):
+        fleet = latency.make_fleet(n=n_clients, seed=seed)
+
+        def t(pairs):
+            return latency.round_time_fedpairing(pairs, fleet, chan, w)
+
+        acc["fedpairing"].append(t(pairing.fedpairing_pairing(fleet, chan)))
+        acc["compute"].append(t(pairing.compute_pairing(fleet, chan)))
+        acc["location"].append(t(pairing.location_pairing(fleet, chan)))
+        acc["random"].append(np.mean(
+            [t(pairing.random_pairing(n_clients, seed=s)) for s in range(5)]))
+    us = (time.perf_counter() - t0) * 1e6 / n_fleets
+    rows = []
+    for k in ("fedpairing", "random", "location", "compute"):
+        ours = float(np.mean(acc[k]))
+        rel_ours = ours / np.mean(acc["fedpairing"])
+        rel_paper = PAPER[k] / PAPER["fedpairing"]
+        rows.append({
+            "name": f"table1/{k}", "us_per_call": us,
+            "derived": f"round_s={ours:.0f} rel={rel_ours:.2f} "
+                       f"paper_s={PAPER[k]:.0f} paper_rel={rel_paper:.2f}",
+        })
+    return rows

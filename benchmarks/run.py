@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * table1/*  — pairing-mechanism round times   (paper Table I)
+  * table2/*  — algorithm round times           (paper Table II)
+  * fig2/*,fig3/* — convergence IID / Non-IID   (paper Figs. 2-3)
+  * kernel/*  — kernel micro-benchmarks (framework)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: pairing,roundtime,convergence,kernels")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    suites = []
+    if only is None or "pairing" in only:
+        from benchmarks import bench_pairing
+        suites.append(bench_pairing.run)
+    if only is None or "roundtime" in only:
+        from benchmarks import bench_roundtime
+        suites.append(bench_roundtime.run)
+    if only is None or "convergence" in only:
+        from benchmarks import bench_convergence
+        suites.append(bench_convergence.run)
+    if only is None or "kernels" in only:
+        from benchmarks import bench_kernels
+        suites.append(bench_kernels.run)
+
+    print("name,us_per_call,derived")
+    for run in suites:
+        for row in run():
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Checkpointing: msgpack pytree serialization."""
+from repro.checkpoint.io import load_checkpoint, save_checkpoint  # noqa: F401

@@ -1,0 +1,70 @@
+"""Msgpack pytree checkpointing (flax-free).
+
+Arrays are flattened to (path, dtype, shape, bytes) records; restores give
+numpy arrays that JAX consumes directly.  Atomic write via temp + rename.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import msgpack
+import numpy as np
+
+Pytree = Any
+_SEP = "/"
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Pytree, metadata: Dict | None = None
+                    ) -> None:
+    payload = {
+        "meta": metadata or {},
+        "leaves": {
+            k: {"dtype": str(a.dtype), "shape": list(a.shape),
+                "data": a.tobytes()}
+            for k, a in _flatten(tree).items()
+        },
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str, like: Pytree) -> Pytree:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = payload["leaves"]
+    flat_like = _flatten(like)
+    restored = {}
+    for key, spec in leaves.items():
+        arr = np.frombuffer(spec["data"], dtype=spec["dtype"]).reshape(
+            spec["shape"])
+        restored[key] = arr
+    missing = set(flat_like) - set(restored)
+    extra = set(restored) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = [_SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in paths]
+    return jax.tree_util.tree_unflatten(treedef, [restored[k] for k in keys])

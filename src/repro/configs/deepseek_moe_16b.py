@@ -1,0 +1,41 @@
+"""deepseek-moe-16b — fine-grained MoE: 2 shared + 64 routed experts, top-6.
+
+[arXiv:2401.06066] 28 layers, d_model=2048, 16 heads (kv=16), per-expert
+d_ff=1408, vocab=102400.
+"""
+from repro.configs.base import ArchConfig, ArchFamily, AttentionKind
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b",
+    family=ArchFamily.MOE,
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,                 # per-expert FFN hidden size (fine-grained)
+    vocab_size=102400,
+    num_experts=64,
+    num_shared_experts=2,
+    top_k=6,
+    expert_pad_to=16,
+    attention=AttentionKind.FULL,
+    source="arXiv:2401.06066",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.with_overrides(
+        dtype="float32",
+        name="deepseek-moe-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=512,
+        num_experts=4,
+        num_shared_experts=1,
+        top_k=2,
+        moe_capacity_factor=4.0,
+        expert_pad_to=1,
+    )

@@ -1,0 +1,42 @@
+"""granite-moe-3b-a800m — fine-grained MoE, 40 experts top-8.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base family] 32 layers, d_model=1536,
+24 heads / 8 kv heads, per-expert d_ff=512, vocab=49155 (padded to 49408 for
+16-way vocab sharding), MoE 40 experts top-8, no shared experts.
+"""
+from repro.configs.base import ArchConfig, ArchFamily, AttentionKind
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family=ArchFamily.MOE,
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=512,                  # per-expert FFN hidden size
+    vocab_size=49155,
+    num_experts=40,
+    num_shared_experts=0,
+    top_k=8,
+    expert_pad_to=16,
+    attention=AttentionKind.FULL,
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.with_overrides(
+        dtype="float32",
+        name="granite-moe-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=515,        # deliberately non-multiple: exercises vocab pad
+        num_experts=4,
+        top_k=2,
+        moe_capacity_factor=4.0,
+        expert_pad_to=1,
+    )

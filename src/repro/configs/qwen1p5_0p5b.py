@@ -1,0 +1,34 @@
+"""qwen1.5-0.5b — dense decoder with QKV bias and very large vocab.
+
+[hf:Qwen/Qwen1.5-0.5B] 24 layers, d_model=1024, 16 heads (kv=16, MHA),
+d_ff=2816, vocab=151936.
+"""
+from repro.configs.base import ArchConfig, ArchFamily, AttentionKind
+
+CONFIG = ArchConfig(
+    name="qwen1.5-0.5b",
+    family=ArchFamily.DENSE,
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=2816,
+    vocab_size=151936,
+    qkv_bias=True,
+    attention=AttentionKind.FULL,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen1.5-0.5B",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.with_overrides(
+        dtype="float32",
+        name="qwen1.5-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+    )

@@ -1,0 +1,41 @@
+"""qwen2-vl-2b — VLM decoder with M-RoPE (multimodal rotary) + dynamic res.
+
+[arXiv:2409.12191] LM backbone only: 28 layers, d_model=1536, 12 heads /
+2 kv heads, d_ff=8960, vocab=151936.  The ViT vision encoder + projector is a
+STUB per the assignment carve-out — ``input_specs()`` provides precomputed
+patch embeddings; M-RoPE position ids carry (t, h, w) channels.
+"""
+from repro.configs.base import ArchConfig, ArchFamily, AttentionKind
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family=ArchFamily.VLM,
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    attention=AttentionKind.FULL,
+    mrope_sections=(16, 24, 24),   # (t, h, w) rotary sections, sums to head_dim/2
+    frontend_tokens=256,           # stubbed vision patch embeddings per sample
+    tie_embeddings=True,
+    source="arXiv:2409.12191",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.with_overrides(
+        dtype="float32",
+        name="qwen2-vl-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        mrope_sections=(8, 12, 12),
+        frontend_tokens=16,
+    )

@@ -1,0 +1,41 @@
+"""seamless-m4t-large-v2 — encoder-decoder multimodal (audio) transformer.
+
+[arXiv:2308.11596] Backbone only: 24 encoder + 24 decoder layers,
+d_model=1024, 16 heads (kv=16), d_ff=8192, vocab=256206 (padded to 256256).
+The mel-spectrogram + conv feature extractor frontend is a STUB per the
+assignment carve-out — ``input_specs()`` provides precomputed frame
+embeddings for the encoder.
+"""
+from repro.configs.base import ArchConfig, ArchFamily, AttentionKind
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family=ArchFamily.AUDIO,
+    num_layers=24,                 # decoder layers (split unit for FedPairing)
+    num_encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    attention=AttentionKind.FULL,
+    encoder_seq_len=4096,          # pre-encoded source frames for decode shapes
+    frontend_tokens=4096,          # stubbed conv-frontend frame embeddings
+    source="arXiv:2308.11596",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.with_overrides(
+        dtype="float32",
+        name="seamless-smoke",
+        num_layers=2,
+        num_encoder_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        encoder_seq_len=32,
+        frontend_tokens=32,
+    )

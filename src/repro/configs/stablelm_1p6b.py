@@ -1,0 +1,32 @@
+"""stablelm-1.6b — dense decoder, MHA, large-ish vocab.
+
+[hf:stabilityai/stablelm-2-1_6b] 24 layers, d_model=2048, 32 heads (kv=32),
+d_ff=5632, vocab=100352.
+"""
+from repro.configs.base import ArchConfig, ArchFamily, AttentionKind
+
+CONFIG = ArchConfig(
+    name="stablelm-1.6b",
+    family=ArchFamily.DENSE,
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=5632,
+    vocab_size=100352,
+    attention=AttentionKind.FULL,
+    source="hf:stabilityai/stablelm-2-1_6b",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.with_overrides(
+        dtype="float32",
+        name="stablelm-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+    )

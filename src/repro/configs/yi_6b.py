@@ -1,0 +1,33 @@
+"""yi-6b — llama-architecture dense decoder with aggressive GQA (kv=4).
+
+[arXiv:2403.04652] 32 layers, d_model=4096, 32 query heads / 4 kv heads,
+d_ff=11008, vocab=64000.
+"""
+from repro.configs.base import ArchConfig, ArchFamily, AttentionKind
+
+CONFIG = ArchConfig(
+    name="yi-6b",
+    family=ArchFamily.DENSE,
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    attention=AttentionKind.FULL,
+    rope_theta=5_000_000.0,
+    source="arXiv:2403.04652",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.with_overrides(
+        dtype="float32",
+        name="yi-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+    )

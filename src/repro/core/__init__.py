@@ -1,0 +1,14 @@
+"""FedPairing core: pairing, splitting, split-FL training, latency model."""
+from repro.core.fedpair import FedPairingConfig, make_fed_step, replicate  # noqa: F401
+from repro.core.pairing import (  # noqa: F401
+    compute_pairing,
+    edge_weights,
+    fedpairing_pairing,
+    greedy_pairing,
+    location_pairing,
+    optimal_pairing,
+    partner_permutation,
+    random_pairing,
+    validate_matching,
+)
+from repro.core.splitting import propagation_lengths, split_plan  # noqa: F401

@@ -1,0 +1,36 @@
+"""Server-side model aggregation.
+
+Two modes (see DESIGN.md §3 — the paper is internally inconsistent):
+* ``paper``  — Algorithm 2 verbatim: gradients were pre-weighted by a_i
+               during local training, server takes the plain mean
+               ``ω_g = (1/N) Σ ω_i``.
+* ``fedavg`` — classic McMahan weighting at the server:
+               ``ω_g = Σ a_i ω_i`` (local updates unweighted).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def aggregate(client_params: Dict, agg_w: jnp.ndarray,
+              mode: str = "paper") -> Dict:
+    """client_params stacked (N, ...) -> global params."""
+    if mode == "paper":
+        return jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0),
+                                      client_params)
+    if mode == "fedavg":
+        w = agg_w / jnp.sum(agg_w)
+
+        def wmean(a):
+            return jnp.tensordot(w.astype(a.dtype), a, axes=(0, 0))
+
+        return jax.tree_util.tree_map(wmean, client_params)
+    raise ValueError(f"unknown aggregation mode {mode!r}")
+
+
+def broadcast(global_params: Dict, n: int) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), global_params)

@@ -1,0 +1,135 @@
+"""Training-semantics baselines the paper compares against (Figs. 2-3):
+
+* vanilla FL  (McMahan et al.)   — local full-model SGD + FedAvg.
+* vanilla SL  (Gupta & Raskar)   — one shared model, clients processed
+                                   sequentially through a server-held top.
+* SplitFed    (Thapa et al.)     — client bottoms in parallel + one shared
+                                   server top updated with averaged grads;
+                                   bottoms FedAvg'd each round.
+
+All three reuse the FedPairing machinery: SL/SplitFed are "pair every
+client with the server" (mix client bottom with server top at a fixed cut).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, splitting
+from repro.core.fedpair import LossFn
+
+
+# ---------------------------------------------------------------------------
+# vanilla FL
+# ---------------------------------------------------------------------------
+
+def make_fl_step(loss_fn: LossFn, lr: float):
+    """Per-batch local SGD, vmapped over clients."""
+
+    def local(params, batch):
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        new = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+        return new, loss
+
+    @jax.jit
+    def step(client_params, batches):
+        new, losses = jax.vmap(local)(client_params, batches)
+        return new, losses
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# vanilla SL (sequential) and SplitFed (parallel)
+# ---------------------------------------------------------------------------
+
+def _server_mix_flow(loss_fn: LossFn, plan: Dict, num_layers: int, cut: int):
+    """Flow through client bottom (< cut) + server top (>= cut)."""
+    mask = splitting.layer_mask(jnp.asarray(cut), num_layers)
+
+    def flow(client_p, server_p, batch):
+        mix = splitting.mix_params(client_p, server_p, plan, mask)
+        loss, g_mix = jax.value_and_grad(loss_fn)(mix, batch)
+        g_client, g_server = splitting.route_gradients(g_mix, plan, mask)
+        return loss, g_client, g_server
+
+    return flow
+
+
+def make_sl_step(loss_fn: LossFn, plan: Dict, num_layers: int, cut: int,
+                 lr: float):
+    """Vanilla SL: ONE client trains against the server top per call."""
+    flow = _server_mix_flow(loss_fn, plan, num_layers, cut)
+
+    @jax.jit
+    def step(client_p, server_p, batch):
+        loss, g_c, g_s = flow(client_p, server_p, batch)
+        client_p = jax.tree_util.tree_map(lambda p, g: p - lr * g,
+                                          client_p, g_c)
+        server_p = jax.tree_util.tree_map(lambda p, g: p - lr * g,
+                                          server_p, g_s)
+        return client_p, server_p, loss
+
+    return step
+
+
+def make_splitfed_step(loss_fn: LossFn, plan: Dict, num_layers: int, cut: int,
+                       lr: float):
+    """SplitFed: all clients in parallel; server grads averaged per batch."""
+    flow = _server_mix_flow(loss_fn, plan, num_layers, cut)
+
+    @jax.jit
+    def step(client_params, server_p, batches):
+        losses, g_c, g_s = jax.vmap(flow, in_axes=(0, None, 0))(
+            client_params, server_p, batches)
+        g_s_mean = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), g_s)
+        client_params = jax.tree_util.tree_map(lambda p, g: p - lr * g,
+                                               client_params, g_c)
+        server_p = jax.tree_util.tree_map(lambda p, g: p - lr * g,
+                                          server_p, g_s_mean)
+        return client_params, server_p, losses
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# full-round drivers (used by benchmarks / examples)
+# ---------------------------------------------------------------------------
+
+def fl_round(step, client_params, batch_iter, num_batches: int):
+    losses = []
+    for _ in range(num_batches):
+        client_params, l = step(client_params, next(batch_iter))
+        losses.append(l)
+    return client_params, jnp.stack(losses)
+
+
+def sl_round(step, global_params, per_client_batches, n_clients: int):
+    """Sequential: model (client copy + server top) passes client to client."""
+    client_p = global_params
+    server_p = global_params
+    losses = []
+    for i in range(n_clients):
+        for batch in per_client_batches(i):
+            client_p, server_p, l = step(client_p, server_p, batch)
+            losses.append(l)
+    return client_p, server_p, jnp.stack(losses)
+
+
+def splitfed_round(step, client_params, server_p, batch_iter,
+                   num_batches: int, agg_w: jnp.ndarray):
+    losses = []
+    for _ in range(num_batches):
+        client_params, server_p, l = step(client_params, server_p,
+                                          next(batch_iter))
+        losses.append(l)
+    # round end: FedAvg the client bottoms
+    global_bottom = aggregation.aggregate(client_params, agg_w, "fedavg")
+    n = agg_w.shape[0]
+    client_params = aggregation.broadcast(global_bottom, n)
+    return client_params, server_p, jnp.stack(losses)

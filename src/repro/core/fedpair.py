@@ -1,0 +1,148 @@
+"""FedPairing training core (paper §II) — functional, vmapped over clients.
+
+Semantics (pair (i, j), propagation lengths L_i + L_j = W):
+
+* flow_i (client i's data): blocks [0,L_i) + embedding from ω^i, blocks
+  [L_i,W) + head from ω^j.  Implemented as a differentiable parameter *mix*
+  (``core.splitting.mix_params``) — autodiff through the mix routes each
+  flow's gradient to the correct owner, which reproduces the paper's
+  split-learning gradient hand-back exactly (the boundary-gradient transfer
+  is the transpose of the mix/select).
+* updates (Eq. 1/2):  ω^i -= η·factor·(a_i·g^i_own + a_j·g^j_incoming),
+  where g^j_incoming is the part of partner j's flow gradient that lives on
+  ω^i's blocks [L_j, W) — obtained by indexing the vmapped gradient output
+  with the pairing involution.
+* overlap (Eq. 7): blocks crossed by both flows get factor 2.
+
+Self-paired clients (odd N) degenerate to plain local SGD automatically:
+partner == self makes the mix the identity and both gradient terms the
+client's own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import splitting
+
+LossFn = Callable[[Dict, Dict], jnp.ndarray]   # (params, batch) -> scalar
+
+
+def pair_weights(data_sizes: np.ndarray, partner: np.ndarray) -> np.ndarray:
+    """Per-client aggregation weight a_i, normalized WITHIN each pair:
+    a_i = |D_i| / (|D_i| + |D_p(i)|).
+
+    The paper writes a_i = |D_i| / sum_j |D_j| (global), but applying the
+    global weight inside the local update (Eq. 1) scales every step by
+    ~1/N and then the server's plain mean discounts again — under that
+    literal reading FedPairing converges N times slower than FedAvg,
+    contradicting the paper's own Figs. 2-3.  Pair-normalization keeps the
+    two gradient sources on each model summing to one full-magnitude step
+    (each model 'indirectly trains with a larger dataset', §I), which
+    reproduces the paper's convergence advantage.  See DESIGN.md §3.
+    """
+    d = np.asarray(data_sizes, np.float64)
+    return (d / (d + d[partner])).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedPairingConfig:
+    lr: float = 0.1
+    overlap_boost: bool = True          # Eq. (7) doubled step on overlaps
+    aggregation: str = "paper"          # "paper": pre-weighted grads + mean
+                                        # "fedavg": plain grads + weighted mean
+    momentum: float = 0.0
+
+
+def replicate(params: Dict, n: int) -> Dict:
+    """Broadcast a global model to N client replicas (leading client axis)."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), params)
+
+
+def _apply_factor(update: Dict, plan: Dict, factor: jnp.ndarray) -> Dict:
+    """Multiply stacked-block leaves by the per-block overlap factor."""
+
+    def f(g, label):
+        if label != "stack":
+            return g
+        return g * factor.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
+
+    return jax.tree_util.tree_map(f, update, plan)
+
+
+def make_fed_step(loss_fn: LossFn, plan: Dict, num_layers: int,
+                  fed_cfg: FedPairingConfig):
+    """Build the jitted per-batch FedPairing step.
+
+    Returns ``step(client_params, batches, partner, lengths, agg_w)`` where
+    * client_params — pytree stacked over N clients,
+    * batches       — pytree stacked over N clients (one mini-batch each),
+    * partner       — (N,) int32 pairing involution,
+    * lengths       — (N,) int32 propagation lengths L_i,
+    * agg_w         — (N,) float aggregation weights a_i.
+    """
+
+    def flow(own, partner_p, batch, mask):
+        mix = splitting.mix_params(own, partner_p, plan, mask)
+        loss, g_mix = jax.value_and_grad(loss_fn)(mix, batch)
+        g_own, g_out = splitting.route_gradients(g_mix, plan, mask)
+        return loss, g_own, g_out
+
+    @jax.jit
+    def step(client_params, batches, partner, lengths, agg_w):
+        n = partner.shape[0]
+        masks = jax.vmap(splitting.layer_mask, in_axes=(0, None))(
+            lengths, num_layers)                                 # (N, W)
+        partner_params = jax.tree_util.tree_map(
+            lambda a: a[partner], client_params)
+        losses, g_own, g_out = jax.vmap(flow)(client_params, partner_params,
+                                              batches, masks)
+        # route each flow's outgoing gradient to its partner (involution)
+        g_in = jax.tree_util.tree_map(lambda g: g[partner], g_out)
+
+        if fed_cfg.aggregation == "paper":
+            a_own, a_in = agg_w, agg_w[partner]
+        else:  # weighting deferred to the server aggregation
+            a_own = a_in = jnp.ones_like(agg_w)
+
+        def combine(go, gi):
+            bshape = (n,) + (1,) * (go.ndim - 1)
+            return (a_own.reshape(bshape) * go + a_in.reshape(bshape) * gi)
+
+        update = jax.tree_util.tree_map(combine, g_own, g_in)
+        factor = jax.vmap(splitting.overlap_factor, in_axes=(0, 0, None))(
+            masks, masks[partner], fed_cfg.overlap_boost)        # (N, W)
+
+        def apply(p, u, label):
+            if label == "stack":
+                f = factor.astype(u.dtype).reshape(
+                    (n, -1) + (1,) * (u.ndim - 2))
+                u = u * f
+            return p - fed_cfg.lr * u
+
+        vplan = jax.tree_util.tree_map(lambda l: l, plan)
+        new_params = jax.tree_util.tree_map(apply, client_params, update, vplan)
+        return new_params, {"loss": losses}
+
+    return step
+
+
+def run_round(step, client_params, batch_iter, partner: np.ndarray,
+              lengths: np.ndarray, agg_w: np.ndarray, num_batches: int
+              ) -> Tuple[Dict, jnp.ndarray]:
+    """One communication round: ``num_batches`` local split-steps."""
+    partner = jnp.asarray(partner, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    agg_w = jnp.asarray(agg_w, jnp.float32)
+    losses = []
+    for _ in range(num_batches):
+        batches = next(batch_iter)
+        client_params, m = step(client_params, batches, partner, lengths, agg_w)
+        losses.append(m["loss"])
+    return client_params, jnp.stack(losses)

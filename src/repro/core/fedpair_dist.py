@@ -1,0 +1,215 @@
+"""Distributed FedPairing — shard_map + ppermute over the mesh data axis.
+
+This is the TPU-native execution of the paper's protocol (DESIGN.md §3):
+
+* each client lives at one position of the (pod x) data axis and holds its
+  own model replica (params have a leading client axis sharded over
+  ("pod","data")),
+* phase A: every client embeds its own mini-batch and runs its *bottom*
+  blocks (per-layer gates; gated-off blocks are identity),
+* the boundary feature map x̄ and the labels hop to the partner via
+  ``jax.lax.ppermute`` with the pairing involution — the paper's
+  client-to-client OFDM transfer, become an ICI collective-permute,
+* phase B: every client runs its *top* blocks + head on the received
+  activation and computes the partner-flow loss (weighted a_p),
+* backward: nothing extra — ``ppermute``'s autodiff transpose is the
+  inverse permutation, which IS the paper's boundary-gradient hand-back.
+
+Tensor parallelism stays with GSPMD: the shard_map is entered with
+``axis_names`` = client axes only and ``auto`` = the model axis.
+
+Supported families: dense / MoE / SSM (token-LM block stacks).  Hybrid,
+VLM and enc-dec run under the vmapped functional core (fedpair.py), which
+is semantically identical — see DESIGN.md §4.
+
+Homogeneous-mesh specialization (beyond-paper, §Perf): on an all-equal
+fleet the split rule degenerates to L_i = W/2 for every pair, the gates
+become static, and each phase can scan only half the stack —
+``static_half_split=True`` halves the compute term of the fed step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ArchFamily
+from repro.models import common, rwkv6, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class FedDistConfig:
+    lr: float = 0.1
+    overlap_boost: bool = True
+    static_half_split: bool = False   # homogeneous-mesh fast path
+    client_axes: Tuple[str, ...] = ("data",)
+    unroll: int = 1                   # dry-run cost analysis needs full unroll
+    ce_chunk: int = 0                 # >0: chunked head+CE (memory term)
+
+
+def _stack_gated(params_blocks, x, cos, sin, cfg: ArchConfig,
+                 gates: jnp.ndarray, n_layers: int, unroll=1):
+    if cfg.family == ArchFamily.SSM:
+        def body(xc, scanned):
+            p_l, g = scanned
+            return rwkv6.rwkv_block_apply(p_l, xc, cfg, g.astype(xc.dtype)), None
+
+        x, _ = jax.lax.scan(body, x, (params_blocks, gates), unroll=unroll)
+        return x, jnp.zeros((), jnp.float32)
+    return transformer.stack_apply(params_blocks, x, cos, sin, cfg,
+                                   gates=gates, n_layers=n_layers,
+                                   unroll=unroll)
+
+
+def _ce(logits: jnp.ndarray, labels: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    if vocab < logits.shape[-1]:
+        pad = jnp.full(logits.shape[:-1] + (logits.shape[-1] - vocab,), -1e30,
+                       logits.dtype)
+        logits = jnp.concatenate([logits[..., :vocab], pad], axis=-1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _ce_chunked(params, h: jnp.ndarray, labels: jnp.ndarray,
+                cfg: ArchConfig, chunk: int) -> jnp.ndarray:
+    """Head + CE over sequence chunks; never materializes (B,S,V) fp32."""
+    B, S, D = h.shape
+    C = chunk
+    while S % C:
+        C -= 1
+    nc = S // C
+    h_c = h.reshape(B, nc, C, D).transpose(1, 0, 2, 3)
+    l_c = labels.reshape(B, nc, C).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hc, lc = xs
+        logits = transformer.lm_logits(params, hc, cfg)
+        return acc + _ce(logits, lc, cfg.vocab_size), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h_c, l_c))
+    return tot / nc
+
+
+def make_dist_fed_step(cfg: ArchConfig, mesh, perm_pairs: Sequence[Tuple[int, int]],
+                       agg_w: np.ndarray, masks_bottom: np.ndarray,
+                       dist_cfg: FedDistConfig):
+    """Build the jitted distributed FedPairing SGD step.
+
+    ``perm_pairs``  — [(src, dst), ...] covering every client position (the
+                       pairing involution as a ppermute permutation).
+    ``masks_bottom``— (N, W) float bottom masks per client (L_i rule).
+    ``agg_w``       — (N,) aggregation weights.
+    Returns ``step(client_params, batch)`` with client-axis-stacked inputs.
+    """
+    axes = dist_cfg.client_axes
+    n_clients = len(agg_w)
+    W = cfg.num_layers
+    half = W // 2
+
+    masks_bottom_j = jnp.asarray(masks_bottom, jnp.float32)
+    agg_w_j = jnp.asarray(agg_w, jnp.float32)
+
+    def flow_loss(own_slice, batch_slice, mask_own, mask_perm, a_perm):
+        """Runs on one client's shard; returns this device's share of loss."""
+        own = jax.tree_util.tree_map(lambda a: a[0], own_slice)
+        tokens = batch_slice["tokens"][0]
+        labels = batch_slice["labels"][0]
+        mask_own = mask_own[0]
+        mask_perm = mask_perm[0]
+        a_perm = a_perm[0]
+
+        x = transformer.embed(own, tokens, cfg)
+        S = tokens.shape[1]
+        pos = jnp.arange(S)[None, :]
+        cos, sin = common.rope_cos_sin(pos, max(cfg.resolved_head_dim, 2),
+                                       cfg.rope_theta)
+
+        if dist_cfg.static_half_split:
+            # homogeneous fleet: static L=W/2 -> scan only the needed halves
+            bottom = jax.tree_util.tree_map(lambda a: a[:half], own["blocks"])
+            top = jax.tree_util.tree_map(lambda a: a[half:], own["blocks"])
+            h_bot, aux_b = _stack_gated(bottom, x, cos, sin, cfg,
+                                        jnp.ones((half,)), half,
+                                        unroll=dist_cfg.unroll)
+        else:
+            h_bot, aux_b = _stack_gated(own["blocks"], x, cos, sin, cfg,
+                                        mask_own, W, unroll=dist_cfg.unroll)
+
+        # ---- the paper's x̄ / label handoff: one collective-permute ----
+        h_in = jax.lax.ppermute(h_bot, axes, perm_pairs)
+        labels_in = jax.lax.ppermute(labels, axes, perm_pairs)
+
+        if dist_cfg.static_half_split:
+            h_top, aux_t = _stack_gated(top, h_in, cos, sin, cfg,
+                                        jnp.ones((W - half,)), W - half,
+                                        unroll=dist_cfg.unroll)
+        else:
+            h_top, aux_t = _stack_gated(own["blocks"], h_in, cos, sin, cfg,
+                                        1.0 - mask_perm, W,
+                                        unroll=dist_cfg.unroll)
+
+        if dist_cfg.ce_chunk:
+            loss = _ce_chunked(own, h_top, labels_in, cfg, dist_cfg.ce_chunk)
+        else:
+            logits = transformer.lm_logits(own, h_top, cfg)
+            loss = _ce(logits, labels_in, cfg.vocab_size)
+        loss = loss + cfg.router_aux_coef * (aux_b + aux_t)
+        # pre-weighted by the data owner's aggregation weight (paper mode)
+        return (a_perm * loss / n_clients)[None]
+
+    client_spec = P(axes)
+
+    def total_loss(client_params, batch, masks_b, masks_perm, a_perm):
+        shard_fn = jax.shard_map(
+            flow_loss, mesh=mesh,
+            in_specs=(jax.tree_util.tree_map(lambda _: client_spec,
+                                             client_params),
+                      jax.tree_util.tree_map(lambda _: client_spec, batch),
+                      client_spec, client_spec, client_spec),
+            out_specs=client_spec,
+            check_vma=False,
+            axis_names=set(axes),
+        )
+        per_client = shard_fn(client_params, batch, masks_b, masks_perm,
+                              a_perm)
+        return jnp.sum(per_client)
+
+    # permuted views (who sends to me == my partner, involution)
+    inv = np.arange(n_clients)
+    for s, d in perm_pairs:
+        inv[d] = s
+    masks_perm = masks_bottom_j[inv]
+    a_perm = agg_w_j[inv]
+    factor = 1.0 + (masks_bottom_j * (1.0 - masks_perm)
+                    if dist_cfg.overlap_boost else 0.0)        # (N, W)
+
+    @jax.jit
+    def step(client_params, batch):
+        loss, grads = jax.value_and_grad(total_loss)(
+            client_params, batch, masks_bottom_j, masks_perm, a_perm)
+
+        def apply(path, p, g):
+            name = str(path[0].key) if path else ""
+            if name in ("blocks",) and g.ndim >= 2 and g.shape[1] == W:
+                f = factor.astype(g.dtype).reshape(
+                    (n_clients, W) + (1,) * (g.ndim - 2))
+                g = g * f
+            return p - dist_cfg.lr * g
+
+        new_params = jax.tree_util.tree_map_with_path(apply, client_params,
+                                                      grads)
+        return new_params, loss
+
+    return step
+
+
+def pairs_to_ppermute(partner: np.ndarray) -> Sequence[Tuple[int, int]]:
+    """Pairing involution -> ppermute (src, dst) list (covers all slots)."""
+    return [(int(i), int(partner[i])) for i in range(len(partner))]

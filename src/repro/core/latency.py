@@ -1,0 +1,241 @@
+"""Latency model — paper §II (Eq. 3) and Problem 1.
+
+Implements the OFDM link-rate model between clients, the per-pair
+computing/communication latency terms, and round-time simulation for
+FedPairing and the three baselines (vanilla FL, vanilla SL, SplitFed).
+These drive the pairing edge weights (core.pairing) and the Table I/II
+benchmarks.
+
+All quantities are scalars/np arrays — this is an analytical model, not a
+traced computation (pairing happens on the host before each round).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """Eq. (3): r_ij = B log2(1 + P h_ij / sigma^2), pathloss channel gain."""
+
+    bandwidth_hz: float = 64e6          # B  (paper: 64 MHz)
+    tx_power_w: float = 1.0             # P  (paper: 1 W)
+    noise_w: float = 1e-9               # sigma^2 (paper: 1e-9 W)
+    ref_gain: float = 1e-3              # h0 at unit distance (assumed; not in paper)
+    ref_dist_m: float = 1.0             # zeta_0
+    pathloss_exp: float = 3.0           # theta (assumed; typical urban 2.7-3.5)
+
+    def gain(self, dist_m: np.ndarray) -> np.ndarray:
+        d = np.maximum(np.asarray(dist_m, np.float64), self.ref_dist_m)
+        return self.ref_gain * (self.ref_dist_m / d) ** self.pathloss_exp
+
+    def rate_bps(self, dist_m: np.ndarray) -> np.ndarray:
+        snr = self.tx_power_w * self.gain(dist_m) / self.noise_w
+        return self.bandwidth_hz * np.log2(1.0 + snr)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientFleet:
+    """N heterogeneous clients: positions (m), CPU freqs (Hz), dataset sizes."""
+
+    positions: np.ndarray       # (N, 2)
+    cpu_hz: np.ndarray          # (N,)
+    data_sizes: np.ndarray      # (N,)
+
+    @property
+    def n(self) -> int:
+        return len(self.cpu_hz)
+
+    def distances(self) -> np.ndarray:
+        d = self.positions[:, None, :] - self.positions[None, :, :]
+        return np.linalg.norm(d, axis=-1)
+
+    def rates(self, chan: ChannelModel) -> np.ndarray:
+        r = chan.rate_bps(self.distances())
+        np.fill_diagonal(r, np.inf)  # self-transfer is free
+        return r
+
+
+def make_fleet(n: int = 20, radius_m: float = 50.0, f_min: float = 0.1e9,
+               f_max: float = 2.0e9, data_size: int = 2500,
+               seed: int = 0) -> ClientFleet:
+    """Paper §IV-A setup: 20 clients uniform in a 50 m disc, f ~ U[0.1, 2] GHz."""
+    rng = np.random.default_rng(seed)
+    rho = radius_m * np.sqrt(rng.uniform(size=n))
+    phi = rng.uniform(0, 2 * np.pi, size=n)
+    pos = np.stack([rho * np.cos(phi), rho * np.sin(phi)], axis=1)
+    return ClientFleet(
+        positions=pos,
+        cpu_hz=rng.uniform(f_min, f_max, size=n),
+        data_sizes=np.full(n, data_size, np.int64),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadModel:
+    """Model-dependent constants for latency accounting.
+
+    Calibrated to the paper's §IV setup (ResNet18 / CIFAR10, 2500 samples
+    per client, 2 local epochs, batch 32): ``cycles_per_layer`` is F in the
+    paper (CPU cycles to fwd+bwd+update one layer for one *mini-batch*);
+    with F=2e8 and f ~ U[0.1, 2] GHz, vanilla-FL rounds land in the paper's
+    ~8700 s regime and FedPairing in the ~1500 s regime (Table II).
+    ``feature_bytes``/``grad_bytes`` are PER-SAMPLE boundary tensors
+    (ResNet18 mid-network: 128ch x 16 x 16 x fp32 = 131 KB) — Problem 1
+    weights the transfer term by dataset size |D_i|, so comm scales with
+    samples, which is what makes the rate term of Eq. (5) matter.
+    """
+
+    num_layers: int                     # W
+    cycles_per_layer: float = 2e8       # F (per layer per mini-batch)
+    feature_bytes: float = 128 * 16 * 16 * 4   # per sample, one direction
+    grad_bytes: float = 128 * 16 * 16 * 4      # per sample, one direction
+    model_bytes: float = 4 * 11e6       # full model upload (ResNet18-ish)
+    batch_size: int = 32
+    batches_per_epoch: int = 78         # 2500 samples / batch 32
+    local_epochs: int = 2               # paper: 2 epochs / round
+
+
+def split_lengths(f_i: float, f_j: float, num_layers: int) -> Tuple[int, int]:
+    """Paper: L_i = floor(f_i/(f_i+f_j) * W), L_j = W - L_i; L_i >= 1 kept."""
+    li = int(np.floor(f_i / (f_i + f_j) * num_layers))
+    li = min(max(li, 1), num_layers - 1)
+    return li, num_layers - li
+
+
+def pair_round_time(f_i: float, f_j: float, rate_bps: float,
+                    w: WorkloadModel, d_i: float = 1.0, d_j: float = 1.0
+                    ) -> float:
+    """Wall time for one pair to finish a communication round.
+
+    Per batch, both flows run in parallel; phases are balanced by the split
+    rule, so compute per batch ~ 2 passes over each client's assigned part:
+      fwd+bwd on own bottom (L_i F / f_i)  +  fwd+bwd on partner top (same
+      length by assignment) — the slower side bounds each phase.
+    Communication per batch: feature maps + boundary gradients both ways
+    (dataset-size weighted, Problem 1's max{...} term).
+    """
+    li, lj = split_lengths(f_i, f_j, w.num_layers)
+    # per-phase compute: both clients work in parallel -> max of the two
+    phase = max(li * w.cycles_per_layer / f_i, lj * w.cycles_per_layer / f_j)
+    compute = 2.0 * 2.0 * phase           # 2 phases (bottom+top) x fwd+bwd
+    # per-batch transfer: feature maps one way + boundary grads back, for
+    # batch_size samples, weighted by relative dataset sizes (Problem 1)
+    comm = w.batch_size * max(
+        d_i * w.feature_bytes + d_j * w.grad_bytes,
+        d_j * w.feature_bytes + d_i * w.grad_bytes) / rate_bps
+    per_batch = compute + comm
+    return per_batch * w.batches_per_epoch * w.local_epochs
+
+
+def objective_value(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
+                    chan: ChannelModel, w: WorkloadModel, alpha: float = 1.0,
+                    beta: float = 1.0) -> float:
+    """Paper Problem 1 objective (Eq. 4) for a given pairing."""
+    rates = fleet.rates(chan)
+    rel = fleet.data_sizes / fleet.data_sizes.sum()
+    total = 0.0
+    for i, j in pairs:
+        li, lj = split_lengths(fleet.cpu_hz[i], fleet.cpu_hz[j], w.num_layers)
+        total += alpha * (li * w.cycles_per_layer / fleet.cpu_hz[i]
+                          + lj * w.cycles_per_layer / fleet.cpu_hz[j])
+        comm = max(rel[i] * w.feature_bytes + rel[j] * w.grad_bytes,
+                   rel[j] * w.feature_bytes + rel[i] * w.grad_bytes)
+        total += beta * comm / rates[i, j]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# round-time simulation (Tables I & II)
+# ---------------------------------------------------------------------------
+
+def round_time_fedpairing(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
+                          chan: ChannelModel, w: WorkloadModel,
+                          server_rate_bps: Optional[np.ndarray] = None
+                          ) -> float:
+    """Round = slowest pair (parallel pairs) + model uploads."""
+    rates = fleet.rates(chan)
+    per_pair = [
+        pair_round_time(fleet.cpu_hz[i], fleet.cpu_hz[j], rates[i, j], w)
+        for i, j in pairs
+    ]
+    upload = _upload_time(fleet, chan, w, server_rate_bps)
+    return max(per_pair) + upload
+
+
+def round_time_vanilla_fl(fleet: ClientFleet, chan: ChannelModel,
+                          w: WorkloadModel,
+                          server_rate_bps: Optional[np.ndarray] = None
+                          ) -> float:
+    """Every client trains all W layers locally; straggler bounds the round."""
+    per_client = (w.num_layers * w.cycles_per_layer / fleet.cpu_hz
+                  * 2.0 * w.batches_per_epoch * w.local_epochs)
+    return float(np.max(per_client)) + _upload_time(fleet, chan, w,
+                                                    server_rate_bps)
+
+
+def round_time_vanilla_sl(fleet: ClientFleet, chan: ChannelModel,
+                          w: WorkloadModel, client_layers: int = 1,
+                          server_hz: float = 50e9, sequential: bool = False,
+                          server_rate_bps: Optional[np.ndarray] = None
+                          ) -> float:
+    """Vanilla split learning: clients hold the (cheap, shallow)
+    ``client_layers`` stem; the high-compute server runs the rest.
+
+    Calibration note (DESIGN.md §6): the paper's Table II shows vanilla SL
+    at 106 s — far below any sequential-relay model with comparable
+    per-layer costs, so we model the *pipelined* time variant by default:
+    client streams overlap each other and the server, so the round is
+    bounded by max(slowest client stream, total server work).
+    ``sequential=True`` gives the classic relay, which is also what the
+    convergence baseline simulates (its order-sensitivity is what breaks
+    SL under Non-IID).
+    """
+    rates = _server_rates(fleet, chan, server_rate_bps)
+    comp_c = client_layers * w.cycles_per_layer / fleet.cpu_hz * 2
+    comp_s = (w.num_layers - client_layers) * w.cycles_per_layer / server_hz * 2
+    comm = w.batch_size * (w.feature_bytes + w.grad_bytes) / rates
+    per_client = (comp_c + comp_s + comm) * w.batches_per_epoch * w.local_epochs
+    if sequential:
+        return float(np.sum(per_client))
+    total_server = comp_s * w.batches_per_epoch * w.local_epochs * fleet.n
+    return max(float(np.max(per_client)), total_server)
+
+
+def round_time_splitfed(fleet: ClientFleet, chan: ChannelModel,
+                        w: WorkloadModel, client_layers: int = 3,
+                        server_hz: float = 50e9,
+                        server_rate_bps: Optional[np.ndarray] = None
+                        ) -> float:
+    """SplitFed: clients run bottoms in PARALLEL; the server runs the tops
+    for every client each batch behind a per-batch BARRIER (synchronized
+    fed-server aggregation), so the straggler and the serial server work
+    add per batch — that is what puts SplitFed above FedPairing in Table II
+    despite the server's compute advantage.  SplitFed keeps a deeper
+    client-side subnetwork than vanilla SL (its design goal is reducing
+    server load), hence the larger default ``client_layers``."""
+    rates = _server_rates(fleet, chan, server_rate_bps)
+    per_client = (client_layers * w.cycles_per_layer / fleet.cpu_hz * 2
+                  + w.batch_size * (w.feature_bytes + w.grad_bytes) / rates)
+    server = (w.num_layers - client_layers) * w.cycles_per_layer / server_hz \
+        * 2 * fleet.n
+    per_batch = float(np.max(per_client)) + server
+    return per_batch * w.batches_per_epoch * w.local_epochs \
+        + _upload_time(fleet, chan, w, server_rate_bps)
+
+
+def _server_rates(fleet: ClientFleet, chan: ChannelModel,
+                  server_rate_bps: Optional[np.ndarray]) -> np.ndarray:
+    if server_rate_bps is not None:
+        return server_rate_bps
+    dist = np.linalg.norm(fleet.positions, axis=1)  # server at origin
+    return chan.rate_bps(dist)
+
+
+def _upload_time(fleet: ClientFleet, chan: ChannelModel, w: WorkloadModel,
+                 server_rate_bps: Optional[np.ndarray]) -> float:
+    rates = _server_rates(fleet, chan, server_rate_bps)
+    return float(np.max(w.model_bytes / rates))

@@ -1,0 +1,42 @@
+"""Partial client participation (standard FL: sample a fraction of clients
+per round; the paper's §V future work asks for flexible grouping — this is
+the sampling half; ``pairing`` re-runs on the sampled cohort each round).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import pairing, splitting
+from repro.core.latency import ChannelModel, ClientFleet
+
+
+def sample_cohort(n_clients: int, fraction: float, rng: np.random.Generator
+                  ) -> np.ndarray:
+    """Sorted indices of the participating cohort (at least 2 clients)."""
+    k = max(2, int(round(n_clients * fraction)))
+    return np.sort(rng.choice(n_clients, size=k, replace=False))
+
+
+def cohort_pairing(fleet: ClientFleet, chan: ChannelModel,
+                   cohort: np.ndarray, num_layers: int
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pair within a cohort; non-participants map to themselves with L=W
+    (they simply don't train this round).
+
+    Returns (partner (N,), lengths (N,), active_mask (N,)).
+    """
+    n = fleet.n
+    sub = ClientFleet(positions=fleet.positions[cohort],
+                      cpu_hz=fleet.cpu_hz[cohort],
+                      data_sizes=fleet.data_sizes[cohort])
+    sub_pairs = pairing.fedpairing_pairing(sub, chan)
+    partner = np.arange(n)
+    for a, b in sub_pairs:
+        ga, gb = int(cohort[a]), int(cohort[b])
+        partner[ga], partner[gb] = gb, ga
+    lengths = splitting.propagation_lengths(fleet.cpu_hz, partner, num_layers)
+    active = np.zeros(n, bool)
+    active[cohort] = True
+    return partner, lengths, active

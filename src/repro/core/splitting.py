@@ -1,0 +1,140 @@
+"""Logical model splitting — propagation lengths, layer masks, split plans.
+
+The split unit is a *block index* into the architecture's stacked layer
+axis.  A client with propagation length L owns blocks [0, L) of each flow's
+bottom part.  Parameters that are not per-block (embedding, final norm/head,
+encoder, shared attention block) are labeled so the FedPairing step knows
+which side of the split they live on:
+
+  * ``stack``   — stacked per-block params; the (L-dependent) mask applies.
+  * ``bottom``  — always computed by the data owner (embedding, encoder,
+                  hybrid shared block — see DESIGN.md): privacy-preserving
+                  side, receives gradient from the owner's flow only.
+  * ``top``     — always computed by the partner (final norm, unembed):
+                  receives gradient from the partner's flow only.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ArchFamily
+
+
+def propagation_lengths(f: np.ndarray, partner: np.ndarray,
+                        num_layers: int) -> np.ndarray:
+    """Vectorized paper rule: L_i = floor(f_i/(f_i+f_p(i)) W) for the
+    lower-indexed member of each pair, L_j = W - L_i for its partner
+    (lengths must sum to W), clamped to [1, W-1]; self-paired clients get
+    the full stack (L_i = W)."""
+    idx = np.arange(len(f))
+    fp = f[partner]
+    base = np.floor(f / (f + fp) * num_layers).astype(np.int64)
+    base = np.clip(base, 1, num_layers - 1)
+    li = np.where(idx <= partner, base, num_layers - base[partner])
+    li = np.where(partner == idx, num_layers, li)
+    return li
+
+
+def layer_mask(length: jnp.ndarray, num_layers: int) -> jnp.ndarray:
+    """(W,) float mask: 1.0 for blocks [0, length)."""
+    return (jnp.arange(num_layers) < length).astype(jnp.float32)
+
+
+def overlap_factor(mask_own: jnp.ndarray, mask_partner: jnp.ndarray,
+                   boost: bool = True) -> jnp.ndarray:
+    """Eq. (7): overlapping blocks (crossed by both flows) get step 2*eta.
+
+    On client i a block l is overlapping iff the own flow computes it
+    (l < L_i) AND the partner flow computes it on i (l >= L_p, i.e. the
+    partner's top part) -> both gradient terms are non-zero.
+    """
+    if not boost:
+        return jnp.ones_like(mask_own)
+    both = mask_own * (1.0 - mask_partner)
+    return 1.0 + both
+
+
+# ---------------------------------------------------------------------------
+# split plans
+# ---------------------------------------------------------------------------
+
+def split_plan(cfg: ArchConfig, params: Dict) -> Dict:
+    """Same-structure pytree of labels {'stack','bottom','top'} per leaf."""
+
+    def label_tree(tree, label):
+        return jax.tree_util.tree_map(lambda _: label, tree)
+
+    plan: Dict = {}
+    for key, sub in params.items():
+        if key in ("embed",):
+            plan[key] = label_tree(sub, "bottom")
+        elif key in ("ln_f", "unembed"):
+            plan[key] = label_tree(sub, "top")
+        elif key in ("blocks", "decoder"):
+            plan[key] = label_tree(sub, "stack")
+        elif key == "mamba":
+            plan[key] = label_tree(sub, "stack")
+        elif key in ("shared",):            # hybrid shared attention block
+            plan[key] = label_tree(sub, "bottom")
+        elif key in ("encoder", "enc_ln_f"):  # enc-dec: encoder stays local
+            plan[key] = label_tree(sub, "bottom")
+        else:
+            raise KeyError(f"split_plan: unlabeled param group {key!r} "
+                           f"for {cfg.name}")
+    return plan
+
+
+def mix_params(params_own: Dict, params_partner: Dict, plan: Dict,
+               mask: jnp.ndarray) -> Dict:
+    """Effective flow params: bottom/stack[<L] from own, rest from partner."""
+
+    def pick(own, partner, label):
+        if label == "bottom":
+            return own
+        if label == "top":
+            return partner
+        # stack: select along the leading layer axis
+        m = mask.astype(own.dtype)
+        m = m.reshape((-1,) + (1,) * (own.ndim - 1))
+        return own * m + partner * (1.0 - m)
+
+    return jax.tree_util.tree_map(pick, params_own, params_partner, plan)
+
+
+def route_gradients(grads_mix: Dict, plan: Dict, mask: jnp.ndarray
+                    ) -> Tuple[Dict, Dict]:
+    """Split a flow's gradient into (to_own, to_partner) per the plan."""
+
+    def to_own(g, label):
+        if label == "bottom":
+            return g
+        if label == "top":
+            return jnp.zeros_like(g)
+        m = mask.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
+        return g * m
+
+    def to_partner(g, label):
+        if label == "bottom":
+            return jnp.zeros_like(g)
+        if label == "top":
+            return g
+        m = mask.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
+        return g * (1.0 - m)
+
+    own = jax.tree_util.tree_map(to_own, grads_mix, plan)
+    partner = jax.tree_util.tree_map(to_partner, grads_mix, plan)
+    return own, partner
+
+
+def stack_factor_tree(plan: Dict, factor: jnp.ndarray) -> Dict:
+    """Broadcast the per-block overlap factor over the plan: non-stack
+    leaves get factor 1."""
+
+    def f(label):
+        return factor if label == "stack" else jnp.ones(())
+
+    return jax.tree_util.tree_map(f, plan)

@@ -1,0 +1,8 @@
+"""Data substrate: synthetic corpora, client partitioners, batchers."""
+from repro.data.partition import (  # noqa: F401
+    dirichlet_partition,
+    iid_partition,
+    two_class_partition,
+)
+from repro.data.pipeline import FederatedBatcher, LMBatcher  # noqa: F401
+from repro.data.synthetic import SyntheticImages, SyntheticLM  # noqa: F401

@@ -1,0 +1,63 @@
+"""Client data partitioning: IID, paper-style Non-IID (2 classes per
+client), and Dirichlet non-IID.
+
+Operates on label arrays; returns per-client index lists.  Used both by the
+synthetic image corpus (convergence benchmarks) and the LM corpus.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def iid_partition(labels: np.ndarray, n_clients: int, seed: int = 0
+                  ) -> List[np.ndarray]:
+    """Equal-size shards with (approximately) identical class histograms."""
+    rng = np.random.default_rng(seed)
+    idx_by_class = [np.flatnonzero(labels == c) for c in np.unique(labels)]
+    shards: List[List[int]] = [[] for _ in range(n_clients)]
+    for idx in idx_by_class:
+        idx = rng.permutation(idx)
+        for c, part in enumerate(np.array_split(idx, n_clients)):
+            shards[c].extend(part.tolist())
+    return [rng.permutation(np.asarray(s, np.int64)) for s in shards]
+
+
+def two_class_partition(labels: np.ndarray, n_clients: int, seed: int = 0,
+                        classes_per_client: int = 2) -> List[np.ndarray]:
+    """Paper §IV-A Non-IID: each client draws samples of 2 random classes."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    idx_by_class = {c: rng.permutation(np.flatnonzero(labels == c))
+                    for c in classes}
+    cursor = {c: 0 for c in classes}
+    per_client = len(labels) // n_clients
+    shards = []
+    for _ in range(n_clients):
+        picked = rng.choice(classes, size=classes_per_client, replace=False)
+        take = per_client // classes_per_client
+        part = []
+        for c in picked:
+            pool = idx_by_class[c]
+            start = cursor[c]
+            sel = np.take(pool, np.arange(start, start + take), mode="wrap")
+            cursor[c] = (start + take) % len(pool)
+            part.append(sel)
+        shards.append(rng.permutation(np.concatenate(part)))
+    return shards
+
+
+def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float = 0.5,
+                        seed: int = 0) -> List[np.ndarray]:
+    """Dirichlet(alpha) label-skew partition (standard FL benchmark)."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    shards: List[List[int]] = [[] for _ in range(n_clients)]
+    for c in classes:
+        idx = rng.permutation(np.flatnonzero(labels == c))
+        props = rng.dirichlet(np.full(n_clients, alpha))
+        cuts = (np.cumsum(props)[:-1] * len(idx)).astype(int)
+        for cl, part in enumerate(np.split(idx, cuts)):
+            shards[cl].extend(part.tolist())
+    return [rng.permutation(np.asarray(s, np.int64)) for s in shards]

@@ -1,0 +1,58 @@
+"""Batching pipelines.
+
+``FederatedBatcher`` yields client-stacked batches (N, B, ...) for the
+vmapped FedPairing/FL steps; ``LMBatcher`` yields (tokens, labels) windows
+for LM training.  Pure NumPy + host RNG; deterministic per seed.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Sequence
+
+import numpy as np
+
+
+class FederatedBatcher:
+    """Per-client infinite shuffled mini-batch stream, stacked over clients."""
+
+    def __init__(self, images: np.ndarray, labels: np.ndarray,
+                 shards: Sequence[np.ndarray], batch_size: int, seed: int = 0):
+        self.images, self.labels = images, labels
+        self.shards = [np.asarray(s) for s in shards]
+        self.batch = batch_size
+        self.rngs = [np.random.default_rng(seed + 31 * i)
+                     for i in range(len(shards))]
+
+    def client_batch(self, i: int) -> Dict[str, np.ndarray]:
+        idx = self.rngs[i].choice(self.shards[i], size=self.batch,
+                                  replace=len(self.shards[i]) < self.batch)
+        return {"images": self.images[idx], "labels": self.labels[idx]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        per = [self.client_batch(i) for i in range(len(self.shards))]
+        return {
+            "images": np.stack([b["images"] for b in per]),
+            "labels": np.stack([b["labels"] for b in per]),
+        }
+
+
+class LMBatcher:
+    """Next-token-prediction windows over a token stream."""
+
+    def __init__(self, tokens: np.ndarray, batch_size: int, seq_len: int,
+                 seed: int = 0):
+        self.tokens = tokens
+        self.batch, self.seq = batch_size, seq_len
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        starts = self.rng.integers(0, len(self.tokens) - self.seq - 1,
+                                   size=self.batch)
+        window = np.stack([self.tokens[s:s + self.seq + 1] for s in starts])
+        return {"tokens": window[:, :-1].astype(np.int32),
+                "labels": window[:, 1:].astype(np.int64)}

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (+ pure-jnp oracles + jit-dispatch wrappers).
+
+Layout per kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec
+implementation; ``ref.py`` the pure-jnp oracles; ``ops.py`` the dispatch
+wrappers model code calls.
+"""

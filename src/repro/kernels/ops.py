@@ -1,0 +1,104 @@
+"""Jit-friendly kernel dispatch.
+
+Each op has (up to) three implementations:
+  * ``xla``              — the pure-jnp oracle from ``ref.py`` (default on CPU
+                           and for the SPMD dry-run).
+  * ``pallas``           — the TPU kernel (``pl.pallas_call`` + BlockSpec).
+  * ``pallas_interpret`` — the same kernel body executed in interpret mode
+                           (CPU correctness validation; used by tests).
+
+Selection: explicit ``impl=`` argument > ``set_default_impl()`` > backend
+default (``pallas`` on TPU, ``xla`` elsewhere).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_DEFAULT_IMPL: Optional[str] = None
+_VALID = ("xla", "pallas", "pallas_interpret")
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    global _DEFAULT_IMPL
+    if impl is not None and impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}, got {impl!r}")
+    _DEFAULT_IMPL = impl
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    if impl is not None:
+        return impl
+    if _DEFAULT_IMPL is not None:
+        return _DEFAULT_IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, sliding_window: int = 0,
+                    impl: Optional[str] = None) -> jnp.ndarray:
+    """q (B,S,Hq,d), k/v (B,L,Hkv,d) -> (B,S,Hq,d)."""
+    which = resolve_impl(impl)
+    if which == "xla":
+        return ref.attention_ref(q, k, v, causal=causal,
+                                 sliding_window=sliding_window)
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention(q, k, v, causal=causal,
+                              sliding_window=sliding_window,
+                              interpret=(which == "pallas_interpret"))
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+def ssd(x: jnp.ndarray, log_decay: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+        *, chunk: int = 64, initial_state: Optional[jnp.ndarray] = None,
+        impl: Optional[str] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    which = resolve_impl(impl)
+    if which == "xla":
+        return ref.ssd_chunked_ref(x, log_decay, b, c, chunk=chunk,
+                                   initial_state=initial_state)
+    from repro.kernels import ssd_scan
+    return ssd_scan.ssd(x, log_decay, b, c, chunk=chunk,
+                        initial_state=initial_state,
+                        interpret=(which == "pallas_interpret"))
+
+
+def ssd_decode(state: jnp.ndarray, x: jnp.ndarray, log_decay: jnp.ndarray,
+               b: jnp.ndarray, c: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-step SSD recurrence (pure jnp everywhere — O(1) work)."""
+    return ref.ssd_decode_step(state, x, log_decay, b, c)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, log_w: jnp.ndarray,
+         u: jnp.ndarray, *, chunk: int = 16,
+         initial_state: Optional[jnp.ndarray] = None,
+         impl: Optional[str] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    which = resolve_impl(impl)
+    if which == "xla":
+        return ref.wkv6_chunked_ref(r, k, v, log_w, u, chunk=chunk,
+                                    initial_state=initial_state)
+    from repro.kernels import wkv6 as wkv6_kernel
+    return wkv6_kernel.wkv6(r, k, v, log_w, u, chunk=max(chunk, 64),
+                            initial_state=initial_state,
+                            interpret=(which == "pallas_interpret"))
+
+
+def wkv6_decode(state: jnp.ndarray, r: jnp.ndarray, k: jnp.ndarray,
+                v: jnp.ndarray, log_w: jnp.ndarray, u: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return ref.wkv6_decode_step(state, r, k, v, log_w, u)

@@ -1,0 +1,270 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the *semantics* of the kernels — numerically straightforward, no
+VMEM blocking.  Model code runs these on CPU (and through the dry-run); the
+Pallas kernels in this package are validated against them across
+shape/dtype sweeps in ``tests/test_kernels.py``.
+
+Contents
+--------
+* ``attention_ref``      — causal/sliding GQA flash-attention semantics.
+* ``ssd_chunked_ref``    — Mamba2 SSD (state-space dual) chunked scan.
+* ``ssd_naive``          — sequential SSD recurrence (oracle for the oracle).
+* ``wkv6_chunked_ref``   — RWKV6 WKV recurrence, chunked (per-channel decay).
+* ``wkv6_naive``         — sequential WKV6 recurrence.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, sliding_window: int = 0) -> jnp.ndarray:
+    """q (B,S,Hq,d), k/v (B,L,Hkv,d) -> (B,S,Hq,d).  fp32 softmax."""
+    B, S, Hq, d = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = jnp.einsum("bshgd,blhd->bhgsl", qg, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(L)[None, :]
+    mask = jnp.ones((S, L), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window:
+        mask &= kpos > qpos - sliding_window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgsl,blhd->bshgd", probs, v)
+    return out.reshape(B, S, Hq, d)
+
+
+def fit_chunk(seq_len: int, chunk: int) -> int:
+    """Largest divisor of ``seq_len`` that is <= ``chunk``."""
+    c = min(chunk, seq_len)
+    while seq_len % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x (..., Q) -> (..., Q, Q): out[i,j] = sum_{k=j+1..i} x_k (i>=j), -inf else.
+
+    Built from the inclusive cumsum: out[i,j] = cum[i] - cum[j] for i >= j.
+    """
+    Q = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]   # [..., i, j] = cum_i - cum_j
+    keep = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(keep, diff, -jnp.inf)
+
+
+def ssd_chunked_ref(x: jnp.ndarray, log_decay: jnp.ndarray, b: jnp.ndarray,
+                    c: jnp.ndarray, chunk: int = 64,
+                    initial_state: Optional[jnp.ndarray] = None,
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 SSD: y_t = c_t · S_t,  S_t = exp(log_decay_t) S_{t-1} + b_t x_t^T.
+
+    Shapes: x (B,S,H,P), log_decay (B,S,H) (<=0), b/c (B,S,N) (ngroups=1,
+    shared over heads).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    chunk = fit_chunk(S, chunk)
+    nc, Q = S // chunk, chunk
+
+    xc = x.reshape(B, nc, Q, H, P)
+    bc_ = b.reshape(B, nc, Q, N)
+    cc = c.reshape(B, nc, Q, N)
+    a = log_decay.reshape(B, nc, Q, H).transpose(0, 3, 1, 2)          # (B,H,nc,Q)
+    a_cum = jnp.cumsum(a, axis=-1)                                    # inclusive
+
+    # intra-chunk ("diagonal block") term
+    L = jnp.exp(_segsum(a))                                           # (B,H,nc,Q,Q)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", cc, bc_, L, xc)
+
+    # per-chunk end states (contribution of this chunk's inputs) — fp32 carry
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)                   # (B,H,nc,Q)
+    chunk_states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                              bc_.astype(jnp.float32), decay_states,
+                              xc.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                             # (B,H,nc)
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        states_c, dec_c = inp
+        prev = s
+        s = s * dec_c[..., None, None] + states_c
+        return s, prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 2, 0, 3, 4)                # (B,H,nc,P,N)
+
+    # inter-chunk ("off-diagonal") output term
+    state_decay_out = jnp.exp(a_cum)                                  # (B,H,nc,Q)
+    y_off = jnp.einsum("bcln,bhcpn,bhcl->bclhp", cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_naive(x: jnp.ndarray, log_decay: jnp.ndarray, b: jnp.ndarray,
+              c: jnp.ndarray, initial_state: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential SSD recurrence (slow oracle)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        xt, lt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        s = s * jnp.exp(lt)[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt.astype(jnp.float32), bt.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", s, ct.astype(jnp.float32))
+        return s, y
+
+    final, ys = jax.lax.scan(
+        step, s0,
+        (x.transpose(1, 0, 2, 3), log_decay.transpose(1, 0, 2),
+         b.transpose(1, 0, 2), c.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final.astype(x.dtype)
+
+
+def ssd_decode_step(state: jnp.ndarray, x: jnp.ndarray, log_decay: jnp.ndarray,
+                    b: jnp.ndarray, c: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step.  state (B,H,P,N); x (B,H,P); log_decay (B,H); b/c (B,N)."""
+    state = state * jnp.exp(log_decay.astype(jnp.float32))[..., None, None] + \
+        jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32), b.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+def wkv6_naive(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               log_w: jnp.ndarray, u: jnp.ndarray,
+               initial_state: Optional[jnp.ndarray] = None,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential WKV6.
+
+    Shapes: r/k (B,S,H,N), v (B,S,H,M), log_w (B,S,H,N) (<0, data-dependent
+    decay), u (H,N) bonus.  Recurrence (per head):
+        out_t = r_t @ (diag(u) k_t v_t^T + S_{t-1})
+        S_t   = diag(exp(log_w_t)) S_{t-1} + k_t v_t^T
+    Returns (out (B,S,H,M), final_state (B,H,N,M)).
+    """
+    B, S, H, N = r.shape
+    M = v.shape[-1]
+    s0 = (jnp.zeros((B, H, N, M), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, lwt = (t.astype(jnp.float32) for t in inp)  # (B,H,N)/(B,H,M)
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        bonus = u.astype(jnp.float32)[None, :, :, None] * kv
+        out = jnp.einsum("bhn,bhnm->bhm", rt, bonus + s)
+        s = jnp.exp(lwt)[..., None] * s + kv
+        return s, out
+
+    final, outs = jax.lax.scan(
+        step, s0,
+        (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+         v.transpose(1, 0, 2, 3), log_w.transpose(1, 0, 2, 3)))
+    return outs.transpose(1, 0, 2, 3).astype(v.dtype), final
+
+
+def wkv6_chunked_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     log_w: jnp.ndarray, u: jnp.ndarray, chunk: int = 16,
+                     initial_state: Optional[jnp.ndarray] = None,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV6 — parallel intra-chunk, scan over chunks.
+
+    Exact (no decay clamping): intra-chunk pairwise decays are computed as
+    ``exp`` of *masked* log-differences, so nothing overflows regardless of
+    how aggressive the data-dependent decay is.  Costs an explicit
+    (Q, Q, N) tensor per (batch, head, chunk) — keep ``chunk`` modest (16–64).
+    The Pallas kernel implements the same masked-log-diff scheme in VMEM.
+    """
+    B, S, H, N = r.shape
+    M = v.shape[-1]
+    chunk = fit_chunk(S, chunk)
+    nc, Q = S // chunk, chunk
+
+    rc = r.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    kc = k.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    vc = v.reshape(B, nc, Q, H, M).astype(jnp.float32)
+    lw = log_w.reshape(B, nc, Q, H, N).astype(jnp.float32)
+    cum = jnp.cumsum(lw, axis=2)                                   # inclusive, (B,nc,Q,H,N)
+    total = cum[:, :, -1]                                          # (B,nc,H,N)
+
+    # ---- intra-chunk: A[t,i] = sum_n r_t k_i exp(cum_{t-1} - cum_i), i < t
+    #      diagonal bonus:  A[t,t] = sum_n r_t u k_t
+    cum_tm1 = jnp.pad(cum, ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))[:, :, :-1]
+    dlog = cum_tm1[:, :, :, None] - cum[:, :, None, :]             # (B,nc,t,i,H,N)
+    tri = jnp.tril(jnp.ones((Q, Q), bool), k=-1)[None, None, :, :, None, None]
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, dlog, 0.0)), 0.0)
+    scores = jnp.einsum("bcthn,bcihn,bctihn->bchti", rc, kc, decay)
+    bonus = jnp.einsum("bcthn,hn,bcthn->bcht", rc,
+                       u.astype(jnp.float32), kc)
+    scores = scores + bonus[..., None] * jnp.eye(Q)[None, None, None]
+    y_intra = jnp.einsum("bchti,bcihm->bcthm", scores, vc)
+
+    # ---- per-chunk state contribution: sum_i exp(total - cum_i) k_i v_i^T
+    k_dec = kc * jnp.exp(total[:, :, None] - cum)                  # (B,nc,Q,H,N)
+    chunk_states = jnp.einsum("bcihn,bcihm->bchnm", k_dec, vc)
+    chunk_decay = jnp.exp(total)                                   # (B,nc,H,N)
+
+    # ---- inter-chunk scan
+    s0 = (jnp.zeros((B, H, N, M), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        states_c, dec_c = inp                                      # (B,H,N,M),(B,H,N)
+        prev = s
+        s = s * dec_c[..., None] + states_c
+        return s, prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2, 3)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)             # (B,nc,H,N,M)
+
+    # ---- inter-chunk output: r_t decayed to chunk start @ carried state
+    r_dec = rc * jnp.exp(cum_tm1)                                  # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcthn,bchnm->bcthm", r_dec, prev_states)
+
+    y = (y_intra + y_inter).reshape(B, S, H, M)
+    return y.astype(v.dtype), final
+
+
+def wkv6_decode_step(state: jnp.ndarray, r: jnp.ndarray, k: jnp.ndarray,
+                     v: jnp.ndarray, log_w: jnp.ndarray, u: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step.  state (B,H,N,M); r/k/log_w (B,H,N); v (B,H,M)."""
+    rf, kf, vf, lwf = (t.astype(jnp.float32) for t in (r, k, v, log_w))
+    kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+    out = jnp.einsum("bhn,bhnm->bhm", rf,
+                     u.astype(jnp.float32)[None, :, :, None] * kv + state)
+    state = jnp.exp(lwf)[..., None] * state + kv
+    return out.astype(v.dtype), state

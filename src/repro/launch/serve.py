@@ -1,0 +1,78 @@
+"""Batched decode (serving) driver — real execution at smoke scale.
+
+Greedy-decodes a batch of synthetic prompts with the KV-cache/recurrent-
+state serve path and reports per-token latency.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --tokens 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import encdec, registry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="tinyllama-1.1b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    key = jax.random.key(args.seed)
+    params = registry.init_params(cfg, key)
+
+    enc_out = None
+    if cfg.family.value == "audio":
+        frames = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        enc_out = encdec.encode(params, frames, cfg)
+
+    spec = registry.cache_spec_for(cfg, args.cache_len, False)
+    state = registry.init_serve_state(params, cfg, args.batch, args.cache_len,
+                                      enc_out=enc_out)
+
+    mrope = None
+    if cfg.family.value == "vlm":
+        mrope = jnp.zeros((args.batch, 1, 3), jnp.int32)
+
+    @jax.jit
+    def step(params, tokens, state, pos):
+        mp = None if mrope is None else pos
+        return registry.serve_step(params, tokens, state, cfg, spec,
+                                   mrope_positions=mp)
+
+    tokens = jax.random.randint(key, (args.batch, 1), 0, cfg.vocab_size)
+    # warmup/compile
+    logits, state = step(params, tokens, state, mrope)
+    tokens = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1).astype(jnp.int32)
+
+    t0 = time.time()
+    generated = [tokens]
+    for i in range(args.tokens - 1):
+        pos = None if mrope is None else jnp.full((args.batch, 1, 3), i + 1,
+                                                  jnp.int32)
+        logits, state = step(params, tokens, state, pos)
+        tokens = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1
+                            ).astype(jnp.int32)
+        generated.append(tokens)
+    jax.block_until_ready(tokens)
+    dt = time.time() - t0
+    total = args.batch * (args.tokens - 1)
+    print(f"[serve] {cfg.name}: {total} tokens in {dt:.2f}s "
+          f"({total/dt:,.0f} tok/s, {dt/(args.tokens-1)*1e3:.1f} ms/step)")
+    out = jnp.concatenate(generated, axis=1)
+    print(f"[serve] sample continuation (client 0): {out[0, :16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

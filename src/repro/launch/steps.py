@@ -1,0 +1,303 @@
+"""Jit-compiled step builders for the production meshes.
+
+* ``build_train_step``  — loss + grad + AdamW update, remat'd scan,
+                          sequence-sharded residual carries.
+* ``build_prefill_step``— forward to last-position logits (inference
+                          prefill; no full (B,S,V) logits materialized).
+* ``build_serve_step``  — one-token decode against sharded caches/states.
+
+Each builder returns ``(fn, example_inputs, in_shardings, out_shardings)``
+ready for ``jax.jit(...).lower(...)`` — used by both the dry-run and the
+real drivers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ArchFamily, InputShape
+from repro.launch.mesh import batch_axes
+from repro.models import registry
+from repro.optim import adamw
+from repro.sharding import rules
+
+
+def _residual_sharding(mesh, cfg: ArchConfig, seq_len: int,
+                       seq_parallel: bool = False):
+    """Sequence-sharded residual carries (Megatron-style sequence
+    parallelism).  OFF in the baseline: naively constraining the scan carry
+    makes GSPMD resolve the model-axis conflict by gathering *weights* every
+    layer (measured 16x per-device FLOP inflation — see EXPERIMENTS.md
+    §Perf).  The hillclimbed sequence-parallel path gathers/scatters the
+    activations explicitly instead (models.transformer block entry/exit)."""
+    if seq_parallel and seq_len % mesh.shape["model"] == 0:
+        return NamedSharding(mesh, P(None, "model", None))
+    return None
+
+
+def param_like(cfg: ArchConfig):
+    return jax.eval_shape(functools.partial(registry.init_params, cfg),
+                          jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ArchConfig, shape: InputShape, mesh, *,
+                     lr: float = 3e-4, remat: bool = True, unroll=1,
+                     seq_parallel: bool = False, ce_chunk: int = 0,
+                     moe_ep: bool = False, microbatches: int = 1):
+    """``microbatches > 1`` runs gradient accumulation: the global batch is
+    split along dim 0 and scanned, so live activation memory scales with the
+    microbatch (the §Roofline memory-fit lever for big train configs); the
+    optimizer consumes the mean gradient — numerics identical to the
+    monolithic step for mean-reduced losses up to accumulation order."""
+    opt = adamw(lr)
+    assert shape.global_batch % microbatches == 0, (shape, microbatches)
+    params_shapes = param_like(cfg)
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    batch_specs = registry.make_batch_specs(cfg, shape)
+    res_shard = _residual_sharding(mesh, cfg, shape.seq_len,
+                                   seq_parallel=seq_parallel)
+    seq_shardings = None
+    if seq_parallel and res_shard is not None:
+        seq_shardings = (res_shard, NamedSharding(mesh, P(None, None, None)))
+
+    from contextlib import nullcontext
+
+    from repro.models import moe as moe_lib
+
+    def train_step(params, opt_state, batch):
+        ep = (moe_lib.expert_parallel_context(mesh, batch_axes(mesh))
+              if moe_ep else nullcontext())
+
+        def loss(p, b):
+            with ep:
+                l, metrics = registry.loss_fn(p, b, cfg, remat=remat,
+                                              residual_sharding=res_shard,
+                                              unroll=unroll,
+                                              seq_shardings=seq_shardings,
+                                              ce_chunk=ce_chunk)
+            return l, metrics
+
+        if microbatches == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+        else:
+            mb = {k: v.reshape((microbatches,
+                                v.shape[0] // microbatches) + v.shape[1:])
+                  for k, v in batch.items()}
+
+            def accum(carry, b):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss, has_aux=True)(params, b)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, l), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: (g / microbatches).astype(p.dtype), grads, params)
+            l = l / microbatches
+            metrics = {"ce": l, "aux": jnp.zeros(()),
+                       "tokens": jnp.zeros((), jnp.int32)}
+
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+        return params, opt_state, {"loss": l, **metrics}
+
+    in_shardings = (
+        rules.param_shardings(params_shapes, mesh),
+        rules.opt_state_shardings(opt_shapes, mesh),
+        rules.batch_shardings(batch_specs, mesh),
+    )
+    out_shardings = (
+        in_shardings[0],
+        in_shardings[1],
+        jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()),
+                               {"loss": 0, "ce": 0, "aux": 0, "tokens": 0}),
+    )
+    example = (params_shapes, opt_shapes, batch_specs)
+    return train_step, example, in_shardings, out_shardings
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ArchConfig, shape: InputShape, mesh, *, unroll=1):
+    params_shapes = param_like(cfg)
+    batch_specs = registry.make_batch_specs(cfg, shape)
+    batch_specs.pop("labels", None)
+    res_shard = _residual_sharding(mesh, cfg, shape.seq_len)
+
+    def prefill_step(params, batch):
+        h, _ = registry.forward_hidden(params, batch, cfg,
+                                       residual_sharding=res_shard,
+                                       unroll=unroll)
+        from repro.models import transformer
+        return transformer.lm_logits(params, h[:, -1:], cfg)
+
+    in_shardings = (
+        rules.param_shardings(params_shapes, mesh),
+        rules.batch_shardings(batch_specs, mesh),
+    )
+    out_shardings = NamedSharding(mesh, P(batch_axes(mesh), None, "model"))
+    example = (params_shapes, batch_specs)
+    return prefill_step, example, in_shardings, out_shardings
+
+
+# ---------------------------------------------------------------------------
+# serve (single-token decode)
+# ---------------------------------------------------------------------------
+
+def build_serve_step(cfg: ArchConfig, shape: InputShape, mesh, *, unroll=1,
+                     flash_decode: bool = False, bf16_params: bool = False,
+                     moe_ep: bool = False):
+    B = shape.global_batch
+    long_context = shape.name == "long_500k"
+    params_shapes = param_like(cfg)
+    if bf16_params:
+        # serving-dtype params: fp32 leaves stored bf16 (weights are cast to
+        # the activation dtype at use anyway — halves weight reads per step)
+        params_shapes = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, jnp.bfloat16 if l.dtype == jnp.float32 else l.dtype),
+            params_shapes)
+    spec = registry.cache_spec_for(cfg, shape.seq_len, long_context)
+
+    enc_spec = None
+    if cfg.family == ArchFamily.AUDIO:
+        enc_spec = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+
+    def init_state(p, enc_out):
+        return registry.init_serve_state(p, cfg, B, shape.seq_len,
+                                         long_context=long_context,
+                                         enc_out=enc_out)
+
+    state_shapes = jax.eval_shape(init_state, params_shapes, enc_spec)
+
+    tokens_spec = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    mrope_spec = None
+    if cfg.family == ArchFamily.VLM:
+        mrope_spec = jax.ShapeDtypeStruct((B, 1, 3), jnp.int32)
+
+    daxes = batch_axes(mesh)
+    sp_decode = None
+    if flash_decode and not spec.ring and \
+            spec.cache_len % mesh.shape["model"] == 0:
+        sp_decode = (mesh, daxes)
+
+    from contextlib import nullcontext
+
+    from repro.models import moe as moe_lib
+
+    def serve_step(params, tokens, state, mrope_positions=None):
+        ep = (moe_lib.expert_parallel_context(mesh, daxes)
+              if moe_ep else nullcontext())
+        with ep:
+            return registry.serve_step(params, tokens, state, cfg, spec,
+                                       mrope_positions=mrope_positions,
+                                       unroll=unroll, sp_decode=sp_decode)
+
+    tok_shard = NamedSharding(
+        mesh, P(daxes) if B % rules._axis_size(mesh, daxes) == 0 else P())
+    state_shardings = rules.serve_state_shardings(state_shapes, mesh, cfg)
+    in_shardings = [
+        rules.param_shardings(params_shapes, mesh),
+        tok_shard,
+        state_shardings,
+    ]
+    example = [params_shapes, tokens_spec, state_shapes]
+    if mrope_spec is not None:
+        in_shardings.append(NamedSharding(mesh, tok_shard.spec))
+        example.append(mrope_spec)
+    logits_shard = NamedSharding(mesh, P(
+        daxes if B % rules._axis_size(mesh, daxes) == 0 else None,
+        None, "model"))
+    out_shardings = (logits_shard, state_shardings)
+    return serve_step, tuple(example), tuple(in_shardings), out_shardings
+
+
+# ---------------------------------------------------------------------------
+# federated (the paper's technique at production scale)
+# ---------------------------------------------------------------------------
+
+def build_fed_step(cfg: ArchConfig, shape: InputShape, mesh, *,
+                   static_half_split: bool = False, lr: float = 0.1,
+                   seed: int = 0, unroll: int = 1, ce_chunk: int = 0):
+    """Distributed FedPairing step on the production mesh: one client per
+    (pod x) data position, paired by the greedy algorithm over a simulated
+    heterogeneous fleet; the split handoff is the ppermute collective.
+
+    ``static_half_split`` is the beyond-paper homogeneous-mesh
+    specialization (§Perf): static L=W/2 halves the per-phase scan.
+    """
+    import numpy as np
+
+    from repro.core import fedpair, fedpair_dist, pairing, splitting
+    from repro.core.latency import ChannelModel, make_fleet
+
+    daxes = batch_axes(mesh)
+    n_clients = rules._axis_size(mesh, daxes)
+    fleet = make_fleet(n=n_clients, seed=seed)
+    pairs = pairing.fedpairing_pairing(fleet, ChannelModel())
+    partner = pairing.partner_permutation(pairs, n_clients)
+    if static_half_split:
+        lengths = np.full(n_clients, cfg.num_layers // 2)
+    else:
+        lengths = splitting.propagation_lengths(fleet.cpu_hz, partner,
+                                                cfg.num_layers)
+    masks = np.stack([np.arange(cfg.num_layers) < l for l in lengths]
+                     ).astype(np.float32)
+    agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
+
+    dist_cfg = fedpair_dist.FedDistConfig(
+        lr=lr, static_half_split=static_half_split, client_axes=daxes,
+        unroll=unroll, ce_chunk=ce_chunk)
+    step = fedpair_dist.make_dist_fed_step(
+        cfg, mesh, fedpair_dist.pairs_to_ppermute(partner), agg_w, masks,
+        dist_cfg)
+
+    params_shapes = param_like(cfg)
+    client_shapes = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((n_clients,) + l.shape, l.dtype),
+        params_shapes)
+    B_local = shape.global_batch // n_clients
+    batch_specs = {
+        "tokens": jax.ShapeDtypeStruct((n_clients, B_local, shape.seq_len),
+                                       jnp.int32),
+        "labels": jax.ShapeDtypeStruct((n_clients, B_local, shape.seq_len),
+                                       jnp.int32),
+    }
+
+    client_shardings = jax.tree_util.tree_map_with_path(
+        lambda path, l: NamedSharding(
+            mesh, P(daxes, *rules.param_spec(path, l, mesh))),
+        params_shapes)
+    batch_shardings = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P(daxes)), batch_specs)
+
+    in_shardings = (client_shardings, batch_shardings)
+    out_shardings = (client_shardings, NamedSharding(mesh, P()))
+    # the jitted step already carries its own shardings via shard_map; we
+    # hand the wrapped callable + shardings for lowering
+    return step.__wrapped__, (client_shapes, batch_specs), in_shardings, \
+        out_shardings
+
+
+def build_step(cfg: ArchConfig, shape: InputShape, mesh, *, unroll=1, **kw):
+    if shape.mode == "train":
+        return build_train_step(cfg, shape, mesh, unroll=unroll, **kw)
+    if shape.mode == "prefill":
+        return build_prefill_step(cfg, shape, mesh, unroll=unroll)
+    return build_serve_step(cfg, shape, mesh, unroll=unroll)

@@ -1,0 +1,93 @@
+"""Single-host training driver (real execution, smoke-scale configs).
+
+Trains an assigned architecture's reduced variant (or the full config if
+you have the hardware) on the synthetic LM corpus with AdamW; checkpoints
+via repro.checkpoint.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data import LMBatcher, SyntheticLM
+from repro.models import registry
+from repro.optim import adamw, clip_by_global_norm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="tinyllama-1.1b")
+    ap.add_argument("--full", action="store_true",
+                    help="full assigned config (needs real accelerators)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--clip", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    print(f"[train] {cfg.name}: {cfg.num_layers}L d{cfg.d_model} "
+          f"vocab {cfg.vocab_size} ({registry.count_params_analytical(cfg)/1e6:.1f}M params)")
+
+    key = jax.random.key(args.seed)
+    params = registry.init_params(cfg, key)
+    opt = adamw(args.lr)
+    opt_state = opt.init(params)
+
+    corpus = SyntheticLM(vocab_size=cfg.vocab_size, seed=args.seed).generate()
+    batcher = LMBatcher(corpus, args.batch, args.seq, seed=args.seed)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: registry.loss_fn(p, batch, cfg), has_aux=True)(params)
+        grads = clip_by_global_norm(grads, args.clip)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+        return params, opt_state, loss
+
+    def to_batch(b):
+        out = {"tokens": jnp.asarray(b["tokens"]),
+               "labels": jnp.asarray(b["labels"])}
+        if cfg.family.value == "vlm":
+            B = args.batch
+            F = cfg.frontend_tokens
+            S = args.seq + F
+            out["patches"] = jnp.zeros((B, F, cfg.d_model), jnp.dtype(cfg.dtype))
+            out["positions"] = jnp.broadcast_to(
+                jnp.arange(S)[None, :, None], (B, S, 3)).astype(jnp.int32)
+        if cfg.family.value == "audio":
+            out["frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq_len, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        return out
+
+    t0 = time.time()
+    for i in range(args.steps):
+        params, opt_state, loss = step(params, opt_state, to_batch(next(batcher)))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            tok_s = (i + 1) * args.batch * args.seq / max(dt, 1e-9)
+            print(f"  step {i:5d}  loss {float(loss):.4f}  ({tok_s:,.0f} tok/s)")
+
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params,
+                        {"arch": cfg.name, "steps": args.steps})
+        print(f"[train] checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: 6 architecture families, pure-JAX pytree parameters."""
+from repro.models.registry import (  # noqa: F401
+    count_params_analytical,
+    forward_logits,
+    init_params,
+    init_serve_state,
+    loss_fn,
+    make_batch_specs,
+    serve_step,
+)

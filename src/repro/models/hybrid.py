@@ -1,0 +1,203 @@
+"""zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+The shared transformer block (weights reused at every invocation) consumes
+``concat([hidden, initial_embedding])`` (2*d_model), per arXiv:2411.15242,
+with a *per-invocation* output projection (the paper's per-invocation LoRA,
+adapted to a full projection for simplicity — noted in DESIGN.md).
+
+FedPairing note: the shared block is held by both clients of a pair and is
+crossed by both propagation flows, so it is a *permanent overlapping layer*
+(paper §III-B); it is always executed (gate 1) and its gradients take the
+overlap treatment.  The mamba stack is the split unit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common, mamba2, transformer
+
+
+def num_invocations(cfg: ArchConfig) -> int:
+    return (cfg.num_layers + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+
+
+def _layer_groups(cfg: ArchConfig):
+    """Mamba layer index ranges between shared-block invocations."""
+    k = cfg.shared_attn_every
+    return [(s, min(s + k, cfg.num_layers)) for s in range(0, cfg.num_layers, k)]
+
+
+def shared_block_init(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    n_inv = num_invocations(cfg)
+    d2 = 2 * cfg.d_model
+    hd = cfg.resolved_head_dim
+    ka, ko, km = jax.random.split(key, 3)
+    q_out = cfg.num_heads * hd
+    return {
+        "ln_attn": common.rms_norm_init(None, d2, dtype),
+        "attn": attn.attn_init(ka, None, d2, cfg.num_heads, cfg.num_kv_heads,
+                               hd, False, dtype),
+        # per-invocation output projections (the "unique per-depth" adaptation)
+        "out_proj": common.stacked_dense_init(ko, n_inv, q_out, cfg.d_model, dtype),
+        "ln_mlp": common.rms_norm_init(None, d2, dtype),
+        "mlp": {
+            **common.swiglu_init(km, None, d2, cfg.d_ff, dtype),
+        },
+    }
+
+
+def hybrid_init(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    km, ks, kh = jax.random.split(key, 3)
+    p = transformer.lm_head_init(kh, cfg, dtype)
+    p["mamba"] = mamba2.mamba_stack_init(km, cfg, cfg.num_layers, dtype)
+    p["shared"] = shared_block_init(ks, cfg, dtype)
+    # shared-block MLP down-projection outputs d_model (residual added to x)
+    kfix = jax.random.fold_in(key, 7)
+    p["shared"]["mlp"]["w_down"] = common.dense_init(
+        kfix, cfg.d_ff, cfg.d_model, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# shared attention block
+# ---------------------------------------------------------------------------
+
+def shared_block_apply(p: Dict, x: jnp.ndarray, emb0: jnp.ndarray, inv: int,
+                       cos, sin, cfg: ArchConfig, *,
+                       sliding_window: Optional[int] = None) -> jnp.ndarray:
+    hd = cfg.resolved_head_dim
+    window = sliding_window or 0
+    cat = jnp.concatenate([x, emb0], axis=-1)
+    h = common.rms_norm(cat, p["ln_attn"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(h, p["attn"], cfg.num_heads, cfg.num_kv_heads, hd)
+    q = common.apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+    k = common.apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+    o = attn.attend(q, k, v, causal=True, sliding_window=window)
+    B, S = x.shape[:2]
+    x = x + jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1),
+                       p["out_proj"][inv].astype(x.dtype))
+    h = common.rms_norm(jnp.concatenate([x, emb0], axis=-1), p["ln_mlp"],
+                        cfg.norm_eps)
+    x = x + common.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"])
+    return x
+
+
+def shared_block_decode(p: Dict, x: jnp.ndarray, emb0: jnp.ndarray, inv: int,
+                        cos, sin, cache_k, cache_v, index, spec, cfg
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    hd = cfg.resolved_head_dim
+    cat = jnp.concatenate([x, emb0], axis=-1)
+    h = common.rms_norm(cat, p["ln_attn"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(h, p["attn"], cfg.num_heads, cfg.num_kv_heads, hd)
+    q = common.apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+    k = common.apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+    cache_k, cache_v = attn.cache_update(cache_k, cache_v, k, v, index, spec)
+    o = attn.decode_attend(q, cache_k, cache_v, index, spec)
+    B = x.shape[0]
+    x = x + jnp.einsum("bse,ed->bsd", o.reshape(B, 1, -1),
+                       p["out_proj"][inv].astype(x.dtype))
+    h = common.rms_norm(jnp.concatenate([x, emb0], axis=-1), p["ln_mlp"],
+                        cfg.norm_eps)
+    x = x + common.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"])
+    return x, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# forward / decode
+# ---------------------------------------------------------------------------
+
+def _slice_group(tree, lo: int, hi: int):
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
+
+
+def hybrid_forward(params: Dict, tokens: jnp.ndarray, cfg: ArchConfig,
+                   gates: Optional[jnp.ndarray] = None, *,
+                   sliding_window: Optional[int] = None,
+                   chunk: int = 64, remat: bool = False,
+                   residual_sharding=None, unroll=1) -> jnp.ndarray:
+    """(B,S) -> hidden (B,S,D).  ``gates`` gate the mamba layers only."""
+    x = transformer.embed(params, tokens, cfg)
+    emb0 = x
+    S = tokens.shape[1]
+    pos = jnp.arange(S)[None, :]
+    cos, sin = common.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+    if gates is None:
+        gates = jnp.ones((cfg.num_layers,), x.dtype)
+
+    def body(xc, scanned):
+        p_l, g = scanned
+        out = mamba2.mamba_block_apply(p_l, xc, cfg, g.astype(xc.dtype),
+                                       chunk=chunk)
+        if residual_sharding is not None:
+            out = jax.lax.with_sharding_constraint(out, residual_sharding)
+        return out, None
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    for inv, (lo, hi) in enumerate(_layer_groups(cfg)):
+        x = shared_block_apply(params["shared"], x, emb0, inv, cos, sin, cfg,
+                               sliding_window=sliding_window)
+        if residual_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, residual_sharding)
+        group = _slice_group(params["mamba"], lo, hi)
+        x, _ = jax.lax.scan(body, x, (group, gates[lo:hi]),
+                            unroll=unroll)
+    return x
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, spec: attn.CacheSpec) -> Dict:
+    n_inv = num_invocations(cfg)
+    return {
+        "mamba": mamba2.init_decode_state(cfg, cfg.num_layers, batch),
+        "attn": attn.init_kv_cache(n_inv, batch, spec, cfg.num_kv_heads,
+                                   cfg.resolved_head_dim,
+                                   jnp.dtype(cfg.dtype)),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def hybrid_decode_step(params: Dict, tokens: jnp.ndarray, state: Dict,
+                       cfg: ArchConfig, spec: attn.CacheSpec, unroll=1
+                       ) -> Tuple[jnp.ndarray, Dict]:
+    """One token (B,1).  Returns (hidden (B,1,D), new state)."""
+    x = transformer.embed(params, tokens, cfg)
+    emb0 = x
+    index = state["index"]
+    pos = jnp.full((1, 1), index, jnp.int32)
+    cos, sin = common.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+    new_mamba = []
+    new_k, new_v = [], []
+    for inv, (lo, hi) in enumerate(_layer_groups(cfg)):
+        x, ck, cv = shared_block_decode(
+            params["shared"], x, emb0, inv, cos, sin,
+            state["attn"]["k"][inv], state["attn"]["v"][inv], index, spec, cfg)
+        new_k.append(ck)
+        new_v.append(cv)
+        group = _slice_group(params["mamba"], lo, hi)
+        mstate = _slice_group(state["mamba"], lo, hi)
+
+        def body(xc, scanned):
+            p_l, st = scanned
+            xc, nst = mamba2.mamba_block_decode(p_l, xc, st, cfg)
+            return xc, nst
+
+        x, nst = jax.lax.scan(body, x, (group, mstate), unroll=unroll)
+        new_mamba.append(nst)
+
+    new_state = {
+        "mamba": jax.tree_util.tree_map(
+            lambda *parts: jnp.concatenate(parts, axis=0), *new_mamba),
+        "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+        "index": index + 1,
+    }
+    return x, new_state

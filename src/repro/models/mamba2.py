@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) block — used standalone and inside the zamba2 hybrid.
+
+Follows the Mamba2 reference structure (in-projection producing z, x, B, C,
+dt; causal depthwise conv; SSD scan over heads with per-head scalar decay;
+gated RMSNorm; out-projection) with one TPU-deliberate deviation: the
+reference fuses (z|xBC|dt) into a single in-projection, but slicing a
+tensor-sharded fused output forces GSPMD regathers, so we keep *separate*
+projections — w_z / w_x (d_inner, model-sharded), w_b / w_c / w_dt (small,
+replicated).  Same math, shard-friendly layout (see DESIGN.md §5).
+
+The SSD scan lives in ``repro.kernels`` (ref oracle + Pallas kernel).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.kernels import ops as kops
+
+
+def dims(cfg: ArchConfig) -> Dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return {"d_inner": d_inner, "n_heads": d_inner // cfg.ssm_head_dim}
+
+
+def mamba_stack_init(key, cfg: ArchConfig, n: int, dtype=jnp.float32) -> Dict:
+    d = dims(cfg)
+    di, H, N, W = d["d_inner"], d["n_heads"], cfg.ssm_state, cfg.ssm_conv_width
+    kz, kx, kb, kc, kdt, kcv, ko, ka = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ka, (n, H),
+                                    minval=math.log(1e-3), maxval=math.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    a_init = jnp.broadcast_to(
+        jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32))[None, :], (n, H))
+    conv_scale = 1.0 / math.sqrt(W)
+    kcx, kcb, kcc = jax.random.split(kcv, 3)
+    return {
+        "ln": common.rms_norm_init(n, cfg.d_model, dtype),
+        "w_z": common.stacked_dense_init(kz, n, cfg.d_model, di, dtype),
+        "w_x": common.stacked_dense_init(kx, n, cfg.d_model, di, dtype),
+        "w_b": common.stacked_dense_init(kb, n, cfg.d_model, N, dtype),
+        "w_c": common.stacked_dense_init(kc, n, cfg.d_model, N, dtype),
+        "w_dt": common.stacked_dense_init(kdt, n, cfg.d_model, H, dtype),
+        "conv_x": (jax.random.normal(kcx, (n, W, di)) * conv_scale).astype(dtype),
+        "conv_b": (jax.random.normal(kcb, (n, W, N)) * conv_scale).astype(dtype),
+        "conv_c": (jax.random.normal(kcc, (n, W, N)) * conv_scale).astype(dtype),
+        "conv_bias_x": jnp.zeros((n, di), dtype),
+        "conv_bias_b": jnp.zeros((n, N), dtype),
+        "conv_bias_c": jnp.zeros((n, N), dtype),
+        "a_log": a_init.astype(dtype),
+        "d_skip": jnp.ones((n, H), dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "ln_gate": common.rms_norm_init(n, di, dtype),
+        "out_proj": common.stacked_dense_init(ko, n, di, cfg.d_model, dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """x (B,S,C), w (W,C), b (C) -> causal depthwise conv along S.
+
+    W is tiny (4): unrolled shifted adds fuse well and avoid conv-op layout
+    constraints under SPMD.
+    """
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + S, :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def mamba_block_apply(p_l: Dict, x: jnp.ndarray, cfg: ArchConfig,
+                      gate: jnp.ndarray, *, chunk: int = 64) -> jnp.ndarray:
+    """Full-sequence Mamba2 block with residual gating (FedPairing split)."""
+    d = dims(cfg)
+    B, S, _ = x.shape
+    N, H, P = cfg.ssm_state, d["n_heads"], cfg.ssm_head_dim
+    dtype = x.dtype
+
+    h = common.rms_norm(x, p_l["ln"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", h, p_l["w_z"].astype(dtype))
+    xs = jnp.einsum("bsd,de->bse", h, p_l["w_x"].astype(dtype))
+    b = jnp.einsum("bsd,dn->bsn", h, p_l["w_b"].astype(dtype))
+    c = jnp.einsum("bsd,dn->bsn", h, p_l["w_c"].astype(dtype))
+    dt = jnp.einsum("bsd,dh->bsh", h, p_l["w_dt"].astype(dtype))
+
+    xs = jax.nn.silu(_causal_depthwise_conv(
+        xs, p_l["conv_x"].astype(dtype), p_l["conv_bias_x"].astype(dtype)))
+    b = jax.nn.silu(_causal_depthwise_conv(
+        b, p_l["conv_b"].astype(dtype), p_l["conv_bias_b"].astype(dtype)))
+    c = jax.nn.silu(_causal_depthwise_conv(
+        c, p_l["conv_c"].astype(dtype), p_l["conv_bias_c"].astype(dtype)))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p_l["dt_bias"].astype(jnp.float32))          # (B,S,H)
+    a = -jnp.exp(p_l["a_log"].astype(jnp.float32))                    # (H,)
+    log_decay = dt * a[None, None, :]
+
+    xh = xs.reshape(B, S, H, P)
+    y, _ = kops.ssd(xh * dt[..., None].astype(dtype), log_decay, b, c,
+                    chunk=chunk)
+    y = y + p_l["d_skip"].astype(dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d["d_inner"])
+
+    y = common.rms_norm(y * jax.nn.silu(z), p_l["ln_gate"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p_l["out_proj"].astype(dtype))
+    return x + gate * out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, n: int, batch: int) -> Dict:
+    d = dims(cfg)
+    W = cfg.ssm_conv_width
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv_x": jnp.zeros((n, batch, W - 1, d["d_inner"]), dt),
+        "conv_b": jnp.zeros((n, batch, W - 1, cfg.ssm_state), dt),
+        "conv_c": jnp.zeros((n, batch, W - 1, cfg.ssm_state), dt),
+        "ssm": jnp.zeros((n, batch, d["n_heads"], cfg.ssm_head_dim,
+                          cfg.ssm_state), jnp.float32),
+    }
+
+
+def _conv_step(window_prev: jnp.ndarray, xt: jnp.ndarray, w: jnp.ndarray,
+               b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """window_prev (B,W-1,C) + current xt (B,1,C) -> (out (B,C), new window)."""
+    window = jnp.concatenate([window_prev, xt], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return out, window[:, 1:, :]
+
+
+def mamba_block_decode(p_l: Dict, x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                       cfg: ArchConfig
+                       ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One token.  x (B,1,D); state {conv_* (B,W-1,C), ssm (B,H,P,N)}."""
+    d = dims(cfg)
+    B = x.shape[0]
+    N, H, P = cfg.ssm_state, d["n_heads"], cfg.ssm_head_dim
+    dtype = x.dtype
+
+    h = common.rms_norm(x, p_l["ln"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", h, p_l["w_z"].astype(dtype))
+    xs_in = jnp.einsum("bsd,de->bse", h, p_l["w_x"].astype(dtype))
+    b_in = jnp.einsum("bsd,dn->bsn", h, p_l["w_b"].astype(dtype))
+    c_in = jnp.einsum("bsd,dn->bsn", h, p_l["w_c"].astype(dtype))
+    dt = jnp.einsum("bsd,dh->bsh", h, p_l["w_dt"].astype(dtype))[:, 0]
+
+    xs, ncx = _conv_step(state["conv_x"].astype(dtype), xs_in,
+                         p_l["conv_x"].astype(dtype),
+                         p_l["conv_bias_x"].astype(dtype))
+    b, ncb = _conv_step(state["conv_b"].astype(dtype), b_in,
+                        p_l["conv_b"].astype(dtype),
+                        p_l["conv_bias_b"].astype(dtype))
+    c, ncc = _conv_step(state["conv_c"].astype(dtype), c_in,
+                        p_l["conv_c"].astype(dtype),
+                        p_l["conv_bias_c"].astype(dtype))
+    xs, b, c = jax.nn.silu(xs), jax.nn.silu(b), jax.nn.silu(c)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) +
+                          p_l["dt_bias"].astype(jnp.float32))          # (B,H)
+    a = -jnp.exp(p_l["a_log"].astype(jnp.float32))
+    log_decay = dtv * a[None, :]
+
+    xh = xs.reshape(B, H, P)
+    y, new_ssm = kops.ssd_decode(state["ssm"], xh * dtv[..., None].astype(dtype),
+                                 log_decay, b, c)
+    y = y + p_l["d_skip"].astype(dtype)[None, :, None] * xh
+    y = y.reshape(B, 1, d["d_inner"])
+
+    y = common.rms_norm(y * jax.nn.silu(z), p_l["ln_gate"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p_l["out_proj"].astype(dtype))
+    new_state = {"conv_x": ncx.astype(state["conv_x"].dtype),
+                 "conv_b": ncb.astype(state["conv_b"].dtype),
+                 "conv_c": ncc.astype(state["conv_c"].dtype),
+                 "ssm": new_ssm}
+    return x + out, new_state

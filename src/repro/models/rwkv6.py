@@ -1,0 +1,214 @@
+"""RWKV6 ("Finch") block — attention-free, data-dependent decay.
+
+Faithful structure from arXiv:2404.05892: token-shift with LoRA-interpolated
+mixing coefficients (5-way: w,k,v,r,g), data-dependent decay
+``w = exp(-exp(w0 + tanh(x W1) W2))``, per-head WKV recurrence with bonus
+``u``, per-head group-norm, gated output; plus squared-ReLU channel-mix.
+The WKV recurrence itself lives in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.kernels import ops as kops
+
+LORA_MIX = 32     # TIME_MIX_EXTRA_DIM
+LORA_DECAY = 64   # TIME_DECAY_EXTRA_DIM
+
+
+def dims(cfg: ArchConfig) -> Dict[str, int]:
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    return {"D": D, "H": H, "N": cfg.rwkv_head_dim}
+
+
+def rwkv_stack_init(key, cfg: ArchConfig, n: int, dtype=jnp.float32) -> Dict:
+    d = dims(cfg)
+    D, H, N = d["D"], d["H"], d["N"]
+    ks = jax.random.split(key, 12)
+    tn = lambda k, s, sc: (jax.random.truncated_normal(k, -3., 3., s) * sc).astype(dtype)  # noqa: E731
+    sD = 1.0 / math.sqrt(D)
+    return {
+        "ln1": common.rms_norm_init(n, D, dtype),
+        "ln2": common.rms_norm_init(n, D, dtype),
+        # token-shift mixing: base coefficients + LoRA producing 5 deltas
+        "mu_base": (jax.random.uniform(ks[0], (n, 5, D)) * 0.5 + 0.25).astype(dtype),
+        "mu_x": (jax.random.uniform(ks[1], (n, D)) * 0.5 + 0.25).astype(dtype),
+        "mix_w1": tn(ks[2], (n, D, 5 * LORA_MIX), sD),
+        "mix_w2": tn(ks[3], (n, 5, LORA_MIX, D), 1.0 / math.sqrt(LORA_MIX)),
+        # data-dependent decay
+        "w0": jnp.full((n, D), -2.0, dtype),  # exp(-exp(-2)) ~ 0.87 base decay
+        "decay_w1": tn(ks[4], (n, D, LORA_DECAY), sD),
+        "decay_w2": tn(ks[5], (n, LORA_DECAY, D), 1.0 / math.sqrt(LORA_DECAY)),
+        # projections
+        "w_r": tn(ks[6], (n, D, D), sD),
+        "w_k": tn(ks[7], (n, D, D), sD),
+        "w_v": tn(ks[8], (n, D, D), sD),
+        "w_g": tn(ks[9], (n, D, D), sD),
+        "w_o": tn(ks[10], (n, D, D), sD),
+        "u": tn(ks[11], (n, H, N), 1.0),
+        "gn_gamma": jnp.ones((n, D), dtype),
+        # channel mix
+        "cm": _channel_mix_init(jax.random.fold_in(key, 99), cfg, n, dtype),
+    }
+
+
+def _channel_mix_init(key, cfg: ArchConfig, n: int, dtype) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    tn = lambda k, s, sc: (jax.random.truncated_normal(k, -3., 3., s) * sc).astype(dtype)  # noqa: E731
+    return {
+        "mu_k": (jnp.ones((n, D)) * 0.5).astype(dtype),
+        "mu_r": (jnp.ones((n, D)) * 0.5).astype(dtype),
+        "w_k": tn(k1, (n, D, F), 1.0 / math.sqrt(D)),
+        "w_v": tn(k2, (n, F, D), 1.0 / math.sqrt(F)),
+        "w_r": tn(k3, (n, D, D), 1.0 / math.sqrt(D)),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Shift sequence right by one; ``prev`` (B,1,D) fills position 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _group_norm(y: jnp.ndarray, gamma: jnp.ndarray, H: int, N: int,
+                eps: float) -> jnp.ndarray:
+    """Per-head normalization over the head channel dim."""
+    B, S, D = y.shape
+    yh = y.reshape(B, S, H, N).astype(jnp.float32)
+    mean = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, S, D) * gamma.astype(jnp.float32)).astype(y.dtype)
+
+
+def time_mix(p_l: Dict, x: jnp.ndarray, cfg: ArchConfig, *,
+             shift_prev: Optional[jnp.ndarray] = None,
+             wkv_state: Optional[jnp.ndarray] = None, chunk: int = 16,
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """WKV6 time-mix.  Returns (out, new_shift (B,1,D), final wkv state)."""
+    d = dims(cfg)
+    B, S, D = x.shape
+    H, N = d["H"], d["N"]
+    dtype = x.dtype
+
+    shifted = _token_shift(x, shift_prev)
+    xx = shifted - x
+    xxx = x + xx * p_l["mu_x"].astype(dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,de->bse", xxx, p_l["mix_w1"].astype(dtype)))
+    lora = lora.reshape(B, S, 5, LORA_MIX)
+    deltas = jnp.einsum("bsfe,fed->bsfd", lora, p_l["mix_w2"].astype(dtype))
+    mixed = x[:, :, None] + xx[:, :, None] * (
+        p_l["mu_base"].astype(dtype)[None, None] + deltas)   # (B,S,5,D)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+
+    # data-dependent decay (fp32, <= 0 by construction)
+    dd = jnp.einsum("bse,ed->bsd",
+                    jnp.tanh(jnp.einsum("bsd,de->bse", xw,
+                                        p_l["decay_w1"].astype(dtype))),
+                    p_l["decay_w2"].astype(dtype))
+    log_w = -jnp.exp(p_l["w0"].astype(jnp.float32) + dd.astype(jnp.float32))
+
+    r = jnp.einsum("bsd,de->bse", xr, p_l["w_r"].astype(dtype)).reshape(B, S, H, N)
+    k = jnp.einsum("bsd,de->bse", xk, p_l["w_k"].astype(dtype)).reshape(B, S, H, N)
+    v = jnp.einsum("bsd,de->bse", xv, p_l["w_v"].astype(dtype)).reshape(B, S, H, N)
+    g = jnp.einsum("bsd,de->bse", xg, p_l["w_g"].astype(dtype))
+
+    y, final_state = kops.wkv6(r, k, v, log_w.reshape(B, S, H, N), p_l["u"],
+                               chunk=chunk, initial_state=wkv_state)
+    y = _group_norm(y.reshape(B, S, D), p_l["gn_gamma"], H, N, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y * jax.nn.silu(g), p_l["w_o"].astype(dtype))
+    return out, x[:, -1:], final_state
+
+
+def channel_mix(p_l: Dict, x: jnp.ndarray, *,
+                shift_prev: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Squared-ReLU channel mix.  Returns (out, new_shift)."""
+    dtype = x.dtype
+    shifted = _token_shift(x, shift_prev)
+    xx = shifted - x
+    xk = x + xx * p_l["mu_k"].astype(dtype)
+    xr = x + xx * p_l["mu_r"].astype(dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk,
+                                          p_l["w_k"].astype(dtype))))
+    kv = jnp.einsum("bsf,fd->bsd", k, p_l["w_v"].astype(dtype))
+    rg = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p_l["w_r"].astype(dtype)))
+    return rg * kv, x[:, -1:]
+
+
+def rwkv_block_apply(p_l: Dict, x: jnp.ndarray, cfg: ArchConfig,
+                     gate: jnp.ndarray, *, chunk: int = 16) -> jnp.ndarray:
+    """Full-sequence RWKV6 block (fresh state) with residual gating."""
+    h = common.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+    tm, _, _ = time_mix(p_l, h, cfg, chunk=chunk)
+    x = x + gate * tm
+    h = common.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+    cm, _ = channel_mix(p_l["cm"], h)
+    return x + gate * cm
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, n: int, batch: int) -> Dict:
+    d = dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "tm_shift": jnp.zeros((n, batch, 1, cfg.d_model), dt),
+        "cm_shift": jnp.zeros((n, batch, 1, cfg.d_model), dt),
+        "wkv": jnp.zeros((n, batch, d["H"], d["N"], d["N"]), jnp.float32),
+    }
+
+
+def rwkv_block_decode(p_l: Dict, x: jnp.ndarray, state: Dict,
+                      cfg: ArchConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One token.  x (B,1,D); per-layer state slices."""
+    d = dims(cfg)
+    B, _, D = x.shape
+    H, N = d["H"], d["N"]
+    dtype = x.dtype
+
+    h = common.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+    shifted = state["tm_shift"].astype(dtype)
+    xx = shifted - h
+    xxx = h + xx * p_l["mu_x"].astype(dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,de->bse", xxx, p_l["mix_w1"].astype(dtype)))
+    lora = lora.reshape(B, 1, 5, LORA_MIX)
+    deltas = jnp.einsum("bsfe,fed->bsfd", lora, p_l["mix_w2"].astype(dtype))
+    mixed = h[:, :, None] + xx[:, :, None] * (
+        p_l["mu_base"].astype(dtype)[None, None] + deltas)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+
+    dd = jnp.einsum("bse,ed->bsd",
+                    jnp.tanh(jnp.einsum("bsd,de->bse", xw,
+                                        p_l["decay_w1"].astype(dtype))),
+                    p_l["decay_w2"].astype(dtype))
+    log_w = -jnp.exp(p_l["w0"].astype(jnp.float32) + dd.astype(jnp.float32))
+
+    r = jnp.einsum("bsd,de->bse", xr, p_l["w_r"].astype(dtype)).reshape(B, H, N)
+    k = jnp.einsum("bsd,de->bse", xk, p_l["w_k"].astype(dtype)).reshape(B, H, N)
+    v = jnp.einsum("bsd,de->bse", xv, p_l["w_v"].astype(dtype)).reshape(B, H, N)
+    g = jnp.einsum("bsd,de->bse", xg, p_l["w_g"].astype(dtype))
+
+    y, new_wkv = kops.wkv6_decode(state["wkv"], r, k, v,
+                                  log_w.reshape(B, H, N), p_l["u"])
+    y = _group_norm(y.reshape(B, 1, D), p_l["gn_gamma"], H, N, cfg.norm_eps)
+    tm_out = jnp.einsum("bsd,de->bse", y * jax.nn.silu(g),
+                        p_l["w_o"].astype(dtype))
+    x = x + tm_out
+    new_tm_shift = h
+
+    h = common.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+    cm_out, _ = channel_mix(p_l["cm"], h, shift_prev=state["cm_shift"].astype(dtype))
+    x = x + cm_out
+    return x, {"tm_shift": new_tm_shift, "cm_shift": h, "wkv": new_wkv}

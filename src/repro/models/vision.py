@@ -1,0 +1,124 @@
+"""Small image classifiers for the paper's convergence experiments
+(Figs. 2-3 train ResNet on CIFAR10; we provide a scannable residual ConvNet
+and a residual MLP on synthetic CIFAR-like data).
+
+The parameter tree reuses the registry naming convention ("embed" = stem,
+"blocks" = stacked residual blocks, "ln_f"/"unembed" = head) so
+``core.splitting.split_plan`` labels it with zero extra code — the W
+residual blocks are the FedPairing split unit, exactly like the paper's
+ResNet layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    name: str = "resmlp-s"
+    kind: str = "mlp"            # "mlp" | "conv"
+    num_layers: int = 8          # W — split unit
+    width: int = 128             # hidden width (mlp) / channels (conv)
+    image_size: int = 16
+    in_channels: int = 3
+    num_classes: int = 10
+    norm_eps: float = 1e-5
+
+    @property
+    def input_dim(self) -> int:
+        return self.image_size * self.image_size * self.in_channels
+
+
+def vision_init(cfg: VisionConfig, key) -> Dict:
+    ks, kb1, kb2, kh = jax.random.split(key, 4)
+    W, C = cfg.num_layers, cfg.width
+    if cfg.kind == "mlp":
+        stem = common.dense_init(ks, cfg.input_dim, C)
+        blocks = {
+            "w1": common.stacked_dense_init(kb1, W, C, C),
+            "w2": common.stacked_dense_init(kb2, W, C, C,
+                                            scale=0.1 / math.sqrt(C)),
+            "ln": common.rms_norm_init(W, C),
+        }
+    elif cfg.kind == "conv":
+        k = 3
+        stem = (jax.random.truncated_normal(ks, -3, 3,
+                                            (k, k, cfg.in_channels, C))
+                * (1.0 / math.sqrt(k * k * cfg.in_channels)))
+        blocks = {
+            "w1": jax.random.truncated_normal(kb1, -3, 3, (W, k, k, C, C))
+            * (1.0 / math.sqrt(k * k * C)),
+            "w2": jax.random.truncated_normal(kb2, -3, 3, (W, k, k, C, C))
+            * (0.1 / math.sqrt(k * k * C)),
+            "ln": common.rms_norm_init(W, C),
+        }
+    else:
+        raise ValueError(cfg.kind)
+    return {
+        "embed": stem,
+        "blocks": blocks,
+        "ln_f": common.rms_norm_init(None, C),
+        "unembed": common.dense_init(kh, C, cfg.num_classes),
+    }
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def vision_forward(params: Dict, images: jnp.ndarray, cfg: VisionConfig,
+                   gates: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """images (B,H,W,3) -> logits (B,num_classes).  ``gates`` (W,) residual
+    gates implement the FedPairing logical split (identity when 0)."""
+    W = cfg.num_layers
+    if gates is None:
+        gates = jnp.ones((W,), jnp.float32)
+
+    if cfg.kind == "mlp":
+        x = images.reshape(images.shape[0], -1) @ params["embed"]
+
+        def body(xc, scanned):
+            p, g = scanned
+            h = common.rms_norm(xc, p["ln"], cfg.norm_eps)
+            h = jax.nn.relu(h @ p["w1"]) @ p["w2"]
+            return xc + g * h, None
+
+    else:
+        x = _conv(images, params["embed"])
+
+        def body(xc, scanned):
+            p, g = scanned
+            h = common.rms_norm(xc, p["ln"], cfg.norm_eps)
+            h = _conv(jax.nn.relu(_conv(h, p["w1"])), p["w2"])
+            return xc + g * h, None
+
+    x, _ = jax.lax.scan(body, x, (params["blocks"], gates))
+    if cfg.kind == "conv":
+        x = jnp.mean(x, axis=(1, 2))
+    x = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["unembed"]
+
+
+def vision_loss(params: Dict, batch: Dict, cfg: VisionConfig,
+                gates: Optional[jnp.ndarray] = None
+                ) -> jnp.ndarray:
+    logits = vision_forward(params, batch["images"], cfg, gates)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def vision_accuracy(params: Dict, batch: Dict, cfg: VisionConfig) -> jnp.ndarray:
+    logits = vision_forward(params, batch["images"], cfg)
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))

@@ -1,0 +1,7 @@
+"""Optimizers (pure JAX, optax-style (init, update) pairs, no deps)."""
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    sgd,
+)

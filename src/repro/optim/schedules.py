@@ -1,0 +1,62 @@
+"""Learning-rate schedules (pure functions of the step index)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int) -> Schedule:
+    def f(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return lr * frac
+
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, warmup_steps: int = 0,
+                 final_fraction: float = 0.1) -> Schedule:
+    """Linear warmup then cosine decay to ``final_fraction * lr``."""
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0) if warmup_steps \
+            else jnp.asarray(1.0)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_fraction + (1 - final_fraction) * 0.5 * (
+            1 + jnp.cos(math.pi * prog))
+        return lr * warm * cos
+
+    return f
+
+
+def scheduled(opt_factory: Callable[[float], "Optimizer"], schedule: Schedule):
+    """Wrap an lr->Optimizer factory into a schedule-aware optimizer.
+
+    State carries a step counter; the inner optimizer is rebuilt per call
+    with the scheduled lr (all our optimizers close over lr linearly, so the
+    update scales exactly).
+    """
+    from repro.optim.optimizers import Optimizer
+
+    base = opt_factory(1.0)   # unit-lr optimizer; scale updates by lr(step)
+
+    def init(params):
+        return {"inner": base.init(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        lr = schedule(state["step"])
+        updates, inner = base.update(grads, state["inner"], params)
+        updates = __import__("jax").tree_util.tree_map(
+            lambda u: (u * lr).astype(u.dtype), updates)
+        return updates, {"inner": inner, "step": state["step"] + 1}
+
+    return Optimizer(init, update)

@@ -1,0 +1,2 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import RooflineReport, collective_bytes, make_report, model_flops  # noqa: F401

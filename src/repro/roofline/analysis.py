@@ -1,0 +1,163 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware).
+
+Three terms per (arch × shape × mesh), per the assignment:
+
+  compute    = HLO_FLOPs / (chips · peak_FLOP/s)
+  memory     = HLO_bytes / (chips · HBM_bw)
+  collective = collective_bytes / (chips · link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed from the (post-SPMD) HLO text by summing the result sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async ``-start`` variants counted once).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = bf16[1,2,3]{...} all-reduce(` — possibly tuple-typed:
+# `(bf16[2]{0}, bf16[2]{0}) all-to-all(`
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-tensor bytes per collective kind (whole-program, i.e. the
+    global tensor moved per step; '-done' ops are skipped to avoid double
+    counting async pairs)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(type_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    """``cost_analysis``/HLO text come from the post-SPMD per-device
+    program, so ``*_per_device`` fields are per-chip; the global HLO terms
+    reported to EXPERIMENTS.md are ``per_device x chips``.  The three
+    roofline terms are then global/(chips·rate) == per_device/rate."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_by_kind: Dict[str, int]
+    model_flops: float                  # global useful FLOPs
+    peak_mem_per_device: Optional[float] = None
+
+    @property
+    def hlo_flops(self) -> float:       # global
+        return self.flops_per_device * self.chips
+
+    @property
+    def hlo_bytes(self) -> float:       # global
+        return self.bytes_per_device * self.chips
+
+    @property
+    def coll_bytes_total(self) -> float:  # global
+        return self.coll_bytes_per_device * self.chips
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes_total": self.coll_bytes_total,
+            "coll_by_kind": self.coll_by_kind,
+            "model_flops": self.model_flops,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "peak_mem_per_device": self.peak_mem_per_device,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-FLOP yardstick: 6·N·tokens (train), 2·N·tokens (inference);
+    MoE uses active params."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence, but attention still reads the cache —
+    # 2·N·B is the matmul-side yardstick
+    return 2.0 * n * shape.global_batch
+
+
+def make_report(arch: str, shape, mesh_name: str, chips: int,
+                cost: Dict, hlo_text: str, cfg,
+                peak_mem: Optional[float] = None) -> RooflineReport:
+    coll = collective_bytes(hlo_text)
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_by_kind=coll,
+        model_flops=model_flops(cfg, shape),
+        peak_mem_per_device=peak_mem,
+    )

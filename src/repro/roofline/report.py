@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON records.
+
+  PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "useful-FLOP ratio | temp GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_flop_ratio']:.3f} | "
+            f"{(r.get('temp_bytes_per_device') or 0)/1e9:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = ["| arch | shape | GFLOPs/dev | GB-accessed/dev | coll GB/dev | "
+           "args GB/dev | temps GB/dev | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        chips = r["chips"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{r['hlo_flops']/chips/1e9:.0f} | "
+            f"{r['hlo_bytes']/chips/1e9:.1f} | "
+            f"{r['coll_bytes_total']/chips/1e9:.2f} | "
+            f"{(r.get('argument_bytes_per_device') or 0)/1e9:.2f} | "
+            f"{(r.get('temp_bytes_per_device') or 0)/1e9:.2f} | "
+            f"{r.get('compile_seconds', 0):.0f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--kind", choices=["roofline", "dryrun"],
+                    default="roofline")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.kind == "roofline":
+        print(roofline_table(recs, args.mesh))
+    else:
+        print(dryrun_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

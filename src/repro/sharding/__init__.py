@@ -1,0 +1,1 @@
+"""Sharding rules (PartitionSpecs per param/state/batch leaf)."""

@@ -1,0 +1,212 @@
+"""Per-leaf PartitionSpec rules (params, optimizer state, batches, serve
+state) for the production meshes.
+
+Name-based: the rule inspects the leaf's tree path (last components) and
+shape, and emits a PartitionSpec.  Divisibility is always checked — a dim
+is only sharded if it divides evenly over the assigned axes; otherwise the
+dim stays replicated (e.g. batch=1 long-context decode leaves the data
+axis idle, which the roofline then shows honestly).
+
+Baseline layout (see DESIGN.md §5):
+  * tensor-parallel over "model": attention head dims, FFN hidden, expert
+    FFN hidden, vocab;
+  * batch over ("pod","data");
+  * MoE expert dim additionally sharded over "data" (expert-parallel
+    storage — required to fit deepseek-moe-16b optimizer state);
+  * KV-cache sequence dim over "model" (decode).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ArchFamily
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _fits(dim: int, mesh, axes) -> bool:
+    n = _axis_size(mesh, axes)
+    return dim % n == 0 and dim >= n
+
+
+def _spec(ndim: int, placed: Dict[int, Any]) -> P:
+    """placed: {dim_index: axes}"""
+    entries = [None] * ndim
+    for idx, axes in placed.items():
+        entries[int(idx)] = axes
+    return P(*entries)
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+_LAST_DIM_MODEL = {
+    "wq", "wk", "wv", "bq", "bk", "bv",      # attention projections
+    "w_gate", "w_up",                        # FFN in-projections
+    "w_z", "w_x",                            # mamba inner projections
+    "conv_x", "conv_bias_x", "ln_gate",      # mamba conv over d_inner
+    "w_r", "w_g",                            # rwkv projections
+    "gn_gamma",
+    "embed_proj",
+}
+_SECOND_LAST_MODEL = {
+    "wo", "w_down", "w_o", "out_proj",       # out-projections (contract dim)
+}
+_REPLICATED = {
+    "router", "w_b", "w_c", "w_dt", "conv_b", "conv_c", "conv_bias_b",
+    "conv_bias_c", "a_log", "d_skip", "dt_bias", "mu_base", "mu_x", "mix_w1",
+    "mix_w2", "w0", "decay_w1", "decay_w2", "mu_k", "mu_r",
+}
+
+
+def param_spec(path: Tuple, leaf, mesh) -> P:
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    last = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    ndim = leaf.ndim
+    shape = leaf.shape
+
+    if last == "embed":
+        return _spec(ndim, {0: "model"}) if _fits(shape[0], mesh, "model") \
+            else P()
+    if last == "unembed":
+        return _spec(ndim, {ndim - 1: "model"}) \
+            if _fits(shape[-1], mesh, "model") else P()
+    if last in _REPLICATED:
+        return P()
+    # rwkv: timemix w_k/w_v (D,D) want last-dim; channel-mix w_v (F,D) wants
+    # second-to-last (the F contraction dim)
+    if last == "w_v" and parent == "cm":
+        return _spec(ndim, {ndim - 2: "model"}) \
+            if _fits(shape[-2], mesh, "model") else P()
+    if last in ("w_k", "w_v") and ndim >= 2:
+        return _spec(ndim, {ndim - 1: "model"}) \
+            if _fits(shape[-1], mesh, "model") else P()
+    if last == "u" and ndim == 3:  # rwkv bonus (L, H, N)
+        return _spec(ndim, {1: "model"}) if _fits(shape[1], mesh, "model") \
+            else P()
+    if last in _LAST_DIM_MODEL:
+        placed = {ndim - 1: "model"} if _fits(shape[-1], mesh, "model") else {}
+        # MoE stacked experts (L, E, D, F): also shard E over "data"
+        if parent == "moe" and ndim == 4 and _fits(shape[1], mesh, "data"):
+            placed[1] = "data"
+        return _spec(ndim, placed)
+    if last in _SECOND_LAST_MODEL:
+        placed = {ndim - 2: "model"} if _fits(shape[-2], mesh, "model") else {}
+        if parent == "moe" and ndim == 4 and _fits(shape[1], mesh, "data"):
+            placed[1] = "data"
+        return _spec(ndim, placed)
+    return P()
+
+
+def param_shardings(params_or_shapes, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        params_or_shapes)
+
+
+# --------------------------------------------------------------------------
+# batches
+# --------------------------------------------------------------------------
+
+def batch_spec(path: Tuple, leaf, mesh) -> P:
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if _fits(leaf.shape[0], mesh, axes):
+        return _spec(leaf.ndim, {0: axes})
+    # batch=1 long-context decode: leave batch replicated
+    return P()
+
+
+def batch_shardings(batch, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, batch_spec(path, leaf, mesh)),
+        batch)
+
+
+# --------------------------------------------------------------------------
+# serve state (KV caches / recurrent states)
+# --------------------------------------------------------------------------
+
+def serve_state_spec(path: Tuple, leaf, mesh, cfg: ArchConfig) -> P:
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    last = names[-1] if names else ""
+    daxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    ndim = leaf.ndim
+    shape = leaf.shape
+
+    if last == "index":
+        return P()
+    placed: Dict[int, Any] = {}
+    if last in ("k", "v", "cross_k", "cross_v"):
+        # (L, B, S, Hkv, hd): batch over data axes, cache seq over model
+        if _fits(shape[1], mesh, daxes):
+            placed[1] = daxes
+        if _fits(shape[2], mesh, "model"):
+            placed[2] = "model"
+        return _spec(ndim, placed)
+    if last == "ssm":       # (L, B, H, P, N)
+        if _fits(shape[1], mesh, daxes):
+            placed[1] = daxes
+        if _fits(shape[2], mesh, "model"):
+            placed[2] = "model"
+        return _spec(ndim, placed)
+    if last in ("conv_x",):  # (L, B, W-1, d_inner)
+        if _fits(shape[1], mesh, daxes):
+            placed[1] = daxes
+        if _fits(shape[-1], mesh, "model"):
+            placed[ndim - 1] = "model"
+        return _spec(ndim, placed)
+    if last in ("conv_b", "conv_c"):
+        if _fits(shape[1], mesh, daxes):
+            placed[1] = daxes
+        return _spec(ndim, placed)
+    if last == "wkv":       # (L, B, H, N, M)
+        if _fits(shape[1], mesh, daxes):
+            placed[1] = daxes
+        if _fits(shape[2], mesh, "model"):
+            placed[2] = "model"
+        return _spec(ndim, placed)
+    if last in ("tm_shift", "cm_shift"):  # (L, B, 1, D)
+        if _fits(shape[1], mesh, daxes):
+            placed[1] = daxes
+        if _fits(shape[-1], mesh, "model"):
+            placed[ndim - 1] = "model"
+        return _spec(ndim, placed)
+    return P()
+
+
+def serve_state_shardings(state, mesh, cfg: ArchConfig):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, serve_state_spec(path, leaf, mesh, cfg)), state)
+
+
+# --------------------------------------------------------------------------
+# optimizer state: mirror the param rule (paths have a "mu"/"nu" prefix the
+# name-based rule ignores; the step counter is replicated)
+# --------------------------------------------------------------------------
+
+def opt_state_shardings(opt_state, mesh):
+    def spec(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if names and names[-1] == "step":
+            return NamedSharding(mesh, P())
+        # strip leading "mu"/"nu" container so param rules apply
+        sub = path[1:] if names and names[0] in ("mu", "nu") else path
+        return NamedSharding(mesh, param_spec(sub, leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, opt_state)

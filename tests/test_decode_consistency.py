@@ -1,0 +1,147 @@
+"""Serving path correctness: single-token cached decode must reproduce the
+teacher-forced forward logits for every family (+ ring-buffer window case)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import encdec, registry
+from repro.models.attention import CacheSpec
+
+B, S = 2, 16
+
+
+def _decode_all(cfg, params, toks, enc_out=None, mrope=None,
+                long_context=False):
+    spec = registry.cache_spec_for(cfg, S, long_context)
+    state = registry.init_serve_state(params, cfg, B, S,
+                                      long_context=long_context,
+                                      enc_out=enc_out)
+    outs = []
+    for t in range(S):
+        pos = None if mrope is None else mrope[:, t:t + 1]
+        lg, state = registry.serve_step(params, toks[:, t:t + 1], state, cfg,
+                                        spec, mrope_positions=pos)
+        outs.append(lg)
+    return jnp.concatenate(outs, axis=1)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_matches_forward(arch_id):
+    cfg = get_smoke_config(arch_id)
+    key = jax.random.key(2)
+    params = registry.init_params(cfg, key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    enc_out = mrope = None
+    if cfg.family.value == "audio":
+        frames = jax.random.normal(key, (B, cfg.encoder_seq_len, cfg.d_model),
+                                   jnp.float32)
+        batch["frames"] = frames
+        enc_out = encdec.encode(params, frames, cfg)
+    if cfg.family.value == "vlm":
+        # text-only decode comparison: zero patches, sequential positions
+        F = cfg.frontend_tokens
+        batch["patches"] = jnp.zeros((B, F, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(F + S)[None, :, None], (B, F + S, 3)).astype(jnp.int32)
+        mrope = jnp.broadcast_to(jnp.arange(F, F + S)[None, :, None],
+                                 (B, S, 3)).astype(jnp.int32)
+
+    full, _ = registry.forward_logits(params, batch, cfg)
+    if cfg.family.value == "vlm":
+        pytest.skip("vlm decode vs prefill needs patch-aware cache warmup; "
+                    "covered by test_vlm_decode_with_patch_prefill")
+    dec = _decode_all(cfg, params, toks, enc_out=enc_out, mrope=mrope)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_vlm_decode_with_patch_prefill():
+    """VLM: prefill over [patches|text] then cached decode must agree with
+    the teacher-forced forward on the text region."""
+    cfg = get_smoke_config("qwen2-vl-2b")
+    key = jax.random.key(3)
+    params = registry.init_params(cfg, key)
+    F = cfg.frontend_tokens
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    patches = jax.random.normal(key, (B, F, cfg.d_model), jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(F + S)[None, :, None],
+                                 (B, F + S, 3)).astype(jnp.int32)
+    batch = {"tokens": toks, "labels": toks, "patches": patches,
+             "positions": positions}
+    full, _ = registry.forward_logits(params, batch, cfg)
+
+    # decode path: feed patch embeddings as pseudo-tokens via embed bypass is
+    # not exposed; instead decode the full [patches|text] stream through
+    # serve_step by replaying the patch rows with a dedicated embed hook.
+    from repro.models import transformer
+    spec = registry.cache_spec_for(cfg, F + S, False)
+    state = registry.init_serve_state(params, cfg, B, F + S)
+    outs = []
+    for t in range(F + S):
+        if t < F:
+            x = patches[:, t:t + 1]
+            # run one decode step with the patch embedding injected
+            cos, sin = None, None
+            lg, state = _vlm_embedded_step(params, x, state, cfg, spec,
+                                           positions[:, t:t + 1])
+        else:
+            lg, state = registry.serve_step(
+                params, toks[:, t - F:t - F + 1], state, cfg, spec,
+                mrope_positions=positions[:, t:t + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _vlm_embedded_step(params, x_embed, state, cfg, spec, positions):
+    """serve_step variant that takes an already-embedded input row."""
+    from repro.models import common, transformer
+    index = state["index"]
+    cos, sin = common.mrope_cos_sin(positions, cfg.resolved_head_dim,
+                                    cfg.rope_theta, cfg.mrope_sections)
+    x, kv = transformer.decode_stack_apply(
+        params["blocks"], x_embed.astype(jnp.dtype(cfg.dtype)), cos, sin,
+        state["kv"], index, spec, cfg)
+    new_state = dict(state, kv=kv, index=index + 1)
+    return transformer.lm_logits(params, x, cfg), new_state
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Dense arch in long-context mode: ring cache of size=window must match
+    a full-cache decode with an explicit sliding-window mask."""
+    cfg = get_smoke_config("tinyllama-1.1b").with_overrides(sliding_window=8)
+    key = jax.random.key(4)
+    params = registry.init_params(cfg, key)
+    S_long = 24
+    toks = jax.random.randint(key, (B, S_long), 0, cfg.vocab_size)
+
+    # reference: teacher-forced forward with sliding window mask
+    batch = {"tokens": toks, "labels": toks}
+    full, _ = registry.forward_logits(params, batch, cfg, sliding_window=8)
+
+    # ring decode with cache_len == window
+    import repro.models.registry as R
+    old = R.LONG_CONTEXT_WINDOW
+    R.LONG_CONTEXT_WINDOW = 8
+    try:
+        spec = registry.cache_spec_for(cfg, S_long, True)
+        assert spec.ring and spec.cache_len == 8
+        state = registry.init_serve_state(params, cfg, B, S_long,
+                                          long_context=True)
+        outs = []
+        for t in range(S_long):
+            lg, state = registry.serve_step(params, toks[:, t:t + 1], state,
+                                            cfg, spec)
+            outs.append(lg)
+    finally:
+        R.LONG_CONTEXT_WINDOW = old
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-4, atol=2e-4)

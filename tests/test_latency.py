@@ -1,0 +1,80 @@
+"""Latency model (paper Eq. 3 / Problem 1) + Table I/II orderings."""
+import numpy as np
+import pytest
+
+from repro.core import latency, pairing
+from repro.core.latency import ChannelModel, WorkloadModel
+
+
+def test_rate_decreases_with_distance():
+    chan = ChannelModel()
+    r = chan.rate_bps(np.array([1.0, 10.0, 50.0, 100.0]))
+    assert np.all(np.diff(r) < 0)
+    assert r[0] > 1e6   # not degenerate
+
+
+def test_split_lengths_balance_compute_time():
+    w = WorkloadModel(num_layers=20)
+    li, lj = latency.split_lengths(1.6e9, 0.4e9, 20)
+    assert li + lj == 20
+    t_i = li * w.cycles_per_layer / 1.6e9
+    t_j = lj * w.cycles_per_layer / 0.4e9
+    # balanced within one layer's worth of work on the slow side
+    assert abs(t_i - t_j) <= w.cycles_per_layer / 0.4e9
+
+
+def test_fedpairing_much_faster_than_vanilla_fl():
+    """Table II: FedPairing cut round time by ~82% vs vanilla FL."""
+    fleet = latency.make_fleet(n=20, seed=0)
+    chan = ChannelModel()
+    w = WorkloadModel(num_layers=18)
+    pairs = pairing.fedpairing_pairing(fleet, chan)
+    t_fp = latency.round_time_fedpairing(pairs, fleet, chan, w)
+    t_fl = latency.round_time_vanilla_fl(fleet, chan, w)
+    assert t_fp < t_fl
+    assert (t_fl - t_fp) / t_fl > 0.4   # large reduction, as in the paper
+
+
+def test_vanilla_sl_fastest_per_paper():
+    fleet = latency.make_fleet(n=20, seed=0)
+    chan = ChannelModel()
+    w = WorkloadModel(num_layers=18)
+    pairs = pairing.fedpairing_pairing(fleet, chan)
+    t_fp = latency.round_time_fedpairing(pairs, fleet, chan, w)
+    t_sl = latency.round_time_vanilla_sl(fleet, chan, w)
+    assert t_sl < t_fp   # paper: vanilla SL beats FedPairing on raw time
+
+
+def test_pairing_mechanism_ordering_table1():
+    """Table I ordering: joint <= compute-based < {random, location}.
+    Averaged over fleets (single draws are noisy, as the paper's own
+    Table I numbers are)."""
+    chan = ChannelModel()
+    w = WorkloadModel(num_layers=18)
+    tj, tc, tr, tl = [], [], [], []
+    for seed in range(8):
+        fleet = latency.make_fleet(n=20, seed=seed)
+
+        def t(pairs, fleet=fleet):
+            return latency.round_time_fedpairing(pairs, fleet, chan, w)
+
+        tj.append(t(pairing.fedpairing_pairing(fleet, chan)))
+        tc.append(t(pairing.compute_pairing(fleet, chan)))
+        tr.append(np.mean([t(pairing.random_pairing(20, seed=s))
+                           for s in range(3)]))
+        tl.append(t(pairing.location_pairing(fleet, chan)))
+    assert np.mean(tj) <= np.mean(tc) * 1.01   # joint matches/beats compute
+    assert np.mean(tj) < np.mean(tr) * 0.8     # far better than random
+    assert np.mean(tj) < np.mean(tl) * 0.8     # far better than location
+
+
+def test_objective_value_prefers_greedy_over_random():
+    fleet = latency.make_fleet(n=20, seed=2)
+    chan = ChannelModel()
+    w = WorkloadModel(num_layers=18)
+    obj_g = latency.objective_value(
+        pairing.fedpairing_pairing(fleet, chan), fleet, chan, w)
+    obj_r = np.mean([latency.objective_value(
+        pairing.random_pairing(20, seed=s), fleet, chan, w)
+        for s in range(5)])
+    assert obj_g < obj_r

@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family
+variant, one forward + one train step on CPU, output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import registry
+from repro.models.common import tree_has_nan
+from repro.optim import adamw
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family.value == "vlm":
+        F = cfg.frontend_tokens
+        batch["patches"] = jax.random.normal(key, (B, F, cfg.d_model),
+                                             jnp.dtype(cfg.dtype))
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(F + S)[None, :, None], (B, F + S, 3)).astype(jnp.int32)
+    if cfg.family.value == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+class TestArchSmoke:
+    def test_reduced_config_bounds(self, arch_id):
+        cfg = get_smoke_config(arch_id)
+        assert cfg.num_layers <= 2
+        assert cfg.d_model <= 512
+        assert cfg.padded_experts <= 4 or cfg.num_experts == 0
+
+    def test_forward_shapes_no_nans(self, arch_id):
+        cfg = get_smoke_config(arch_id)
+        key = jax.random.key(0)
+        params = registry.init_params(cfg, key)
+        batch = _batch(cfg, key)
+        logits, aux = registry.forward_logits(params, batch, cfg)
+        S_out = S + (cfg.frontend_tokens if cfg.family.value == "vlm" else 0)
+        assert logits.shape == (B, S_out, cfg.padded_vocab)
+        assert not bool(tree_has_nan(logits))
+        assert np.isfinite(float(aux))
+
+    def test_train_step_decreases_loss_no_nans(self, arch_id):
+        cfg = get_smoke_config(arch_id)
+        key = jax.random.key(1)
+        params = registry.init_params(cfg, key)
+        opt = adamw(1e-3)
+        opt_state = opt.init(params)
+        batch = _batch(cfg, key)
+
+        @jax.jit
+        def step(p, o):
+            (l, _), g = jax.value_and_grad(
+                lambda q: registry.loss_fn(q, batch, cfg), has_aux=True)(p)
+            u, o = opt.update(g, o, p)
+            return jax.tree_util.tree_map(lambda a, b: a + b, p, u), o, l
+
+        losses = []
+        for _ in range(5):
+            params, opt_state, loss = step(params, opt_state)
+            losses.append(float(loss))
+            assert np.isfinite(losses[-1])
+        assert not bool(tree_has_nan(params))
+        assert losses[-1] < losses[0]   # same batch: must overfit downward
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_matches_assignment(arch_id):
+    """The full config must carry the exact assigned hyperparameters."""
+    expected = {
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "rwkv6-1.6b": (24, 2048, 0, 0, 7168, 65536),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    }
+    cfg = get_config(arch_id)
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected[arch_id]
+
+
+def test_moe_assignment_details():
+    ds = get_config("deepseek-moe-16b")
+    assert (ds.num_experts, ds.top_k, ds.num_shared_experts) == (64, 6, 2)
+    gr = get_config("granite-moe-3b-a800m")
+    assert (gr.num_experts, gr.top_k) == (40, 8)
+    assert gr.padded_experts == 48   # 16-way shardable
+
+
+def test_ssm_assignment_details():
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("rwkv6-1.6b").is_attention_free

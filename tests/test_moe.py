@@ -1,0 +1,80 @@
+"""MoE layer: capacity dispatch vs dense oracle, padding, aux loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import moe
+
+
+def _cfg(**kw):
+    return get_smoke_config("deepseek-moe-16b").with_overrides(**kw)
+
+
+def test_capacity_dispatch_matches_dense_when_no_drops():
+    cfg = _cfg(moe_capacity_factor=8.0)
+    key = jax.random.key(0)
+    p = moe.moe_init(key, None, cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    y_sparse, aux_s = moe.moe_apply(p, x, cfg)
+    y_dense, aux_d = moe.moe_apply_dense_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_sparse), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(aux_s), float(aux_d), rtol=1e-5)
+
+
+def test_capacity_drops_reduce_output_norm_not_crash():
+    cfg = _cfg(moe_capacity_factor=0.25)
+    key = jax.random.key(0)
+    p = moe.moe_init(key, None, cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model))
+    y, aux = moe.moe_apply(p, x, cfg)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_expert_padding_never_routed():
+    cfg = _cfg(num_experts=3, top_k=2, expert_pad_to=4, num_shared_experts=0)
+    key = jax.random.key(0)
+    p = moe.moe_init(key, None, cfg)
+    assert p["w_gate"].shape[0] == 4      # padded expert stack
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    logits = jnp.einsum("td,de->te", x.reshape(-1, cfg.d_model),
+                        p["router"])
+    # route via the public apply and check the padded expert's buffer is
+    # never hit: zero its weights to NaN; output must stay finite
+    p_poison = dict(p)
+    for k in ("w_gate", "w_up", "w_down"):
+        arr = np.asarray(p[k]).copy()
+        arr[3] = np.nan
+        p_poison[k] = jnp.asarray(arr)
+    y, _ = moe.moe_apply(p_poison, x, cfg)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_aux_loss_uniform_router_close_to_one():
+    """Perfectly balanced routing drives the switch loss toward 1."""
+    cfg = _cfg(num_shared_experts=0)
+    key = jax.random.key(0)
+    p = dict(moe.moe_init(key, None, cfg))
+    p["router"] = jnp.zeros_like(p["router"])  # uniform probs
+    x = jax.random.normal(jax.random.key(1), (4, 64, cfg.d_model))
+    _, aux = moe.moe_apply(p, x, cfg)
+    assert 0.9 <= float(aux) <= 1.2
+
+
+def test_grads_flow_through_dispatch():
+    cfg = _cfg(moe_capacity_factor=4.0)
+    key = jax.random.key(0)
+    p = moe.moe_init(key, None, cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 16, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe.moe_apply(p, x, cfg)
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    norms = {k: float(jnp.linalg.norm(v.reshape(-1)))
+             for k, v in g.items() if k != "shared"}
+    assert all(np.isfinite(v) for v in norms.values())
+    assert norms["router"] > 0 and norms["w_gate"] > 0

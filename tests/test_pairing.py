@@ -1,0 +1,95 @@
+"""Pairing algorithm (paper Alg. 1) — invariants + baselines + optimality gap."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import latency, pairing
+
+
+def _fleet(n, seed=0):
+    return latency.make_fleet(n=n, seed=seed)
+
+
+CHAN = latency.ChannelModel()
+
+
+class TestGreedyMatching:
+    def test_valid_perfect_matching_even(self):
+        fleet = _fleet(20)
+        pairs = pairing.fedpairing_pairing(fleet, CHAN)
+        pairing.validate_matching(pairs, 20)
+        assert len(pairs) == 10
+
+    def test_odd_leaves_exactly_one_uncovered(self):
+        fleet = _fleet(7)
+        pairs = pairing.fedpairing_pairing(fleet, CHAN)
+        covered = {v for p in pairs for v in p}
+        assert len(covered) == 6 and len(pairs) == 3
+
+    def test_greedy_beats_random_on_weight(self):
+        fleet = _fleet(20)
+        w = pairing.edge_weights(fleet, CHAN)
+
+        def total(pairs):
+            return sum(w[i, j] for i, j in pairs)
+
+        greedy = total(pairing.greedy_pairing(w))
+        rnd = np.mean([total(pairing.random_pairing(20, seed=s))
+                       for s in range(10)])
+        assert greedy > rnd
+
+    def test_greedy_within_half_of_optimal(self):
+        """Descending greedy matching is a classic 1/2-approximation."""
+        fleet = _fleet(14, seed=3)
+        w = pairing.edge_weights(fleet, CHAN)
+
+        def total(pairs):
+            return sum(w[i, j] for i, j in pairs)
+
+        greedy = total(pairing.greedy_pairing(w))
+        opt = total(pairing.optimal_pairing(w))
+        assert greedy >= 0.5 * opt - 1e-9
+        assert greedy <= opt + 1e-9
+
+    def test_partner_permutation_is_involution(self):
+        fleet = _fleet(9)
+        pairs = pairing.fedpairing_pairing(fleet, CHAN)
+        p = pairing.partner_permutation(pairs, 9)
+        assert np.array_equal(p[p], np.arange(9))
+
+    @given(n=st.integers(2, 24), seed=st.integers(0, 100))
+    @settings(max_examples=25, deadline=None)
+    def test_property_matching_validity(self, n, seed):
+        fleet = _fleet(n, seed=seed)
+        w = pairing.edge_weights(fleet, CHAN)
+        pairs = pairing.greedy_pairing(w)
+        pairing.validate_matching(pairs, n)
+        # greedy covers all vertices when n is even (graph is complete)
+        if n % 2 == 0:
+            assert len(pairs) == n // 2
+
+
+class TestBaselinePairings:
+    def test_location_prefers_close_clients(self):
+        fleet = _fleet(10, seed=1)
+        pairs = pairing.location_pairing(fleet, CHAN)
+        d = fleet.distances()
+        rnd = pairing.random_pairing(10, seed=7)
+        assert np.mean([d[i, j] for i, j in pairs]) <= \
+            np.mean([d[i, j] for i, j in rnd])
+
+    def test_compute_prefers_heterogeneous_pairs(self):
+        fleet = _fleet(10, seed=1)
+        pairs = pairing.compute_pairing(fleet, CHAN)
+        f = fleet.cpu_hz
+        rnd = pairing.random_pairing(10, seed=7)
+        assert np.mean([(f[i] - f[j]) ** 2 for i, j in pairs]) >= \
+            np.mean([(f[i] - f[j]) ** 2 for i, j in rnd])
+
+    def test_edge_weights_symmetric_nonneg_diag_minusinf(self):
+        fleet = _fleet(8)
+        w = pairing.edge_weights(fleet, CHAN)
+        assert np.all(np.isneginf(np.diag(w)))
+        off = w[~np.eye(8, dtype=bool)]
+        assert np.all(off >= 0)
+        assert np.allclose(w, w.T)

@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import splitting
+from repro.core.pairing import greedy_pairing, optimal_pairing
+from repro.kernels.ref import fit_chunk
+from repro.models import common
+
+
+@given(st.integers(2, 20))
+@settings(max_examples=20, deadline=None)
+def test_greedy_is_half_approximation_on_random_graphs(n):
+    rng = np.random.default_rng(n)
+    w = rng.uniform(0, 10, (n, n))
+    w = (w + w.T) / 2
+    np.fill_diagonal(w, -np.inf)
+
+    def total(pairs):
+        return sum(w[i, j] for i, j in pairs)
+
+    g = total(greedy_pairing(w))
+    o = total(optimal_pairing(w))
+    assert o + 1e-9 >= g >= 0.5 * o - 1e-9
+
+
+@given(st.integers(1, 512), st.integers(1, 128))
+@settings(max_examples=50, deadline=None)
+def test_fit_chunk_always_divides(s, c):
+    q = fit_chunk(s, c)
+    assert 1 <= q <= min(s, c)
+    assert s % q == 0
+
+
+@given(li=st.integers(0, 12), lp=st.integers(0, 12))
+@settings(max_examples=40, deadline=None)
+def test_overlap_factor_bounds_and_support(li, lp):
+    w = 12
+    mo = splitting.layer_mask(jnp.asarray(li), w)
+    mp = splitting.layer_mask(jnp.asarray(lp), w)
+    f = np.asarray(splitting.overlap_factor(mo, mp, boost=True))
+    assert set(np.unique(f)).issubset({1.0, 2.0})
+    # factor 2 exactly on [lp, li) — both flows touch those blocks
+    expect = np.zeros(w)
+    expect[:li] += 1
+    expect[lp:] += 1
+    np.testing.assert_array_equal(f, np.where(expect == 2, 2.0, 1.0))
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_rope_preserves_norm(pos, half_dim):
+    d = 2 * half_dim
+    x = jnp.asarray(np.random.default_rng(pos % 97).normal(
+        size=(1, 1, 1, d)), jnp.float32)
+    cos, sin = common.rope_cos_sin(jnp.asarray([[pos]]), d, 10000.0)
+    y = common.apply_rope(x, cos[:, :, None, :], sin[:, :, None, :])
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_rms_norm_unit_scale(d):
+    rng = np.random.default_rng(d)
+    x = jnp.asarray(rng.normal(size=(3, d)) * rng.uniform(0.1, 100),
+                    jnp.float32)
+    y = common.rms_norm(x, jnp.ones((d,)))
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+@given(st.integers(2, 50))
+@settings(max_examples=20, deadline=None)
+def test_uniform_logits_cross_entropy_is_log_v(v):
+    logits = jnp.zeros((2, 3, v))
+    labels = jnp.zeros((2, 3), jnp.int32)
+    loss = common.cross_entropy_logits(logits, labels)
+    np.testing.assert_allclose(float(loss), np.log(v), rtol=1e-5)
+
+
+def test_attention_convex_hull_constant_values():
+    """softmax(QK)V with constant V must return exactly V."""
+    from repro.kernels.ref import attention_ref
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (1, 8, 2, 16))
+    k = jax.random.normal(jax.random.key(1), (1, 8, 2, 16))
+    v = jnp.ones((1, 8, 2, 16)) * 3.5
+    out = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 3.5, rtol=1e-5)
+
+
+@given(st.lists(st.floats(0.01, 0.99), min_size=2, max_size=6))
+@settings(max_examples=25, deadline=None)
+def test_mix_params_is_convex_in_mask(fracs):
+    """mix(own, partner) with 0/1 masks always returns leaves of one side."""
+    n = len(fracs)
+    params = {"embed": jnp.ones((2, 2)), "blocks": {"w": jnp.ones((n, 2))},
+              "ln_f": jnp.ones((2,)), "unembed": jnp.ones((2, 2))}
+
+    class C:
+        name = "c"
+
+    plan = splitting.split_plan(C(), params)
+    own = jax.tree_util.tree_map(lambda a: a * 0 + 1, params)
+    other = jax.tree_util.tree_map(lambda a: a * 0 + 5, params)
+    for li in range(n + 1):
+        mask = splitting.layer_mask(jnp.asarray(li), n)
+        mix = splitting.mix_params(own, other, plan, mask)
+        vals = np.unique(np.asarray(mix["blocks"]["w"]))
+        assert set(vals).issubset({1.0, 5.0})

@@ -1,0 +1,120 @@
+"""Propagation lengths, masks, overlap factors, mix/route algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pairing, splitting
+
+
+class TestPropagationLengths:
+    def test_pair_lengths_sum_to_w(self):
+        f = np.array([2.0, 0.5, 1.0, 1.0])
+        partner = np.array([1, 0, 3, 2])
+        L = splitting.propagation_lengths(f, partner, 10)
+        assert L[0] + L[1] == 10 and L[2] + L[3] == 10
+
+    def test_faster_client_gets_longer_part(self):
+        f = np.array([1.9, 0.1])
+        L = splitting.propagation_lengths(f, np.array([1, 0]), 10)
+        assert L[0] > L[1] and L[0] >= 9
+
+    def test_self_pair_gets_full_stack(self):
+        f = np.array([1.0])
+        L = splitting.propagation_lengths(f, np.array([0]), 8)
+        assert L[0] == 8
+
+    def test_clamped_to_at_least_one(self):
+        f = np.array([1e9, 1.0])
+        L = splitting.propagation_lengths(f, np.array([1, 0]), 10)
+        assert L.min() >= 1 and L.max() <= 9
+
+    @given(n=st.integers(2, 16), w=st.integers(2, 40), seed=st.integers(0, 50))
+    @settings(max_examples=30, deadline=None)
+    def test_property_lengths(self, n, w, seed):
+        rng = np.random.default_rng(seed)
+        f = rng.uniform(0.1, 2.0, n)
+        perm = rng.permutation(n)
+        partner = np.arange(n)
+        for k in range(0, n - 1, 2):
+            partner[perm[k]], partner[perm[k + 1]] = perm[k + 1], perm[k]
+        L = splitting.propagation_lengths(f, partner, w)
+        for i in range(n):
+            j = partner[i]
+            if i == j:
+                assert L[i] == w
+            else:
+                assert L[i] + L[j] == w
+                assert 1 <= L[i] <= w - 1
+
+
+class TestMasksAndOverlap:
+    def test_layer_mask(self):
+        m = splitting.layer_mask(jnp.asarray(3), 6)
+        assert m.tolist() == [1, 1, 1, 0, 0, 0]
+
+    def test_overlap_factor_doubles_crossed_layers(self):
+        # L_own=4, L_partner=2, W=6: partner's flow uses my layers [2,6);
+        # my flow uses [0,4) -> overlap [2,4)
+        m_own = splitting.layer_mask(jnp.asarray(4), 6)
+        m_part = splitting.layer_mask(jnp.asarray(2), 6)
+        f = splitting.overlap_factor(m_own, m_part, boost=True)
+        assert f.tolist() == [1, 1, 2, 2, 1, 1]
+
+    def test_overlap_factor_disabled(self):
+        m = splitting.layer_mask(jnp.asarray(4), 6)
+        f = splitting.overlap_factor(m, splitting.layer_mask(jnp.asarray(2), 6),
+                                     boost=False)
+        assert f.tolist() == [1] * 6
+
+    def test_no_overlap_when_partner_covers_rest(self):
+        # equal split, W even: own [0,3), partner's top [3,6) -> no overlap
+        m = splitting.layer_mask(jnp.asarray(3), 6)
+        f = splitting.overlap_factor(m, m, boost=True)
+        assert f.tolist() == [1] * 6
+
+
+class TestMixAndRoute:
+    def _setup(self):
+        params = {"embed": jnp.ones((3, 2)),
+                  "blocks": {"w": jnp.ones((4, 2, 2))},
+                  "ln_f": jnp.ones((2,)),
+                  "unembed": jnp.ones((2, 3))}
+
+        class FakeCfg:
+            name = "fake"
+
+        plan = splitting.split_plan(FakeCfg(), params)
+        return params, plan
+
+    def test_mix_selects_bottom_own_top_partner(self):
+        params, plan = self._setup()
+        own = jax.tree_util.tree_map(lambda a: a * 0 + 1.0, params)
+        part = jax.tree_util.tree_map(lambda a: a * 0 + 2.0, params)
+        mask = splitting.layer_mask(jnp.asarray(2), 4)
+        mix = splitting.mix_params(own, part, plan, mask)
+        assert float(mix["embed"][0, 0]) == 1.0          # bottom: own
+        assert float(mix["unembed"][0, 0]) == 2.0        # top: partner
+        assert mix["blocks"]["w"][:, 0, 0].tolist() == [1, 1, 2, 2]
+
+    def test_route_partitions_gradient(self):
+        params, plan = self._setup()
+        g = jax.tree_util.tree_map(jnp.ones_like, params)
+        mask = splitting.layer_mask(jnp.asarray(1), 4)
+        own, part = splitting.route_gradients(g, plan, mask)
+        # every leaf: own + partner == original gradient
+        total = jax.tree_util.tree_map(lambda a, b: a + b, own, part)
+        for l1, l2 in zip(jax.tree_util.tree_leaves(total),
+                          jax.tree_util.tree_leaves(g)):
+            np.testing.assert_allclose(l1, l2)
+        assert float(own["unembed"].sum()) == 0.0
+        assert float(part["embed"].sum()) == 0.0
+        assert own["blocks"]["w"][:, 0, 0].tolist() == [1, 0, 0, 0]
+
+    def test_unknown_param_group_raises(self):
+        class FakeCfg:
+            name = "fake"
+
+        with pytest.raises(KeyError):
+            splitting.split_plan(FakeCfg(), {"mystery": jnp.ones(3)})
