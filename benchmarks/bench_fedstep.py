@@ -1,0 +1,127 @@
+"""Fed-step wall time — dense-masked vs length-bucketed split execution.
+
+The execution-layer claim behind DESIGN.md §Perf: splitting at L_i means a
+client should pay 2·L_i block applications per step, yet the dense-masked
+step scans the full stack twice (2·W) behind gates.  This benchmark builds
+both steps from the same engine (``core.fedbucket``) on homogeneous,
+mildly heterogeneous and extreme (L=1 vs W-1) fleets, measures step wall
+time on the CPU xla impl, and reports achieved-vs-ideal speedup (ideal =
+dense blocks / protocol blocks = 2x for any perfectly paired fleet).
+
+Besides the CSV rows it writes machine-readable ``BENCH_fedstep.json`` at
+the repo root so the perf trajectory is tracked across PRs (``tiny=True``
+smoke runs write ``BENCH_fedstep_tiny.json`` instead, so CI never
+clobbers the tracked record with shrunken-config numbers):
+
+    {"w": .., "clients": .., "fleets": {"<name>": {"dense_ms": ..,
+      "bucketed_ms": .., "speedup": .., "ideal_speedup": ..,
+      "flops_efficiency": .., "compiled_shapes": ..}, ...}}
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import fedbucket, fedpair
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_ROOT, "BENCH_fedstep.json")
+# tiny (smoke/CI) runs write elsewhere so they never clobber the tracked
+# per-PR perf record with shrunken-config numbers
+TINY_JSON_PATH = os.path.join(_ROOT, "BENCH_fedstep_tiny.json")
+
+
+def _fleet(kind: str, n: int, W: int):
+    """Pairing involution + per-pair lengths summing to W."""
+    partner = np.array([i ^ 1 for i in range(n)])
+    half = W // 2
+    if kind == "homogeneous":
+        lengths = np.full(n, half)
+    elif kind == "mild_het":
+        delta = max(1, W // 8)
+        lengths = np.array([half - delta if i % 2 == 0 else
+                            W - (half - delta) for i in range(n)])
+    elif kind == "extreme":
+        lengths = np.array([1 if i % 2 == 0 else W - 1 for i in range(n)])
+    else:
+        raise ValueError(kind)
+    return partner, lengths
+
+
+def _time_step(step, params, batch, iters: int) -> float:
+    """Mean step seconds; the step donates params, so thread them."""
+    params, m = step(params, batch)            # compile + first call
+    jax.block_until_ready(params)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        params, m = step(params, batch)
+    jax.block_until_ready(params)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(tiny: bool = False, json_path: str = "") -> List[Dict]:
+    json_path = json_path or (TINY_JSON_PATH if tiny else JSON_PATH)
+    W = 4 if tiny else 18
+    n = 4 if tiny else 8
+    B, S = (1, 32) if tiny else (2, 128)
+    iters = 2 if tiny else 3
+    cfg = get_smoke_config("tinyllama-1.1b").with_overrides(num_layers=W)
+
+    from repro.models import registry
+
+    key = jax.random.key(0)
+    gparams = registry.init_params(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (n, B, S), 0, cfg.vocab_size)}
+    batch["labels"] = batch["tokens"]
+
+    rows, report = [], {}
+    for kind in ("homogeneous", "mild_het", "extreme"):
+        partner, lengths = _fleet(kind, n, W)
+        agg_w = fedpair.pair_weights(np.ones(n), partner)
+        step_d, _ = fedbucket.make_bucketed_fed_step(
+            cfg, partner, lengths, agg_w,
+            fedbucket.FedBucketConfig(dense=True))
+        step_b, plan = fedbucket.make_bucketed_fed_step(
+            cfg, partner, lengths, agg_w, fedbucket.FedBucketConfig())
+
+        t_dense = _time_step(step_d, fedpair.replicate(gparams, n), batch,
+                             iters)
+        t_bucket = _time_step(step_b, fedpair.replicate(gparams, n), batch,
+                              iters)
+
+        speedup = t_dense / t_bucket
+        ideal = plan.dense_blocks / plan.protocol_blocks
+        entry = {
+            "dense_ms": round(t_dense * 1e3, 2),
+            "bucketed_ms": round(t_bucket * 1e3, 2),
+            "speedup": round(speedup, 3),
+            "ideal_speedup": round(ideal, 3),
+            "flops_efficiency": round(plan.protocol_blocks
+                                      / plan.scanned_blocks, 3),
+            "dense_blocks": plan.dense_blocks,
+            "scanned_blocks": plan.scanned_blocks,
+            "protocol_blocks": plan.protocol_blocks,
+            "compiled_shapes": plan.num_compiled_shapes,
+        }
+        report[kind] = entry
+        rows.append({
+            "name": f"fedstep/{kind}",
+            "us_per_call": t_bucket * 1e6,
+            "derived": f"speedup={speedup:.2f}x ideal={ideal:.2f}x "
+                       f"dense_ms={entry['dense_ms']} "
+                       f"shapes={entry['compiled_shapes']}",
+        })
+
+    with open(json_path, "w") as f:
+        json.dump({"w": W, "clients": n, "batch": B, "seq": S,
+                   "iters": iters, "tiny": tiny,
+                   "backend": jax.default_backend(), "fleets": report},
+                  f, indent=2)
+        f.write("\n")
+    return rows

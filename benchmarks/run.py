@@ -1,23 +1,31 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Benchmark harness — one module per paper table/figure + perf suites.
 
 Prints ``name,us_per_call,derived`` CSV rows:
   * table1/*  — pairing-mechanism round times   (paper Table I)
   * table2/*  — algorithm round times           (paper Table II)
   * fig2/*,fig3/* — convergence IID / Non-IID   (paper Figs. 2-3)
   * kernel/*  — kernel micro-benchmarks (framework)
+  * fedstep/* — dense-masked vs length-bucketed fed step (DESIGN.md
+                §Perf); also writes machine-readable ``BENCH_fedstep.json``
+                at the repo root so the perf trajectory is tracked per PR.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
+       [--tiny]   (shrunken workloads — CI smoke via scripts/bench_smoke.sh)
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: pairing,roundtime,convergence,kernels")
+                    help="comma list: pairing,roundtime,convergence,kernels,"
+                         "fedstep")
+    ap.add_argument("--tiny", action="store_true",
+                    help="shrink workloads (smoke/CI; applies to fedstep)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -34,6 +42,9 @@ def main() -> None:
     if only is None or "kernels" in only:
         from benchmarks import bench_kernels
         suites.append(bench_kernels.run)
+    if only is None or "fedstep" in only:
+        from benchmarks import bench_fedstep
+        suites.append(functools.partial(bench_fedstep.run, tiny=args.tiny))
 
     print("name,us_per_call,derived")
     for run in suites:

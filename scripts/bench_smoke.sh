@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Benchmark bit-rot guard (tier-1 flow): tiny-config fedstep + roundtime
+# suites must exit 0 and emit valid machine-readable JSON.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only fedstep,roundtime --tiny
+
+python - <<'PY'
+import json, sys
+with open("BENCH_fedstep_tiny.json") as f:   # --tiny writes its own file
+    d = json.load(f)
+fleets = d.get("fleets", {})
+assert {"homogeneous", "mild_het", "extreme"} <= set(fleets), fleets.keys()
+for name, e in fleets.items():
+    for key in ("dense_ms", "bucketed_ms", "speedup", "ideal_speedup",
+                "compiled_shapes"):
+        assert key in e, (name, key)
+    assert e["bucketed_ms"] > 0, (name, e)
+print("bench_smoke: BENCH_fedstep_tiny.json OK "
+      f"(speedups: {[e['speedup'] for e in fleets.values()]})")
+PY

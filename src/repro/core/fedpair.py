@@ -4,10 +4,10 @@ Semantics (pair (i, j), propagation lengths L_i + L_j = W):
 
 * flow_i (client i's data): blocks [0,L_i) + embedding from ω^i, blocks
   [L_i,W) + head from ω^j.  Implemented as a differentiable parameter *mix*
-  (``core.splitting.mix_params``) — autodiff through the mix routes each
-  flow's gradient to the correct owner, which reproduces the paper's
-  split-learning gradient hand-back exactly (the boundary-gradient transfer
-  is the transpose of the mix/select).
+  (the ``core.splitting.mix_params`` algebra) — autodiff through the mix
+  routes each flow's gradient to the correct owner, which reproduces the
+  paper's split-learning gradient hand-back exactly (the boundary-gradient
+  transfer is the transpose of the mix/select).
 * updates (Eq. 1/2):  ω^i -= η·factor·(a_i·g^i_own + a_j·g^j_incoming),
   where g^j_incoming is the part of partner j's flow gradient that lives on
   ω^i's blocks [L_j, W) — obtained by indexing the vmapped gradient output
@@ -17,12 +17,22 @@ Semantics (pair (i, j), propagation lengths L_i + L_j = W):
 Self-paired clients (odd N) degenerate to plain local SGD automatically:
 partner == self makes the mix the identity and both gradient terms the
 client's own.
+
+Perf notes (DESIGN.md §Perf): the step fuses the partner gather into the
+mix (the partner parameter tree is never materialized as a second full
+copy), fuses the gradient routing + involution return + Eq. (7) overlap
+factor into the single SGD parameter write, and donates the client-param
+buffers so the fleet updates in place.  A step therefore consumes the
+parameter tree you pass it — thread the returned tree forward, or build
+the step with ``FedPairingConfig(donate=False)`` to keep inputs alive.
+For length-bucketed execution that also skips the gated-off blocks' FLOPs
+entirely, see ``core.fedbucket``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +67,7 @@ class FedPairingConfig:
     aggregation: str = "paper"          # "paper": pre-weighted grads + mean
                                         # "fedavg": plain grads + weighted mean
     momentum: float = 0.0
+    donate: bool = True                 # in-place client-param update
 
 
 def replicate(params: Dict, n: int) -> Dict:
@@ -65,69 +76,68 @@ def replicate(params: Dict, n: int) -> Dict:
         lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), params)
 
 
-def _apply_factor(update: Dict, plan: Dict, factor: jnp.ndarray) -> Dict:
-    """Multiply stacked-block leaves by the per-block overlap factor."""
-
-    def f(g, label):
-        if label != "stack":
-            return g
-        return g * factor.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
-
-    return jax.tree_util.tree_map(f, update, plan)
-
-
 def make_fed_step(loss_fn: LossFn, plan: Dict, num_layers: int,
                   fed_cfg: FedPairingConfig):
     """Build the jitted per-batch FedPairing step.
 
     Returns ``step(client_params, batches, partner, lengths, agg_w)`` where
-    * client_params — pytree stacked over N clients,
+    * client_params — pytree stacked over N clients (donated unless
+      ``fed_cfg.donate`` is False),
     * batches       — pytree stacked over N clients (one mini-batch each),
     * partner       — (N,) int32 pairing involution,
     * lengths       — (N,) int32 propagation lengths L_i,
     * agg_w         — (N,) float aggregation weights a_i.
     """
 
-    def flow(own, partner_p, batch, mask):
-        mix = splitting.mix_params(own, partner_p, plan, mask)
-        loss, g_mix = jax.value_and_grad(loss_fn)(mix, batch)
-        g_own, g_out = splitting.route_gradients(g_mix, plan, mask)
-        return loss, g_own, g_out
+    def _bmask(masks, a):
+        """(N, W) mask broadcast against a stacked (N, W, ...) leaf."""
+        return masks.astype(a.dtype).reshape(masks.shape + (1,) * (a.ndim - 2))
 
-    @jax.jit
+    @functools.partial(jax.jit,
+                       donate_argnums=(0,) if fed_cfg.donate else ())
     def step(client_params, batches, partner, lengths, agg_w):
         n = partner.shape[0]
         masks = jax.vmap(splitting.layer_mask, in_axes=(0, None))(
             lengths, num_layers)                                 # (N, W)
-        partner_params = jax.tree_util.tree_map(
-            lambda a: a[partner], client_params)
-        losses, g_own, g_out = jax.vmap(flow)(client_params, partner_params,
-                                              batches, masks)
-        # route each flow's outgoing gradient to its partner (involution)
-        g_in = jax.tree_util.tree_map(lambda g: g[partner], g_out)
+        masks_p = masks[partner]
+
+        # fused gather+mix: bottom/stack[<L] from own, rest from the
+        # partner — gathered leaf-wise, never held as a full partner tree.
+        def mix(a, label):
+            if label == "bottom":
+                return a
+            if label == "top":
+                return a[partner]
+            m = _bmask(masks, a)
+            return a * m + a[partner] * (1.0 - m)
+
+        mixed = jax.tree_util.tree_map(mix, client_params, plan)
+        losses, g_mix = jax.vmap(jax.value_and_grad(loss_fn))(mixed, batches)
 
         if fed_cfg.aggregation == "paper":
             a_own, a_in = agg_w, agg_w[partner]
         else:  # weighting deferred to the server aggregation
             a_own = a_in = jnp.ones_like(agg_w)
-
-        def combine(go, gi):
-            bshape = (n,) + (1,) * (go.ndim - 1)
-            return (a_own.reshape(bshape) * go + a_in.reshape(bshape) * gi)
-
-        update = jax.tree_util.tree_map(combine, g_own, g_in)
         factor = jax.vmap(splitting.overlap_factor, in_axes=(0, 0, None))(
-            masks, masks[partner], fed_cfg.overlap_boost)        # (N, W)
+            masks, masks_p, fed_cfg.overlap_boost)               # (N, W)
 
-        def apply(p, u, label):
-            if label == "stack":
-                f = factor.astype(u.dtype).reshape(
-                    (n, -1) + (1,) * (u.ndim - 2))
-                u = u * f
+        # fused route + involution return + combine + Eq. (7) factor + SGD:
+        # g*m is the flow gradient on own blocks, (g*(1-m))[partner] ==
+        # g[partner]*(1-m[partner]) is the partner flow's gradient on them.
+        def apply(p, g, label):
+            b = (n,) + (1,) * (g.ndim - 1)
+            if label == "bottom":
+                u = a_own.reshape(b) * g
+            elif label == "top":
+                u = a_in.reshape(b) * g[partner]
+            else:
+                m = _bmask(masks, g)
+                u = (a_own.reshape(b) * (g * m)
+                     + a_in.reshape(b) * (g[partner] * (1.0 - _bmask(masks_p, g))))
+                u = u * _bmask(factor, g).astype(u.dtype)
             return p - fed_cfg.lr * u
 
-        vplan = jax.tree_util.tree_map(lambda l: l, plan)
-        new_params = jax.tree_util.tree_map(apply, client_params, update, vplan)
+        new_params = jax.tree_util.tree_map(apply, client_params, g_mix, plan)
         return new_params, {"loss": losses}
 
     return step

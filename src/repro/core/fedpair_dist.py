@@ -22,15 +22,22 @@ Supported families: dense / MoE / SSM (token-LM block stacks).  Hybrid,
 VLM and enc-dec run under the vmapped functional core (fedpair.py), which
 is semantically identical — see DESIGN.md §4.
 
-Homogeneous-mesh specialization (beyond-paper, §Perf): on an all-equal
-fleet the split rule degenerates to L_i = W/2 for every pair, the gates
-become static, and each phase can scan only half the stack —
-``static_half_split=True`` halves the compute term of the fed step.
+Static split ranges (beyond-paper, DESIGN.md §Perf): shard_map is SPMD —
+one program for every device — so per-client static slicing is out, but a
+*uniform* slice is not: ``split_ranges=(bottom_hi, top_lo)`` (from
+``fedbucket.fleet_phase_ranges``) scans only blocks [0, bottom_hi) in
+phase A and [top_lo, W) in phase B, gating the per-client residual inside
+the slice.  On an all-equal fleet this degenerates to L_i = W/2 and the
+gates vanish — the old ``static_half_split`` fast path, kept as an alias —
+halving the compute term of the fed step; mildly heterogeneous fleets
+still save everything outside the fleet's [min, max] split envelope.
+
+The jitted step donates the client-parameter buffers (params update in
+place); pass ``donate=False`` to keep the input tree alive.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -38,63 +45,27 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ArchFamily
-from repro.models import common, rwkv6, transformer
+from repro.configs.base import ArchConfig
+from repro.core import fedbucket
+from repro.models import common, transformer
+
+# shared flow pieces live in fedbucket (the bucketing engine); these
+# aliases keep the historical private names importable.
+_stack_gated = fedbucket.stack_gated
+_ce = fedbucket.ce
+_ce_chunked = fedbucket.ce_chunked
 
 
 @dataclasses.dataclass(frozen=True)
 class FedDistConfig:
     lr: float = 0.1
     overlap_boost: bool = True
-    static_half_split: bool = False   # homogeneous-mesh fast path
+    static_half_split: bool = False   # alias for split_ranges=(W/2, W/2)
+    split_ranges: Optional[Tuple[int, int]] = None  # (bottom_hi, top_lo)
     client_axes: Tuple[str, ...] = ("data",)
     unroll: int = 1                   # dry-run cost analysis needs full unroll
     ce_chunk: int = 0                 # >0: chunked head+CE (memory term)
-
-
-def _stack_gated(params_blocks, x, cos, sin, cfg: ArchConfig,
-                 gates: jnp.ndarray, n_layers: int, unroll=1):
-    if cfg.family == ArchFamily.SSM:
-        def body(xc, scanned):
-            p_l, g = scanned
-            return rwkv6.rwkv_block_apply(p_l, xc, cfg, g.astype(xc.dtype)), None
-
-        x, _ = jax.lax.scan(body, x, (params_blocks, gates), unroll=unroll)
-        return x, jnp.zeros((), jnp.float32)
-    return transformer.stack_apply(params_blocks, x, cos, sin, cfg,
-                                   gates=gates, n_layers=n_layers,
-                                   unroll=unroll)
-
-
-def _ce(logits: jnp.ndarray, labels: jnp.ndarray, vocab: int) -> jnp.ndarray:
-    logits = logits.astype(jnp.float32)
-    if vocab < logits.shape[-1]:
-        pad = jnp.full(logits.shape[:-1] + (logits.shape[-1] - vocab,), -1e30,
-                       logits.dtype)
-        logits = jnp.concatenate([logits[..., :vocab], pad], axis=-1)
-    logz = jax.nn.logsumexp(logits, axis=-1)
-    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
-    return jnp.mean(logz - gold)
-
-
-def _ce_chunked(params, h: jnp.ndarray, labels: jnp.ndarray,
-                cfg: ArchConfig, chunk: int) -> jnp.ndarray:
-    """Head + CE over sequence chunks; never materializes (B,S,V) fp32."""
-    B, S, D = h.shape
-    C = chunk
-    while S % C:
-        C -= 1
-    nc = S // C
-    h_c = h.reshape(B, nc, C, D).transpose(1, 0, 2, 3)
-    l_c = labels.reshape(B, nc, C).transpose(1, 0, 2)
-
-    def body(acc, xs):
-        hc, lc = xs
-        logits = transformer.lm_logits(params, hc, cfg)
-        return acc + _ce(logits, lc, cfg.vocab_size), None
-
-    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h_c, l_c))
-    return tot / nc
+    donate: bool = True               # in-place client-param update
 
 
 def make_dist_fed_step(cfg: ArchConfig, mesh, perm_pairs: Sequence[Tuple[int, int]],
@@ -111,7 +82,32 @@ def make_dist_fed_step(cfg: ArchConfig, mesh, perm_pairs: Sequence[Tuple[int, in
     axes = dist_cfg.client_axes
     n_clients = len(agg_w)
     W = cfg.num_layers
-    half = W // 2
+
+    if dist_cfg.static_half_split:
+        bot_hi, top_lo = W // 2, W // 2
+    elif dist_cfg.split_ranges is not None:
+        bot_hi, top_lo = dist_cfg.split_ranges
+    else:
+        bot_hi, top_lo = W, 0
+    if not (1 <= bot_hi <= W and 0 <= top_lo <= W):
+        raise ValueError(f"split_ranges must satisfy 1 <= bottom_hi <= W and "
+                         f"0 <= top_lo <= W; got ({bot_hi}, {top_lo}), W={W}")
+    # a sliced envelope must cover every client's protocol blocks: bottom
+    # [0, L_i) and top [L_p, W) — skipping owned blocks would silently
+    # change training semantics, so refuse rather than truncate.
+    lengths_np = np.asarray(masks_bottom).sum(axis=1).astype(np.int64)
+    inv_np = np.arange(n_clients)
+    for s, d in perm_pairs:
+        inv_np[d] = s
+    max_l, min_lp = int(lengths_np.max()), int(lengths_np[inv_np].min())
+    if bot_hi < max_l or top_lo > min_lp:
+        raise ValueError(
+            f"split ranges (bottom [0, {bot_hi}), top [{top_lo}, {W})) do "
+            f"not cover the fleet's splits (max L_i={max_l}, min "
+            f"L_p={min_lp}); derive them with fedbucket.fleet_phase_ranges "
+            "or widen the envelope.")
+    # the homogeneous alias runs ungated; sliced ranges gate the residual
+    static_gates = dist_cfg.static_half_split
 
     masks_bottom_j = jnp.asarray(masks_bottom, jnp.float32)
     agg_w_j = jnp.asarray(agg_w, jnp.float32)
@@ -131,29 +127,23 @@ def make_dist_fed_step(cfg: ArchConfig, mesh, perm_pairs: Sequence[Tuple[int, in
         cos, sin = common.rope_cos_sin(pos, max(cfg.resolved_head_dim, 2),
                                        cfg.rope_theta)
 
-        if dist_cfg.static_half_split:
-            # homogeneous fleet: static L=W/2 -> scan only the needed halves
-            bottom = jax.tree_util.tree_map(lambda a: a[:half], own["blocks"])
-            top = jax.tree_util.tree_map(lambda a: a[half:], own["blocks"])
-            h_bot, aux_b = _stack_gated(bottom, x, cos, sin, cfg,
-                                        jnp.ones((half,)), half,
-                                        unroll=dist_cfg.unroll)
-        else:
-            h_bot, aux_b = _stack_gated(own["blocks"], x, cos, sin, cfg,
-                                        mask_own, W, unroll=dist_cfg.unroll)
+        bottom = (own["blocks"] if bot_hi == W else
+                  jax.tree_util.tree_map(lambda a: a[:bot_hi], own["blocks"]))
+        gates_bot = (jnp.ones((bot_hi,)) if static_gates
+                     else mask_own[:bot_hi])
+        h_bot, aux_b = _stack_gated(bottom, x, cos, sin, cfg, gates_bot,
+                                    bot_hi, unroll=dist_cfg.unroll)
 
         # ---- the paper's x̄ / label handoff: one collective-permute ----
         h_in = jax.lax.ppermute(h_bot, axes, perm_pairs)
         labels_in = jax.lax.ppermute(labels, axes, perm_pairs)
 
-        if dist_cfg.static_half_split:
-            h_top, aux_t = _stack_gated(top, h_in, cos, sin, cfg,
-                                        jnp.ones((W - half,)), W - half,
-                                        unroll=dist_cfg.unroll)
-        else:
-            h_top, aux_t = _stack_gated(own["blocks"], h_in, cos, sin, cfg,
-                                        1.0 - mask_perm, W,
-                                        unroll=dist_cfg.unroll)
+        top = (own["blocks"] if top_lo == 0 else
+               jax.tree_util.tree_map(lambda a: a[top_lo:], own["blocks"]))
+        gates_top = (jnp.ones((W - top_lo,)) if static_gates
+                     else (1.0 - mask_perm)[top_lo:])
+        h_top, aux_t = _stack_gated(top, h_in, cos, sin, cfg, gates_top,
+                                    W - top_lo, unroll=dist_cfg.unroll)
 
         if dist_cfg.ce_chunk:
             loss = _ce_chunked(own, h_top, labels_in, cfg, dist_cfg.ce_chunk)
@@ -190,8 +180,7 @@ def make_dist_fed_step(cfg: ArchConfig, mesh, perm_pairs: Sequence[Tuple[int, in
     factor = 1.0 + (masks_bottom_j * (1.0 - masks_perm)
                     if dist_cfg.overlap_boost else 0.0)        # (N, W)
 
-    @jax.jit
-    def step(client_params, batch):
+    def _step(client_params, batch):
         loss, grads = jax.value_and_grad(total_loss)(
             client_params, batch, masks_bottom_j, masks_perm, a_perm)
 
@@ -207,6 +196,8 @@ def make_dist_fed_step(cfg: ArchConfig, mesh, perm_pairs: Sequence[Tuple[int, in
                                                       grads)
         return new_params, loss
 
+    step = jax.jit(_step,
+                   donate_argnums=(0,) if dist_cfg.donate else ())
     return step
 
 

@@ -128,13 +128,3 @@ def route_gradients(grads_mix: Dict, plan: Dict, mask: jnp.ndarray
     own = jax.tree_util.tree_map(to_own, grads_mix, plan)
     partner = jax.tree_util.tree_map(to_partner, grads_mix, plan)
     return own, partner
-
-
-def stack_factor_tree(plan: Dict, factor: jnp.ndarray) -> Dict:
-    """Broadcast the per-block overlap factor over the plan: non-stack
-    leaves get factor 1."""
-
-    def f(label):
-        return factor if label == "stack" else jnp.ones(())
-
-    return jax.tree_util.tree_map(f, plan)

@@ -84,16 +84,37 @@ def ssd_decode(state: jnp.ndarray, x: jnp.ndarray, log_decay: jnp.ndarray,
 # RWKV6 WKV
 # ---------------------------------------------------------------------------
 
+WKV6_MIN_KERNEL_CHUNK = 64   # Pallas kernel tiles the sequence in 64 lanes
+
+
+def wkv6_effective_chunk(chunk: int, impl: Optional[str] = None) -> int:
+    """The chunk size ``wkv6`` actually runs with under ``impl``.
+
+    The Pallas kernel requires sequence tiles of at least
+    ``WKV6_MIN_KERNEL_CHUNK`` lanes, so smaller requests are coerced up
+    (the WKV recurrence is chunk-size invariant — only the memory/latency
+    trade moves).  The xla reference honors the request exactly.
+    """
+    which = resolve_impl(impl)
+    if which == "xla":
+        return chunk
+    return max(chunk, WKV6_MIN_KERNEL_CHUNK)
+
+
 def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, log_w: jnp.ndarray,
          u: jnp.ndarray, *, chunk: int = 16,
          initial_state: Optional[jnp.ndarray] = None,
          impl: Optional[str] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``chunk`` is a request: the Pallas paths run with
+    ``wkv6_effective_chunk(chunk, impl)`` (coerced up to the kernel's
+    64-lane minimum tile), the xla path with ``chunk`` as given."""
     which = resolve_impl(impl)
     if which == "xla":
         return ref.wkv6_chunked_ref(r, k, v, log_w, u, chunk=chunk,
                                     initial_state=initial_state)
     from repro.kernels import wkv6 as wkv6_kernel
-    return wkv6_kernel.wkv6(r, k, v, log_w, u, chunk=max(chunk, 64),
+    return wkv6_kernel.wkv6(r, k, v, log_w, u,
+                            chunk=wkv6_effective_chunk(chunk, which),
                             initial_state=initial_state,
                             interpret=(which == "pallas_interpret"))
 

@@ -55,6 +55,24 @@ def fit_chunk(seq_len: int, chunk: int) -> int:
     return c
 
 
+def ce_chunk_size(seq_len: int, chunk: int) -> int:
+    """``fit_chunk`` with a sanity floor for the chunked-CE head.
+
+    Raises when the best divisor degrades below a quarter of the request
+    (e.g. prime seq lengths end at C=1, which silently destroys the
+    memory/perf win chunking exists for).
+    """
+    c = fit_chunk(seq_len, chunk)
+    floor = max(1, min(chunk, seq_len) // 4)
+    if c < floor:
+        raise ValueError(
+            f"ce_chunk={chunk} is incompatible with seq_len={seq_len}: the "
+            f"largest divisor <= chunk is {c} (< floor {floor}), which "
+            "degrades the chunked head to near token-at-a-time.  Pick a "
+            "chunk sharing a factor with the sequence length.")
+    return c
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 SSD
 # ---------------------------------------------------------------------------

@@ -2,9 +2,15 @@
 
 Simulates a heterogeneous client fleet, runs the greedy pairing, and trains
 per-client models with the split-learning step + per-round aggregation.
-Two execution engines:
+Three execution engines:
 
 * ``vmapped`` (default) — functional parameter-mix core (all families).
+* ``bucketed``          — length-bucketed split execution (token-LM
+                          families): clients grouped by (L_i, W-L_p) scan
+                          only their sliced block ranges, paying the
+                          protocol's FLOPs instead of the full stack
+                          (DESIGN.md §Perf; ``--bucket-granularity`` trades
+                          wasted blocks against compiled shapes).
 * ``dist``              — shard_map + ppermute over real local devices
                           (token-LM families); set
                           ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
@@ -38,7 +44,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--engine", choices=["vmapped", "dist"], default="vmapped")
+    ap.add_argument("--engine", choices=["vmapped", "bucketed", "dist"],
+                    default="vmapped")
+    ap.add_argument("--bucket-granularity", type=int, default=1,
+                    help="round split lengths to multiples of this when "
+                         "bucketing (1 = exact; larger = fewer compiles)")
     ap.add_argument("--no-overlap-boost", action="store_true")
     ap.add_argument("--aggregation", choices=["paper", "fedavg"],
                     default="paper")
@@ -86,8 +96,33 @@ def main() -> None:
         lr=args.lr, overlap_boost=not args.no_overlap_boost,
         aggregation=args.aggregation)
 
+    if args.engine == "bucketed":
+        from repro.core import fedbucket
+        bcfg = fedbucket.FedBucketConfig(
+            lr=args.lr, overlap_boost=not args.no_overlap_boost,
+            aggregation=args.aggregation,
+            bucket_granularity=args.bucket_granularity)
+        step, bplan = fedbucket.make_bucketed_fed_step(
+            cfg, partner, lengths, agg_w, bcfg)
+        print(f"[fed] bucketed: {len(bplan.bottom)}+{len(bplan.top)} phase "
+              f"groups, <= {bplan.num_compiled_shapes} compiled scan shapes, "
+              f"{bplan.scanned_blocks} scanned vs {bplan.dense_blocks} dense "
+              f"blocks/step (protocol {bplan.protocol_blocks})")
+        for r in range(args.rounds):
+            t0 = time.time()
+            losses = []
+            for _ in range(args.batches_per_round):
+                cparams, m = step(cparams, next_batches())
+                losses.append(float(m["loss"].mean()))
+            g = aggregation.aggregate(cparams, jnp.asarray(agg_w),
+                                      args.aggregation)
+            cparams = aggregation.broadcast(g, n)
+            print(f"  round {r}: mean client loss {np.mean(losses):.4f} "
+                  f"({time.time()-t0:.1f}s wall)")
+        return
+
     if args.engine == "dist":
-        from repro.core import fedpair_dist
+        from repro.core import fedbucket, fedpair_dist
         ndev = len(jax.devices())
         if ndev < n:
             raise SystemExit(f"dist engine needs >= {n} devices, have {ndev} "
@@ -97,8 +132,13 @@ def main() -> None:
                              axis_types=(jax.sharding.AxisType.Auto,))
         masks = np.stack([np.arange(cfg.num_layers) < l for l in lengths]
                          ).astype(np.float32)
+        split_ranges = fedbucket.fleet_phase_ranges(
+            lengths, partner, cfg.num_layers, args.bucket_granularity)
+        print(f"[fed] dist split envelope: bottom [0, {split_ranges[0]}), "
+              f"top [{split_ranges[1]}, {cfg.num_layers})")
         dcfg = fedpair_dist.FedDistConfig(
-            lr=args.lr, overlap_boost=not args.no_overlap_boost)
+            lr=args.lr, overlap_boost=not args.no_overlap_boost,
+            split_ranges=split_ranges)
         with jax.set_mesh(mesh):
             step = fedpair_dist.make_dist_fed_step(
                 cfg, mesh, fedpair_dist.pairs_to_ppermute(partner), agg_w,

@@ -234,17 +234,22 @@ def build_serve_step(cfg: ArchConfig, shape: InputShape, mesh, *, unroll=1,
 
 def build_fed_step(cfg: ArchConfig, shape: InputShape, mesh, *,
                    static_half_split: bool = False, lr: float = 0.1,
-                   seed: int = 0, unroll: int = 1, ce_chunk: int = 0):
+                   seed: int = 0, unroll: int = 1, ce_chunk: int = 0,
+                   bucket_granularity: Optional[int] = None):
     """Distributed FedPairing step on the production mesh: one client per
     (pod x) data position, paired by the greedy algorithm over a simulated
     heterogeneous fleet; the split handoff is the ppermute collective.
 
     ``static_half_split`` is the beyond-paper homogeneous-mesh
     specialization (§Perf): static L=W/2 halves the per-phase scan.
+    ``bucket_granularity`` generalizes it to heterogeneous fleets: the
+    scans are statically sliced to the fleet's split envelope
+    (``fedbucket.fleet_phase_ranges``), gating only the residual inside.
     """
     import numpy as np
 
-    from repro.core import fedpair, fedpair_dist, pairing, splitting
+    from repro.core import fedbucket, fedpair, fedpair_dist, pairing, \
+        splitting
     from repro.core.latency import ChannelModel, make_fleet
 
     daxes = batch_axes(mesh)
@@ -261,8 +266,14 @@ def build_fed_step(cfg: ArchConfig, shape: InputShape, mesh, *,
                      ).astype(np.float32)
     agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
 
+    split_ranges = None
+    if bucket_granularity and not static_half_split:
+        split_ranges = fedbucket.fleet_phase_ranges(
+            lengths, partner, cfg.num_layers, bucket_granularity)
+
     dist_cfg = fedpair_dist.FedDistConfig(
-        lr=lr, static_half_split=static_half_split, client_axes=daxes,
+        lr=lr, static_half_split=static_half_split,
+        split_ranges=split_ranges, client_axes=daxes,
         unroll=unroll, ce_chunk=ce_chunk)
     step = fedpair_dist.make_dist_fed_step(
         cfg, mesh, fedpair_dist.pairs_to_ppermute(partner), agg_w, masks,

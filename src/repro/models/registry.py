@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ArchFamily, AttentionKind, InputShape
+from repro.kernels import ref
 from repro.models import attention as attn
 from repro.models import common, encdec, hybrid, mamba2, rwkv6, transformer
 
@@ -159,9 +160,7 @@ def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig,
         if cfg.family == ArchFamily.VLM:
             h = h[:, h.shape[1] - labels.shape[1]:]
         B, S, D = h.shape
-        C = ce_chunk
-        while S % C:
-            C -= 1
+        C = ref.ce_chunk_size(S, ce_chunk)
         nc = S // C
         h_c = h.reshape(B, nc, C, D).transpose(1, 0, 2, 3)
         l_c = labels.reshape(B, nc, C).transpose(1, 0, 2)

@@ -95,9 +95,11 @@ class TestParticipation:
         pw = fedpair.pair_weights(fleet.data_sizes, partner)
         # inactive clients get weight 0 -> frozen this round
         pw = np.where(active, pw, 0.0).astype(np.float32)
+        # donate=False: the pre-step replicas are compared against below
         step = fedpair.make_fed_step(lambda p, b: loss(p, b), plan,
                                      cfg.num_layers,
-                                     fedpair.FedPairingConfig(lr=0.1))
+                                     fedpair.FedPairingConfig(lr=0.1,
+                                                              donate=False))
         imgs = jnp.asarray(np.random.default_rng(3).normal(
             size=(6, 8, 4, 4, 3)), jnp.float32)
         labels = jnp.asarray(np.random.default_rng(3).integers(

@@ -78,10 +78,11 @@ def test_step_matches_reference(lengths, boost):
     plan = splitting.split_plan(CFG, g)
     fcfg = fedpair.FedPairingConfig(lr=0.1, overlap_boost=boost)
     step = fedpair.make_fed_step(_loss, plan, CFG.num_layers, fcfg)
-    got, _ = step(cp, batches, jnp.asarray(partner), jnp.asarray(lengths),
-                  jnp.asarray(agg_w))
+    # reference first: the jitted step donates (consumes) cp's buffers
     want = _reference_step(g, cp, batches, partner, np.asarray(lengths),
                            agg_w, 0.1, boost)
+    got, _ = step(cp, batches, jnp.asarray(partner), jnp.asarray(lengths),
+                  jnp.asarray(agg_w))
     for a, b in zip(jax.tree_util.tree_leaves(got),
                     jax.tree_util.tree_leaves(want)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
@@ -111,6 +112,7 @@ def test_self_paired_client_is_local_sgd():
 
 def test_overlap_boost_changes_only_overlapping_layers():
     g, cp = _clients(2, seed=3)
+    _, cp2 = _clients(2, seed=3)    # each step donates its input replicas
     partner = jnp.asarray([1, 0])
     lengths = jnp.asarray([3, 1])   # overlap on client 0 layers [1, 3)
     agg_w = jnp.asarray([0.5, 0.5])
@@ -123,7 +125,7 @@ def test_overlap_boost_changes_only_overlapping_layers():
     p_off, _ = fedpair.make_fed_step(
         _loss, plan, CFG.num_layers,
         fedpair.FedPairingConfig(lr=0.1, overlap_boost=False))(
-        cp, batches, partner, lengths, agg_w)
+        cp2, batches, partner, lengths, agg_w)
     dw = np.asarray(p_on["blocks"]["w1"] - p_off["blocks"]["w1"])  # (2,W,...)
     per_layer = np.abs(dw).sum(axis=(2, 3))
     # client 0: layers 1,2 overlapping -> differ; 0,3 identical

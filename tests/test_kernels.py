@@ -173,3 +173,35 @@ class TestDispatch:
     def test_invalid_impl_rejected(self):
         with pytest.raises(ValueError):
             ops.set_default_impl("cuda")
+
+
+class TestWKV6EffectiveChunk:
+    """The Pallas wkv6 kernel coerces sub-64 chunk requests up to its
+    minimum sequence tile; the coercion is explicit and queryable."""
+
+    def test_xla_honors_requested_chunk(self):
+        assert ops.wkv6_effective_chunk(16, "xla") == 16
+
+    @pytest.mark.parametrize("impl", ["pallas", "pallas_interpret"])
+    def test_kernel_paths_coerce_small_chunks_up(self, impl):
+        assert ops.wkv6_effective_chunk(16, impl) == ops.WKV6_MIN_KERNEL_CHUNK
+        assert ops.wkv6_effective_chunk(128, impl) == 128
+
+    def test_coercion_is_semantically_safe(self):
+        """chunk is a pure memory/latency knob: results are invariant, so
+        coercing 16 -> 64 only changes the tiling."""
+        rng = np.random.default_rng(0)
+        B, S, H, N, M = 1, 64, 2, 8, 8
+        r, k, v = (jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+                   for _ in range(3))
+        v = jnp.asarray(rng.normal(size=(B, S, H, M)), jnp.float32)
+        lw = -jnp.exp(jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32))
+        u = jnp.asarray(rng.normal(size=(H, N)), jnp.float32)
+        y16, s16 = ops.wkv6(r, k, v, lw, u, chunk=16, impl="xla")
+        y64, s64 = ops.wkv6(r, k, v, lw, u,
+                            chunk=ops.wkv6_effective_chunk(16, "pallas"),
+                            impl="xla")
+        np.testing.assert_allclose(np.asarray(y16), np.asarray(y64),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(s16), np.asarray(s64),
+                                   rtol=2e-5, atol=2e-5)

@@ -147,7 +147,8 @@ batch["labels"] = batch["tokens"]
 plan = splitting.split_plan(cfg, g)
 step_v = fedpair.make_fed_step(
     lambda p, b: registry.loss_fn(p, b, cfg)[0], plan, cfg.num_layers,
-    fedpair.FedPairingConfig(lr=0.1 / n))   # dist normalizes loss by 1/N
+    # dist normalizes loss by 1/N; donate=False keeps cp for the dist engine
+    fedpair.FedPairingConfig(lr=0.1 / n, donate=False))
 new_v, _ = step_v(cp, batch, jnp.asarray(partner), jnp.asarray(lengths),
                   jnp.asarray(agg_w))
 
