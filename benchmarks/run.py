@@ -25,7 +25,7 @@ def main() -> None:
                     help="comma list: pairing,roundtime,convergence,kernels,"
                          "fedstep")
     ap.add_argument("--tiny", action="store_true",
-                    help="shrink workloads (smoke/CI; applies to fedstep)")
+                    help="shrink workloads (smoke/CI; applies to fedstep/roundtime)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -35,7 +35,7 @@ def main() -> None:
         suites.append(bench_pairing.run)
     if only is None or "roundtime" in only:
         from benchmarks import bench_roundtime
-        suites.append(bench_roundtime.run)
+        suites.append(functools.partial(bench_roundtime.run, tiny=args.tiny))
     if only is None or "convergence" in only:
         from benchmarks import bench_convergence
         suites.append(bench_convergence.run)

@@ -1,8 +1,14 @@
-"""Paper Figs. 2-3 at example scale: FedPairing vs vanilla FL on IID and
-Non-IID (2 classes per client) data, with accuracy-vs-round and
-accuracy-at-equal-simulated-time views.
+"""Paper Figs. 2-3 at example scale, through the ROUND DRIVER: FedPairing
+vs vanilla FL on IID and Non-IID (2 classes per client) data, with
+accuracy-vs-round and accuracy-at-equal-simulated-time views.
 
-  PYTHONPATH=src python examples/fed_noniid.py [--rounds 8]
+Both algorithms run through `core.rounds.RoundDriver` — the same loop the
+benchmarks and cross-engine tests use — so the simulated time axis comes
+from the driver's Eq. (3) accounting instead of a hand-rolled estimate,
+and per-round re-pairing happens automatically (add --drift to move the
+clients between rounds).
+
+  PYTHONPATH=src python examples/fed_noniid.py [--rounds 8] [--drift 2]
 """
 import argparse
 import functools
@@ -11,16 +17,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (aggregation, baselines, fedpair, latency, pairing,
-                        splitting)
+from repro.core import latency, rounds
 from repro.core.latency import ChannelModel, WorkloadModel
-from repro.data import (FederatedBatcher, SyntheticImages, iid_partition,
-                        two_class_partition)
+from repro.data import FederatedBatcher, SyntheticImages, iid_partition, \
+    two_class_partition
 from repro.models import vision
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--rounds", type=int, default=8)
 ap.add_argument("--batches", type=int, default=14)
+ap.add_argument("--drift", type=float, default=0.0,
+                help="per-round client movement (m) — forces re-pairing")
 args = ap.parse_args()
 
 N = 8
@@ -32,46 +39,47 @@ test = {"images": jnp.asarray(imgs[:400]), "labels": jnp.asarray(labels[:400])}
 
 fleet = latency.make_fleet(n=N, seed=0)
 chan = ChannelModel()
-pairs = pairing.fedpairing_pairing(fleet, chan)
-partner = pairing.partner_permutation(pairs, N)
-lengths = splitting.propagation_lengths(fleet.cpu_hz, partner, cfg.num_layers)
-pw = fedpair.pair_weights(fleet.data_sizes, partner)
-w = WorkloadModel(num_layers=18)
-t_fp = latency.round_time_fedpairing(pairs, fleet, chan, w)
-t_fl = latency.round_time_vanilla_fl(fleet, chan, w)
+w = WorkloadModel(num_layers=18, batches_per_epoch=args.batches,
+                  local_epochs=1)
 
-for dist, part in (("IID", iid_partition), ("Non-IID", two_class_partition)):
+
+def run_curve(algorithm: str, part) -> tuple:
+    """Accuracy per round + mean simulated round time, via the driver."""
     shards = part(labels, N, seed=0)
     batcher = FederatedBatcher(imgs, labels, shards, batch_size=16, seed=0)
-    gen = iter(lambda: {k: jnp.asarray(v) for k, v in next(batcher).items()},
-               None)
-    g0 = vision.vision_init(cfg, jax.random.key(0))
-    plan = splitting.split_plan(cfg, g0)
 
-    cp = fedpair.replicate(g0, N)
-    step = fedpair.make_fed_step(lambda p, b: loss_fn(p, b), plan,
-                                 cfg.num_layers,
-                                 fedpair.FedPairingConfig(lr=0.1))
-    fp_curve = []
-    for _ in range(args.rounds):
-        cp, _ = fedpair.run_round(step, cp, gen, partner, lengths, pw,
-                                  args.batches)
-        g = aggregation.aggregate(cp, jnp.full((N,), 1 / N), "paper")
-        cp = aggregation.broadcast(g, N)
-        fp_curve.append(float(vision.vision_accuracy(g, test, cfg)))
+    def batch_fn():
+        return {k: jnp.asarray(v) for k, v in next(batcher).items()}
 
-    cp = fedpair.replicate(g0, N)
-    fl = baselines.make_fl_step(lambda p, b: loss_fn(p, b), lr=0.1)
-    fl_curve = []
+    rc = rounds.RoundConfig(
+        algorithm=algorithm, engine="vmapped", rounds=args.rounds,
+        batches_per_round=args.batches, drift_sigma_m=args.drift,
+        lr=0.1 * (N if algorithm == "fedpairing" else 1),  # see DESIGN §5
+        aggregation="paper" if algorithm == "fedpairing" else "fedavg",
+        seed=0)
+    driver = rounds.RoundDriver(
+        cfg, rc, fleet, chan=chan, workload=w, batch_fn=batch_fn,
+        loss_fn=lambda p, b: loss_fn(p, b),
+        init_fn=lambda key: vision.vision_init(cfg, jax.random.key(0)))
+    state = driver.init_state()
+    curve = []
     for _ in range(args.rounds):
-        cp, _ = baselines.fl_round(fl, cp, gen, args.batches)
-        g = aggregation.aggregate(cp, jnp.full((N,), 1 / N), "fedavg")
-        cp = aggregation.broadcast(g, N)
-        fl_curve.append(float(vision.vision_accuracy(g, test, cfg)))
+        state = driver.run_round(state)
+        g = driver.global_params(state)
+        curve.append(float(vision.vision_accuracy(g, test, cfg)))
+    mean_round_s = float(np.mean([r.sim_round_s for r in state.history]))
+    return curve, mean_round_s
+
+
+for dist, part in (("IID", iid_partition), ("Non-IID", two_class_partition)):
+    fp_curve, t_fp = run_curve("fedpairing", part)
+    fl_curve, t_fl = run_curve("fl", part)
 
     print(f"\n=== {dist} ===")
-    print(f"  FedPairing acc/round: {[f'{a:.2f}' for a in fp_curve]}")
-    print(f"  vanilla FL acc/round: {[f'{a:.2f}' for a in fl_curve]}")
+    print(f"  FedPairing acc/round: {[f'{a:.2f}' for a in fp_curve]} "
+          f"(sim {t_fp:.0f}s/round)")
+    print(f"  vanilla FL acc/round: {[f'{a:.2f}' for a in fl_curve]} "
+          f"(sim {t_fl:.0f}s/round)")
     budget = 2 * t_fl
     r_fp = min(int(budget // t_fp), args.rounds)
     r_fl = min(int(budget // t_fl), args.rounds)

@@ -21,3 +21,20 @@ for name, e in fleets.items():
 print("bench_smoke: BENCH_fedstep_tiny.json OK "
       f"(speedups: {[e['speedup'] for e in fleets.values()]})")
 PY
+
+python - <<'PY'
+import json
+with open("BENCH_roundtime_tiny.json") as f:
+    d = json.load(f)
+driver = d.get("driver", {})
+assert {"fedpairing", "fl", "sl", "splitfed"} <= set(driver), driver.keys()
+for name, e in driver.items():
+    for key in ("mean_round_s", "sim_total_s", "final_loss", "engine"):
+        assert key in e, (name, key)
+    assert e["mean_round_s"] > 0, (name, e)
+# the paper's headline: FedPairing rounds beat vanilla FL on a
+# heterogeneous fleet (driver-measured, straggler-bounded)
+assert d["fedpairing_vs_fl"] < 1.0, d["fedpairing_vs_fl"]
+print("bench_smoke: BENCH_roundtime_tiny.json OK "
+      f"(fedpairing_vs_fl={d['fedpairing_vs_fl']})")
+PY

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full test suite plus the benchmark bit-rot guard
+# (tiny fedstep + roundtime suites with JSON validation), so the round
+# driver, the engines and the benchmarks can't rot independently.
+#
+#   bash scripts/test_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+bash scripts/bench_smoke.sh

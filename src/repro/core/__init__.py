@@ -11,4 +11,10 @@ from repro.core.pairing import (  # noqa: F401
     random_pairing,
     validate_matching,
 )
+from repro.core.rounds import (  # noqa: F401
+    RoundConfig,
+    RoundDriver,
+    RoundRecord,
+    RoundState,
+)
 from repro.core.splitting import propagation_lengths, split_plan  # noqa: F401

@@ -9,26 +9,39 @@ Two modes (see DESIGN.md §3 — the paper is internally inconsistent):
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 
 def aggregate(client_params: Dict, agg_w: jnp.ndarray,
-              mode: str = "paper") -> Dict:
-    """client_params stacked (N, ...) -> global params."""
+              mode: str = "paper",
+              active: Optional[jnp.ndarray] = None) -> Dict:
+    """client_params stacked (N, ...) -> global params.
+
+    ``active`` (N,) bool restricts the aggregation to a participating
+    cohort (partial participation): non-participants' replicas are
+    excluded — "paper" becomes the mean over the cohort, "fedavg" the
+    cohort-renormalized weighted mean.
+    """
     if mode == "paper":
-        return jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0),
-                                      client_params)
-    if mode == "fedavg":
-        w = agg_w / jnp.sum(agg_w)
+        if active is None:
+            return jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0),
+                                          client_params)
+        w = jnp.asarray(active, jnp.float32)
+    elif mode == "fedavg":
+        w = jnp.asarray(agg_w, jnp.float32)
+        if active is not None:
+            w = w * jnp.asarray(active, jnp.float32)
+    else:
+        raise ValueError(f"unknown aggregation mode {mode!r}")
+    w = w / jnp.sum(w)
 
-        def wmean(a):
-            return jnp.tensordot(w.astype(a.dtype), a, axes=(0, 0))
+    def wmean(a):
+        return jnp.tensordot(w.astype(a.dtype), a, axes=(0, 0))
 
-        return jax.tree_util.tree_map(wmean, client_params)
-    raise ValueError(f"unknown aggregation mode {mode!r}")
+    return jax.tree_util.tree_map(wmean, client_params)
 
 
 def broadcast(global_params: Dict, n: int) -> Dict:

@@ -74,6 +74,26 @@ def make_fleet(n: int = 20, radius_m: float = 50.0, f_min: float = 0.1e9,
     )
 
 
+def subfleet(fleet: ClientFleet, idx: np.ndarray) -> ClientFleet:
+    """Restriction of a fleet to the given (sorted) client indices."""
+    idx = np.asarray(idx)
+    return ClientFleet(positions=fleet.positions[idx],
+                       cpu_hz=fleet.cpu_hz[idx],
+                       data_sizes=fleet.data_sizes[idx])
+
+
+def drift_fleet(fleet: ClientFleet, rng: np.random.Generator,
+                sigma_m: float) -> ClientFleet:
+    """Per-round position random walk — the time-varying channel realization
+    (client mobility moves the pathloss, hence the rates the pairing sees).
+    CPU frequencies and dataset sizes are round-invariant.  No-op (and no
+    rng draw) when ``sigma_m <= 0`` — see DESIGN.md §5 seeding contract."""
+    if sigma_m <= 0:
+        return fleet
+    step = rng.normal(0.0, sigma_m, size=fleet.positions.shape)
+    return dataclasses.replace(fleet, positions=fleet.positions + step)
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkloadModel:
     """Model-dependent constants for latency accounting.
@@ -166,13 +186,48 @@ def round_time_fedpairing(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
     return max(per_pair) + upload
 
 
+def local_full_stack_time(cpu_hz, w: WorkloadModel):
+    """Per-client wall time to train all W layers locally (fwd+bwd) — the
+    vanilla-FL cost, also paid by self-paired cohort members."""
+    return (w.num_layers * w.cycles_per_layer / np.asarray(cpu_hz)
+            * 2.0 * w.batches_per_epoch * w.local_epochs)
+
+
+def round_time_from_partner(partner: np.ndarray, fleet: ClientFleet,
+                            chan: ChannelModel, w: WorkloadModel,
+                            active: Optional[np.ndarray] = None,
+                            server_rate_bps: Optional[np.ndarray] = None
+                            ) -> float:
+    """Eq. (3) round time for a partner involution (the round driver's
+    representation): straggler = max over active pairs, self-paired active
+    clients pay the full local stack (vanilla-FL-style), inactive clients
+    contribute nothing; + model upload over the active cohort only."""
+    n = fleet.n
+    act = np.ones(n, bool) if active is None else np.asarray(active, bool)
+    if not act.any():
+        return 0.0
+    rates = fleet.rates(chan)
+    times = []
+    for i in range(n):
+        if not act[i]:
+            continue
+        j = int(partner[i])
+        if j == i:
+            times.append(float(local_full_stack_time(fleet.cpu_hz[i], w)))
+        elif j > i:
+            times.append(pair_round_time(fleet.cpu_hz[i], fleet.cpu_hz[j],
+                                         rates[i, j], w))
+    srates = _server_rates(fleet, chan, server_rate_bps)
+    upload = float(np.max(w.model_bytes / srates[act]))
+    return max(times) + upload
+
+
 def round_time_vanilla_fl(fleet: ClientFleet, chan: ChannelModel,
                           w: WorkloadModel,
                           server_rate_bps: Optional[np.ndarray] = None
                           ) -> float:
     """Every client trains all W layers locally; straggler bounds the round."""
-    per_client = (w.num_layers * w.cycles_per_layer / fleet.cpu_hz
-                  * 2.0 * w.batches_per_epoch * w.local_epochs)
+    per_client = local_full_stack_time(fleet.cpu_hz, w)
     return float(np.max(per_client)) + _upload_time(fleet, chan, w,
                                                     server_rate_bps)
 

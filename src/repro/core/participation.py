@@ -4,12 +4,15 @@ the sampling half; ``pairing`` re-runs on the sampled cohort each round).
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
-from repro.core import pairing, splitting
+from repro.core import latency, pairing, splitting
 from repro.core.latency import ChannelModel, ClientFleet
+
+# (sub_fleet, chan) -> pairs within the sub-fleet's local indexing
+PairFn = Callable[[ClientFleet, ChannelModel], pairing.Pairs]
 
 
 def sample_cohort(n_clients: int, fraction: float, rng: np.random.Generator
@@ -20,18 +23,22 @@ def sample_cohort(n_clients: int, fraction: float, rng: np.random.Generator
 
 
 def cohort_pairing(fleet: ClientFleet, chan: ChannelModel,
-                   cohort: np.ndarray, num_layers: int
+                   cohort: np.ndarray, num_layers: int,
+                   pair_fn: Optional[PairFn] = None
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Pair within a cohort; non-participants map to themselves with L=W
     (they simply don't train this round).
 
+    ``pair_fn`` selects the pairing mechanism on the cohort sub-fleet
+    (default: the paper's greedy ``fedpairing_pairing``; the Table-I
+    baselines — random / location / compute — slot in here).
+
     Returns (partner (N,), lengths (N,), active_mask (N,)).
     """
     n = fleet.n
-    sub = ClientFleet(positions=fleet.positions[cohort],
-                      cpu_hz=fleet.cpu_hz[cohort],
-                      data_sizes=fleet.data_sizes[cohort])
-    sub_pairs = pairing.fedpairing_pairing(sub, chan)
+    sub = latency.subfleet(fleet, cohort)
+    sub_pairs = (pair_fn or pairing.fedpairing_pairing)(sub, chan)
+    pairing.validate_matching(sub_pairs, sub.n)   # reject bad pair_fns
     partner = np.arange(n)
     for a, b in sub_pairs:
         ga, gb = int(cohort[a]), int(cohort[b])

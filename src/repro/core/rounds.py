@@ -1,0 +1,502 @@
+"""Multi-round federated simulation driver (paper Algorithm 2 at round
+scale — the loop behind Figs. 2-3 and Tables I/II).
+
+Each round the driver, in this fixed order (the determinism contract,
+DESIGN.md §5):
+
+1. realizes the time-varying channel (``latency.drift_fleet`` position
+   random walk; skipped without an rng draw when ``drift_sigma_m <= 0``),
+2. samples the participating cohort (``participation.sample_cohort``),
+3. re-runs pairing on the cohort with the current channel realization and
+   recomputes propagation lengths (``participation.cohort_pairing``),
+4. executes ``batches_per_round`` fed steps on one of the three FedPairing
+   engines — vmapped / bucketed / dist — or one of the paper's baselines
+   (vanilla FL / vanilla SL / SplitFed from ``core.baselines``),
+5. applies pair-then-global aggregation over the cohort and broadcasts,
+6. accumulates the Eq. (3) analytical latency into simulated wall-clock
+   (straggler = round max; ``latency.round_time_from_partner``).
+
+All randomness flows from ONE ``np.random.Generator`` seeded with
+``RoundConfig.seed`` and consumed in the order above, so two drivers with
+the same config (engine aside) see identical cohorts, channel
+realizations, pairings and lengths — that is what makes round-level
+cross-engine equivalence testable (``tests/test_rounds.py``).
+
+Engine normalization: the bucketed and dist engines differentiate a total
+loss pre-normalized by 1/N, while the vmapped parameter-mix core applies
+per-client gradients directly — the driver builds the vmapped step with
+``lr / N`` so all three engines take identical parameter steps (cf.
+``tests/test_fedbucket.py::test_bucketed_matches_vmapped_mix_core``).
+
+Re-pairing vs recompilation: the vmapped step takes partner/lengths as
+*traced* arguments (one compile covers every round), while the bucketed
+and dist steps specialize on the pairing — the driver memoizes built steps
+by (partner, lengths, agg weights), so recompiles are bounded by the
+number of *distinct* pairings the channel process visits, not by the
+number of rounds (``RoundRecord.cached_steps`` tracks the bound).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core import aggregation, baselines, fedpair, latency, pairing
+from repro.core import participation, splitting
+from repro.core.latency import ChannelModel, ClientFleet, WorkloadModel
+
+ALGORITHMS = ("fedpairing", "fl", "sl", "splitfed")
+ENGINES = ("vmapped", "bucketed", "dist")
+
+# Table-I pairing mechanisms selectable per round (cohort sub-fleet -> pairs).
+# "random" is resolved per round by the driver (it must draw its seed from
+# the driver rng to honor the determinism contract).
+PAIRINGS: Dict[str, participation.PairFn] = {
+    "fedpairing": pairing.fedpairing_pairing,
+    "random": None,                       # placeholder; see _round_pair_fn
+    "location": pairing.location_pairing,
+    "compute": pairing.compute_pairing,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundConfig:
+    """Static knobs of the multi-round loop (see module docstring)."""
+
+    algorithm: str = "fedpairing"       # fedpairing | fl | sl | splitfed
+    engine: str = "vmapped"             # fedpairing only: vmapped|bucketed|dist
+    rounds: int = 3
+    batches_per_round: int = 4
+    participation: float = 1.0          # cohort fraction per round
+    drift_sigma_m: float = 0.0          # channel realization: position walk
+    pair_mechanism: str = "fedpairing"  # Table-I mechanisms (PAIRINGS)
+    lr: float = 0.05
+    aggregation: str = "paper"          # paper | fedavg (DESIGN.md §3)
+    overlap_boost: bool = True
+    bucket_granularity: int = 1
+    server_cut: int = 0                 # sl/splitfed split; 0 -> W//2
+    donate: bool = True                 # thread params in place (engines)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"algorithm must be one of {ALGORITHMS}, "
+                             f"got {self.algorithm!r}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {self.engine!r}")
+        if self.pair_mechanism not in PAIRINGS:
+            raise ValueError(f"pair_mechanism must be one of "
+                             f"{tuple(PAIRINGS)}, got {self.pair_mechanism!r}")
+        if self.aggregation not in ("paper", "fedavg"):
+            raise ValueError(f"aggregation must be 'paper' or 'fedavg', "
+                             f"got {self.aggregation!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRecord:
+    """Per-round trace entry (host-side; tuples so traces compare ==)."""
+
+    round: int
+    cohort: Tuple[int, ...]
+    pairs: Tuple[Tuple[int, int], ...]   # global ids, i < j, sorted
+    lengths: Tuple[int, ...]             # (N,) propagation lengths
+    mean_loss: float                     # over the active cohort
+    sim_round_s: float                   # Eq. (3) straggler-bounded
+    sim_total_s: float                   # accumulated simulated wall-clock
+    cached_steps: int                    # engine step-cache size (compiles)
+
+
+@dataclasses.dataclass
+class RoundState:
+    """Everything that survives from round to round."""
+
+    round: int
+    fleet: ClientFleet                   # current channel realization
+    client_params: Dict                  # stacked (N, ...) or single (sl)
+    server_params: Optional[Dict]        # sl / splitfed server side
+    rng: np.random.Generator
+    sim_time_s: float
+    history: List[RoundRecord]
+
+
+def _pairs_from_partner(partner: np.ndarray,
+                        active: np.ndarray) -> Tuple[Tuple[int, int], ...]:
+    return tuple(sorted((int(i), int(partner[i]))
+                        for i in range(len(partner))
+                        if active[i] and partner[i] > i))
+
+
+# ---------------------------------------------------------------------------
+# FedPairing engines behind one interface
+# ---------------------------------------------------------------------------
+
+class _VmappedEngine:
+    """Functional parameter-mix core; partner/lengths traced -> 1 compile."""
+
+    def __init__(self, cfg, rc: RoundConfig, n: int, gparams: Dict,
+                 loss_fn: Callable):
+        plan = splitting.split_plan(cfg, gparams)
+        fed_cfg = fedpair.FedPairingConfig(
+            lr=rc.lr / n, overlap_boost=rc.overlap_boost,
+            aggregation=rc.aggregation, donate=rc.donate)
+        self._step = fedpair.make_fed_step(loss_fn, plan, cfg.num_layers,
+                                           fed_cfg)
+        self.cached_steps = 1
+
+    def step(self, params, batch, partner, lengths, agg_w):
+        new, m = self._step(params, batch,
+                            jnp.asarray(partner, jnp.int32),
+                            jnp.asarray(lengths, jnp.int32),
+                            jnp.asarray(agg_w, jnp.float32))
+        return new, m["loss"]
+
+
+def _pairing_key(partner, lengths, agg_w) -> Tuple:
+    return (tuple(int(p) for p in partner), tuple(int(l) for l in lengths),
+            np.asarray(agg_w, np.float32).tobytes())
+
+
+class _BucketedEngine:
+    """Length-bucketed engine; steps specialize on the pairing -> memoized."""
+
+    def __init__(self, cfg, rc: RoundConfig, n: int, gparams, loss_fn):
+        from repro.core import fedbucket
+        self._cfg = cfg
+        self._bcfg = fedbucket.FedBucketConfig(
+            lr=rc.lr, overlap_boost=rc.overlap_boost,
+            aggregation=rc.aggregation,
+            bucket_granularity=rc.bucket_granularity, donate=rc.donate)
+        self._make = fedbucket.make_bucketed_fed_step
+        self._cache: Dict[Tuple, Callable] = {}
+
+    @property
+    def cached_steps(self) -> int:
+        return len(self._cache)
+
+    def step(self, params, batch, partner, lengths, agg_w):
+        key = _pairing_key(partner, lengths, agg_w)
+        built = self._cache.get(key)
+        if built is None:
+            built, _plan = self._make(self._cfg, partner, lengths, agg_w,
+                                      self._bcfg)
+            self._cache[key] = built
+        new, m = built(params, batch)
+        return new, m["loss"]
+
+
+class _DistEngine:
+    """shard_map + ppermute engine; pairing is baked into the collective."""
+
+    def __init__(self, cfg, rc: RoundConfig, n: int, gparams, loss_fn):
+        from repro.core import fedbucket, fedpair_dist
+        ndev = len(jax.devices())
+        if ndev < n:
+            raise RuntimeError(
+                f"dist engine needs >= {n} devices, have {ndev} (set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+        self._cfg = cfg
+        self._rc = rc
+        self._fleet_ranges = fedbucket.fleet_phase_ranges
+        self._dist = fedpair_dist
+        self.mesh = compat.make_mesh((n,), ("data",))
+        self._cache: Dict[Tuple, Callable] = {}
+
+    @property
+    def cached_steps(self) -> int:
+        return len(self._cache)
+
+    def step(self, params, batch, partner, lengths, agg_w):
+        key = _pairing_key(partner, lengths, agg_w)
+        built = self._cache.get(key)
+        with compat.set_mesh(self.mesh):
+            if built is None:
+                W = self._cfg.num_layers
+                masks = np.stack([np.arange(W) < l for l in lengths]
+                                 ).astype(np.float32)
+                dcfg = self._dist.FedDistConfig(
+                    lr=self._rc.lr, overlap_boost=self._rc.overlap_boost,
+                    split_ranges=self._fleet_ranges(
+                        lengths, partner, W, self._rc.bucket_granularity),
+                    donate=self._rc.donate)
+                built = self._dist.make_dist_fed_step(
+                    self._cfg, self.mesh,
+                    self._dist.pairs_to_ppermute(np.asarray(partner)),
+                    np.asarray(agg_w, np.float32), masks, dcfg)
+                self._cache[key] = built
+            new, loss = built(params, batch)
+        return new, loss
+
+
+_ENGINE_CLASSES = {"vmapped": _VmappedEngine, "bucketed": _BucketedEngine,
+                   "dist": _DistEngine}
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+
+class RoundDriver:
+    """Owns the per-round loop for one (algorithm, engine, fleet) triple.
+
+    ``batch_fn`` yields one client-axis-stacked batch pytree per call
+    (leading dim N); the driver calls it exactly ``batches_per_round``
+    times per round for every algorithm, so data streams line up across
+    algorithms and engines.  ``loss_fn``/``init_fn`` default to the LM
+    registry but accept any (params, batch) -> scalar pair (the vision
+    example drives a conv net through the same loop).
+    """
+
+    def __init__(self, cfg, rc: RoundConfig, fleet: ClientFleet,
+                 chan: Optional[ChannelModel] = None,
+                 workload: Optional[WorkloadModel] = None,
+                 batch_fn: Optional[Callable[[], Dict]] = None,
+                 loss_fn: Optional[Callable] = None,
+                 init_fn: Optional[Callable] = None):
+        from repro.models import registry
+        self.cfg = cfg
+        self.rc = rc
+        self.fleet0 = fleet
+        self.n = fleet.n
+        self.chan = chan or ChannelModel()
+        self.workload = workload or WorkloadModel(
+            num_layers=cfg.num_layers,
+            batches_per_epoch=rc.batches_per_round, local_epochs=1)
+        if (loss_fn or init_fn) and rc.algorithm == "fedpairing" \
+                and rc.engine != "vmapped":
+            # the bucketed/dist steps hard-code the LM flow from cfg; a
+            # custom objective would be silently ignored — refuse early.
+            raise ValueError(
+                f"custom loss_fn/init_fn only run on the vmapped engine "
+                f"(the {rc.engine} engine builds its loss from cfg)")
+        self.loss_fn = loss_fn or (lambda p, b: registry.loss_fn(p, b, cfg)[0])
+        self.init_fn = init_fn or (lambda key: registry.init_params(cfg, key))
+        self.batch_fn = batch_fn or make_lm_batch_fn(cfg, self.n,
+                                                     seed=rc.seed)
+        self._gparams = self.init_fn(jax.random.key(rc.seed))
+        self._engine = None
+        self._baseline_step = None
+        if rc.algorithm == "fedpairing":
+            self._engine = _ENGINE_CLASSES[rc.engine](
+                cfg, rc, self.n, self._gparams, self.loss_fn)
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self) -> RoundState:
+        g = self._gparams
+        if self.rc.algorithm == "sl":
+            client, server = g, g
+        elif self.rc.algorithm == "splitfed":
+            client, server = fedpair.replicate(g, self.n), g
+        else:
+            client, server = fedpair.replicate(g, self.n), None
+        return RoundState(round=0, fleet=self.fleet0, client_params=client,
+                          server_params=server,
+                          rng=np.random.default_rng(self.rc.seed),
+                          sim_time_s=0.0, history=[])
+
+    def global_params(self, state: RoundState) -> Dict:
+        """The post-broadcast global model.  For sl the single shared tree;
+        otherwise row 0 of the stacked tree (all rows equal after
+        broadcast)."""
+        if self.rc.algorithm == "sl":
+            return state.client_params
+        return jax.tree_util.tree_map(lambda a: a[0], state.client_params)
+
+    def run(self, state: Optional[RoundState] = None,
+            rounds: Optional[int] = None) -> RoundState:
+        state = state or self.init_state()
+        for _ in range(self.rc.rounds if rounds is None else rounds):
+            state = self.run_round(state)
+        return state
+
+    # -- one round --------------------------------------------------------
+
+    def run_round(self, state: RoundState) -> RoundState:
+        """One round; value semantics for the driver-owned state — the
+        input state is left intact (its rng is deep-copied, its history
+        is never mutated), so a kept snapshot re-runs with the identical
+        cohort/pairing/latency trace.  Two stateful caveats: the data
+        stream is owned by ``batch_fn`` and advances monotonically across
+        calls, and with the default ``donate=True`` the engines consume
+        the input parameter buffers in place — re-running the *training*
+        of a kept snapshot additionally needs ``RoundConfig(donate=False)``
+        (the equivalence tests do)."""
+        rc = self.rc
+        rng = copy.deepcopy(state.rng)
+        fleet = latency.drift_fleet(state.fleet, rng, rc.drift_sigma_m)
+        cohort = participation.sample_cohort(self.n, rc.participation, rng)
+        pair_fn = self._round_pair_fn(rng)
+        active = np.zeros(self.n, bool)
+        active[cohort] = True
+        run = {"fedpairing": self._fedpairing_round, "fl": self._fl_round,
+               "sl": self._sl_round, "splitfed": self._splitfed_round}
+        record, client, server = run[rc.algorithm](state, fleet, cohort,
+                                                  active, pair_fn)
+        return dataclasses.replace(
+            state, round=state.round + 1, fleet=fleet, client_params=client,
+            server_params=server, rng=rng, sim_time_s=record.sim_total_s,
+            history=state.history + [record])
+
+    def _round_pair_fn(self, rng: np.random.Generator) -> participation.PairFn:
+        """Per-round pairing mechanism.  'random' draws its seed from the
+        driver rng (in fixed order: after cohort sampling), so it varies
+        per round/seed like every other source of randomness; the draw
+        happens for every algorithm to keep the rng stream
+        algorithm-invariant up to the training step."""
+        seed = int(rng.integers(2 ** 31))
+        if self.rc.pair_mechanism == "random":
+            return lambda sub, chan: pairing.random_pairing(sub.n, seed=seed)
+        return PAIRINGS[self.rc.pair_mechanism]
+
+    def _record(self, state, cohort, pairs, lengths, mean_loss, round_s,
+                cached) -> RoundRecord:
+        return RoundRecord(
+            round=state.round, cohort=tuple(int(c) for c in cohort),
+            pairs=pairs, lengths=tuple(int(l) for l in lengths),
+            mean_loss=float(mean_loss), sim_round_s=float(round_s),
+            sim_total_s=float(state.sim_time_s + round_s),
+            cached_steps=cached)
+
+    def _fedpairing_round(self, state, fleet, cohort, active, pair_fn):
+        rc = self.rc
+        partner, lengths, _ = participation.cohort_pairing(
+            fleet, self.chan, cohort, self.cfg.num_layers, pair_fn)
+        agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
+        params = state.client_params
+        losses = []
+        for _ in range(rc.batches_per_round):
+            params, l = self._engine.step(params, self.batch_fn(), partner,
+                                          lengths, agg_w)
+            losses.append(np.asarray(l))
+        mean_loss = _mean_active_loss(losses, active)
+        g = aggregation.aggregate(params,
+                                  jnp.asarray(fleet.data_sizes, jnp.float32),
+                                  rc.aggregation,
+                                  active=jnp.asarray(active))
+        params = aggregation.broadcast(g, self.n)
+        round_s = latency.round_time_from_partner(partner, fleet, self.chan,
+                                                  self.workload,
+                                                  active=active)
+        rec = self._record(state, cohort,
+                           _pairs_from_partner(partner, active), lengths,
+                           mean_loss, round_s, self._engine.cached_steps)
+        return rec, params, None
+
+    def _fl_round(self, state, fleet, cohort, active, pair_fn):
+        rc = self.rc
+        if self._baseline_step is None:
+            self._baseline_step = baselines.make_fl_step(self.loss_fn,
+                                                         lr=rc.lr)
+        params = state.client_params
+        losses = []
+        for _ in range(rc.batches_per_round):
+            params, l = self._baseline_step(params, self.batch_fn())
+            losses.append(np.asarray(l))
+        g = aggregation.aggregate(params,
+                                  jnp.asarray(fleet.data_sizes, jnp.float32),
+                                  "fedavg", active=jnp.asarray(active))
+        params = aggregation.broadcast(g, self.n)
+        sub = latency.subfleet(fleet, cohort)
+        round_s = latency.round_time_vanilla_fl(sub, self.chan, self.workload)
+        rec = self._record(state, cohort, (),
+                           np.full(self.n, self.cfg.num_layers),
+                           _mean_active_loss(losses, active), round_s, 1)
+        return rec, params, None
+
+    def _server_cut(self) -> int:
+        return self.rc.server_cut or max(1, self.cfg.num_layers // 2)
+
+    def _sl_round(self, state, fleet, cohort, active, pair_fn):
+        rc = self.rc
+        cut = self._server_cut()
+        if self._baseline_step is None:
+            plan = splitting.split_plan(self.cfg, self._gparams)
+            self._baseline_step = baselines.make_sl_step(
+                self.loss_fn, plan, self.cfg.num_layers, cut, rc.lr)
+        client, server = state.client_params, state.server_params
+        batches = [self.batch_fn() for _ in range(rc.batches_per_round)]
+        losses = []
+        for i in cohort:                 # sequential client relay
+            for b in batches:
+                mine = jax.tree_util.tree_map(lambda a: a[int(i)], b)
+                client, server, l = self._baseline_step(client, server, mine)
+                losses.append(float(l))
+        sub = latency.subfleet(fleet, cohort)
+        round_s = latency.round_time_vanilla_sl(sub, self.chan, self.workload,
+                                                client_layers=cut,
+                                                sequential=True)
+        lengths = np.where(active, cut, self.cfg.num_layers)
+        rec = self._record(state, cohort, (), lengths,
+                           float(np.mean(losses)), round_s, 1)
+        return rec, client, server
+
+    def _splitfed_round(self, state, fleet, cohort, active, pair_fn):
+        rc = self.rc
+        cut = self._server_cut()
+        if self._baseline_step is None:
+            plan = splitting.split_plan(self.cfg, self._gparams)
+            self._baseline_step = baselines.make_splitfed_step(
+                self.loss_fn, plan, self.cfg.num_layers, cut, rc.lr)
+        client, server = state.client_params, state.server_params
+        idx = np.asarray(cohort)
+        sub_params = jax.tree_util.tree_map(lambda a: a[idx], client)
+        losses = []
+        for _ in range(rc.batches_per_round):
+            b = self.batch_fn()
+            sub_b = jax.tree_util.tree_map(lambda a: a[idx], b)
+            sub_params, server, l = self._baseline_step(sub_params, server,
+                                                        sub_b)
+            losses.append(np.asarray(l))
+        # round end: FedAvg the cohort's bottoms, broadcast to everyone
+        sub_w = jnp.asarray(fleet.data_sizes[idx], jnp.float32)
+        g = aggregation.aggregate(sub_params, sub_w, "fedavg")
+        client = aggregation.broadcast(g, self.n)
+        sub = latency.subfleet(fleet, cohort)
+        round_s = latency.round_time_splitfed(sub, self.chan, self.workload,
+                                              client_layers=cut)
+        lengths = np.where(active, cut, self.cfg.num_layers)
+        rec = self._record(state, cohort, (), lengths,
+                           float(np.mean([l.mean() for l in losses])),
+                           round_s, 1)
+        return rec, client, server
+
+
+def _mean_active_loss(losses: Sequence[np.ndarray],
+                      active: np.ndarray) -> float:
+    """Mean per-step loss over active positions.  The vmapped and bucketed
+    engines disagree on which position holds which flow's loss (bucketed
+    lands flow i at partner(i)), but the active set is closed under the
+    pairing, so their cohort means agree.  The dist engine only exposes
+    one scalar per step — the a_i-pre-weighted total over ALL N flows
+    (inactive self-flows included) — so its recorded mean_loss is on a
+    different scale (~a_i x the cohort mean); compare losses across
+    engines on vmapped/bucketed only."""
+    arr = np.stack([np.asarray(l, np.float64) for l in losses])
+    if arr.ndim == 1:                    # dist: one scalar per step
+        return float(arr.mean())
+    return float(arr[:, active].mean())
+
+
+def make_lm_batch_fn(cfg, n: int, batch: int = 2, seq: int = 32,
+                     seed: int = 0) -> Callable[[], Dict]:
+    """Stacked synthetic-LM batches from N disjoint corpus shards."""
+    from repro.data import LMBatcher, SyntheticLM
+    corpus = SyntheticLM(vocab_size=cfg.vocab_size, seed=seed).generate()
+    shard = len(corpus) // n
+    batchers = [LMBatcher(corpus[i * shard:(i + 1) * shard], batch, seq,
+                          seed=seed + i) for i in range(n)]
+
+    def next_batches() -> Dict:
+        per = [next(b) for b in batchers]
+        return {
+            "tokens": jnp.asarray(np.stack([p["tokens"] for p in per])),
+            "labels": jnp.asarray(np.stack([p["labels"] for p in per])),
+        }
+
+    return next_batches

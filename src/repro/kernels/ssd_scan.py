@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sfin_ref, s_ref, *,
                 chunk: int, n_chunks: int):
@@ -103,7 +105,7 @@ def ssd(x: jnp.ndarray, log_decay: jnp.ndarray, b: jnp.ndarray,
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, log_decay, b, c, initial_state)

@@ -25,6 +25,7 @@ import traceback
 
 import jax
 
+from repro import compat
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, get_shape
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
@@ -52,7 +53,7 @@ def run_combo(arch_id: str, shape_id: str, multi_pod: bool,
 
     # Pass 1 — scan-over-layers program: this is the deployable artifact;
     # its memory_analysis has realistic buffer reuse ("proves it fits").
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn, example, in_shardings, out_shardings = build_step(
             cfg, shape, mesh, unroll=1)
         jitted = jax.jit(fn, in_shardings=in_shardings,
@@ -76,7 +77,7 @@ def run_combo(arch_id: str, shape_id: str, multi_pod: bool,
         cost, coll_kinds = _extrapolated_cost(cfg, shape, mesh)
         hlo = ""   # collectives already aggregated in coll_kinds
     else:
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_analysis(compiled)
         hlo = compiled.as_text()
         coll_kinds = None
 
@@ -132,11 +133,11 @@ def _extrapolated_cost(cfg, shape, mesh, d_pair=None):
         if cfg.is_encdec:
             over["num_encoder_layers"] = d
         cfg_d = cfg.with_overrides(**over)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             fn, ex, ins, outs = build_step(cfg_d, shape, mesh, unroll=True)
             comp = jax.jit(fn, in_shardings=ins,
                            out_shardings=outs).lower(*ex).compile()
-        c = comp.cost_analysis() or {}
+        c = compat.cost_analysis(comp)
         coll = analysis.collective_bytes(comp.as_text())
         samples.append((float(c.get("flops", 0.0)),
                         float(c.get("bytes accessed", 0.0)), coll))
@@ -154,7 +155,7 @@ def _run_fed_combo(arch_id, cfg, shape, mesh, mesh_name, chips, out_dir,
     """Dry-run the distributed FedPairing step (the paper's technique)."""
     from repro.launch.steps import build_fed_step
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn, example, in_shardings, out_shardings = build_fed_step(
             cfg, shape, mesh, static_half_split=static, unroll=True,
             ce_chunk=ce_chunk)
@@ -162,7 +163,7 @@ def _run_fed_combo(arch_id, cfg, shape, mesh, mesh_name, chips, out_dir,
                            out_shardings=out_shardings).lower(
             *example).compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     peak = getattr(mem, "temp_size_in_bytes", None)
 

@@ -1,15 +1,21 @@
 """FedPairing training driver (the paper's Algorithm 2, end to end).
 
-Simulates a heterogeneous client fleet, runs the greedy pairing, and trains
-per-client models with the split-learning step + per-round aggregation.
-Three execution engines:
+A thin CLI over ``core.rounds.RoundDriver``: simulates a heterogeneous
+client fleet and runs the full multi-round loop — per-round channel
+realization, cohort sampling, greedy re-pairing, split training, pair-then-
+global aggregation, Eq. (3) simulated wall-clock.  Three execution engines:
 
-* ``vmapped`` (default) — functional parameter-mix core (all families).
+* ``vmapped`` (default) — functional parameter-mix core (all families);
+                          partner/lengths are traced, so ONE compile covers
+                          every re-pairing.
 * ``bucketed``          — length-bucketed split execution (token-LM
                           families): clients grouped by (L_i, W-L_p) scan
                           only their sliced block ranges, paying the
                           protocol's FLOPs instead of the full stack
-                          (DESIGN.md §Perf; ``--bucket-granularity`` trades
+                          (DESIGN.md §Perf).  Steps specialize on the
+                          pairing; the driver memoizes them, so recompiles
+                          are bounded by the number of distinct pairings
+                          (``--bucket-granularity`` additionally trades
                           wasted blocks against compiled shapes).
 * ``dist``              — shard_map + ppermute over real local devices
                           (token-LM families); set
@@ -17,22 +23,18 @@ Three execution engines:
                           before launching to get N>1 CPU devices.
 
   PYTHONPATH=src python -m repro.launch.fed_train --clients 8 --rounds 3
+
+For the paper's baselines (vanilla FL / SL / SplitFed) through the same
+loop, use ``repro.launch.sim``.
 """
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs import ARCH_IDS, get_smoke_config
-from repro.core import aggregation, fedpair, latency, pairing, splitting
+from repro.core import latency, pairing, rounds
 from repro.core.latency import ChannelModel, WorkloadModel
-from repro.data import LMBatcher, SyntheticLM
-from repro.models import registry
 
 
 def main() -> None:
@@ -44,11 +46,14 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--engine", choices=["vmapped", "bucketed", "dist"],
-                    default="vmapped")
+    ap.add_argument("--engine", choices=rounds.ENGINES, default="vmapped")
     ap.add_argument("--bucket-granularity", type=int, default=1,
                     help="round split lengths to multiples of this when "
                          "bucketing (1 = exact; larger = fewer compiles)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="cohort fraction sampled each round")
+    ap.add_argument("--drift", type=float, default=0.0, metavar="SIGMA_M",
+                    help="per-round client position random walk (meters)")
     ap.add_argument("--no-overlap-boost", action="store_true")
     ap.add_argument("--aggregation", choices=["paper", "fedavg"],
                     default="paper")
@@ -59,123 +64,39 @@ def main() -> None:
     n = args.clients
     fleet = latency.make_fleet(n=n, seed=args.seed)
     chan = ChannelModel()
-    pairs = pairing.fedpairing_pairing(fleet, chan)
-    pairing.validate_matching(pairs, n)
-    partner = pairing.partner_permutation(pairs, n)
-    lengths = splitting.propagation_lengths(fleet.cpu_hz, partner,
-                                            cfg.num_layers)
-    agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
     w = WorkloadModel(num_layers=cfg.num_layers,
                       batches_per_epoch=args.batches_per_round,
                       local_epochs=1)
-    print(f"[fed] {n} clients, pairs {pairs}")
-    print(f"[fed] propagation lengths {lengths.tolist()} (W={cfg.num_layers})")
+    # round-0 pairing preview on the initial channel realization
+    pairs = pairing.fedpairing_pairing(fleet, chan)
+    print(f"[fed] {n} clients, initial pairs {pairs}")
     print(f"[fed] modeled round time: "
           f"{latency.round_time_fedpairing(pairs, fleet, chan, w):.1f}s "
           f"(vanilla FL {latency.round_time_vanilla_fl(fleet, chan, w):.1f}s)")
 
-    key = jax.random.key(args.seed)
-    gparams = registry.init_params(cfg, key)
-    cparams = fedpair.replicate(gparams, n)
-
-    corpus = SyntheticLM(vocab_size=cfg.vocab_size, seed=args.seed).generate()
-    # non-overlapping client shards of the stream
-    shard_len = len(corpus) // n
-    batchers = [LMBatcher(corpus[i * shard_len:(i + 1) * shard_len],
-                          args.batch, args.seq, seed=args.seed + i)
-                for i in range(n)]
-
-    def next_batches():
-        per = [next(b) for b in batchers]
-        return {
-            "tokens": jnp.asarray(np.stack([p["tokens"] for p in per])),
-            "labels": jnp.asarray(np.stack([p["labels"] for p in per])),
-        }
-
-    fed_cfg = fedpair.FedPairingConfig(
-        lr=args.lr, overlap_boost=not args.no_overlap_boost,
-        aggregation=args.aggregation)
-
-    if args.engine == "bucketed":
-        from repro.core import fedbucket
-        bcfg = fedbucket.FedBucketConfig(
-            lr=args.lr, overlap_boost=not args.no_overlap_boost,
-            aggregation=args.aggregation,
-            bucket_granularity=args.bucket_granularity)
-        step, bplan = fedbucket.make_bucketed_fed_step(
-            cfg, partner, lengths, agg_w, bcfg)
-        print(f"[fed] bucketed: {len(bplan.bottom)}+{len(bplan.top)} phase "
-              f"groups, <= {bplan.num_compiled_shapes} compiled scan shapes, "
-              f"{bplan.scanned_blocks} scanned vs {bplan.dense_blocks} dense "
-              f"blocks/step (protocol {bplan.protocol_blocks})")
-        for r in range(args.rounds):
-            t0 = time.time()
-            losses = []
-            for _ in range(args.batches_per_round):
-                cparams, m = step(cparams, next_batches())
-                losses.append(float(m["loss"].mean()))
-            g = aggregation.aggregate(cparams, jnp.asarray(agg_w),
-                                      args.aggregation)
-            cparams = aggregation.broadcast(g, n)
-            print(f"  round {r}: mean client loss {np.mean(losses):.4f} "
-                  f"({time.time()-t0:.1f}s wall)")
-        return
-
-    if args.engine == "dist":
-        from repro.core import fedbucket, fedpair_dist
-        ndev = len(jax.devices())
-        if ndev < n:
-            raise SystemExit(f"dist engine needs >= {n} devices, have {ndev} "
-                             "(set XLA_FLAGS=--xla_force_host_platform_"
-                             f"device_count={n})")
-        mesh = jax.make_mesh((n,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-        masks = np.stack([np.arange(cfg.num_layers) < l for l in lengths]
-                         ).astype(np.float32)
-        split_ranges = fedbucket.fleet_phase_ranges(
-            lengths, partner, cfg.num_layers, args.bucket_granularity)
-        print(f"[fed] dist split envelope: bottom [0, {split_ranges[0]}), "
-              f"top [{split_ranges[1]}, {cfg.num_layers})")
-        dcfg = fedpair_dist.FedDistConfig(
-            lr=args.lr, overlap_boost=not args.no_overlap_boost,
-            split_ranges=split_ranges)
-        with jax.set_mesh(mesh):
-            step = fedpair_dist.make_dist_fed_step(
-                cfg, mesh, fedpair_dist.pairs_to_ppermute(partner), agg_w,
-                masks, dcfg)
-            for r in range(args.rounds):
-                t0 = time.time()
-                losses = []
-                for _ in range(args.batches_per_round):
-                    cparams, loss = step(cparams, next_batches())
-                    losses.append(float(loss))
-                g = aggregation.aggregate(cparams, jnp.asarray(agg_w),
-                                          args.aggregation)
-                cparams = aggregation.broadcast(g, n)
-                print(f"  round {r}: weighted loss {np.mean(losses):.4f} "
-                      f"({time.time()-t0:.1f}s wall)")
-        return
-
-    plan = splitting.split_plan(cfg, gparams)
-    loss_fn = functools.partial(registry.loss_fn, cfg=cfg)
-    step = fedpair.make_fed_step(
-        lambda p, b: loss_fn(p, b)[0], plan, cfg.num_layers, fed_cfg)
-
-    def batch_iter():
-        while True:
-            yield next_batches()
-
-    it = batch_iter()
-    for r in range(args.rounds):
+    rc = rounds.RoundConfig(
+        algorithm="fedpairing", engine=args.engine, rounds=args.rounds,
+        batches_per_round=args.batches_per_round,
+        participation=args.participation, drift_sigma_m=args.drift,
+        lr=args.lr, aggregation=args.aggregation,
+        overlap_boost=not args.no_overlap_boost,
+        bucket_granularity=args.bucket_granularity, seed=args.seed)
+    driver = rounds.RoundDriver(
+        cfg, rc, fleet, chan=chan, workload=w,
+        batch_fn=rounds.make_lm_batch_fn(cfg, n, args.batch, args.seq,
+                                         args.seed))
+    state = driver.init_state()
+    for _ in range(args.rounds):
         t0 = time.time()
-        cparams, losses = fedpair.run_round(
-            step, cparams, it, partner, lengths, agg_w,
-            args.batches_per_round)
-        g = aggregation.aggregate(cparams, jnp.asarray(agg_w),
-                                  args.aggregation)
-        cparams = aggregation.broadcast(g, n)
-        print(f"  round {r}: mean client loss {float(losses.mean()):.4f} "
-              f"({time.time()-t0:.1f}s wall)")
+        state = driver.run_round(state)
+        r = state.history[-1]
+        print(f"  round {r.round}: pairs {list(r.pairs)} "
+              f"lengths {list(r.lengths)} (W={cfg.num_layers}) "
+              f"mean client loss {r.mean_loss:.4f} "
+              f"sim {r.sim_round_s:.1f}s "
+              f"({r.cached_steps} compiled steps, "
+              f"{time.time() - t0:.1f}s wall)")
+    print(f"[fed] total simulated wall-clock: {state.sim_time_s:.1f}s")
 
 
 if __name__ == "__main__":

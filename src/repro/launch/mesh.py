@@ -6,7 +6,7 @@ init to fabricate 512 host devices; everything else must see 1 CPU).
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,16 +14,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever local devices exist (tests / examples)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

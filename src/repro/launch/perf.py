@@ -19,6 +19,7 @@ import time
 
 import jax
 
+from repro import compat
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, get_shape
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (build_fed_step, build_serve_step,
@@ -70,7 +71,7 @@ def run(arch_id: str, shape_id: str, variant: str, out_dir: str) -> dict:
             c, shape, mesh, unroll=unroll, **kw)
 
     # memory pass (scan program)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn, ex, ins, outs = builder(cfg, 1)
         compiled = jax.jit(fn, in_shardings=ins,
                            out_shardings=outs).lower(*ex).compile()

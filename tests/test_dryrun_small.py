@@ -8,27 +8,28 @@ import pytest
 
 CODE = r"""
 import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
+from repro import compat
 from repro.configs import get_smoke_config
 from repro.configs.base import InputShape
 from repro.launch.steps import build_step
 from repro.roofline import analysis
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 
 for arch in ["tinyllama-1.1b", "deepseek-moe-16b", "rwkv6-1.6b",
              "zamba2-1.2b", "qwen2-vl-2b", "seamless-m4t-large-v2"]:
     cfg = get_smoke_config(arch).with_overrides(dtype="bfloat16")
     for shape in [InputShape("train", 64, 8, "train"),
                   InputShape("decode", 64, 8, "decode")]:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             fn, ex, ins, outs = build_step(cfg, shape, mesh, unroll=True)
             compiled = jax.jit(fn, in_shardings=ins,
                                out_shardings=outs).lower(*ex).compile()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         coll = analysis.collective_bytes(compiled.as_text())
         assert cost.get("flops", 0) > 0, (arch, shape.name)
         print(f"OK {arch} {shape.name} flops={cost['flops']:.2e} "

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import fedpair, latency, participation, splitting
 from repro.core.latency import ChannelModel
 from repro.models import vision
@@ -122,6 +123,7 @@ class TestParticipation:
 def test_gradient_accumulation_matches_monolithic():
     code = r"""
 import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_smoke_config
@@ -130,14 +132,14 @@ from repro.launch.steps import build_train_step
 import repro.models.registry as R
 from repro.optim import adamw
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro import compat
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 cfg = get_smoke_config("tinyllama-1.1b")
 shape = InputShape("train", 32, 8, "train")
 key = jax.random.key(0)
 outs = {}
 for mb in (1, 4):
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn, ex, ins, osh = build_train_step(cfg, shape, mesh, microbatches=mb)
         jitted = jax.jit(fn, in_shardings=ins, out_shardings=osh)
         params = jax.device_put(R.init_params(cfg, key), ins[0])

@@ -1,7 +1,7 @@
 """Pairing algorithm (paper Alg. 1) — invariants + baselines + optimality gap."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.hypothesis_compat import given, settings, strategies as st
 
 from repro.core import latency, pairing
 

@@ -1,13 +1,18 @@
 """Property-based tests (hypothesis) on system invariants."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.hypothesis_compat import given, settings, strategies as st
 
-from repro.core import splitting
+from repro.core import latency, pairing, participation, splitting
+from repro.core.latency import ChannelModel, WorkloadModel
 from repro.core.pairing import greedy_pairing, optimal_pairing
 from repro.kernels.ref import fit_chunk
 from repro.models import common
+
+CHAN = ChannelModel()
 
 
 @given(st.integers(2, 20))
@@ -111,3 +116,74 @@ def test_mix_params_is_convex_in_mask(fracs):
         mix = splitting.mix_params(own, other, plan, mask)
         vals = np.unique(np.asarray(mix["blocks"]["w"]))
         assert set(vals).issubset({1.0, 5.0})
+
+
+# ---------------------------------------------------------------------------
+# protocol layer: pairing / participation / round time (ISSUE 2 satellites)
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(2, 20), seed=st.integers(0, 200))
+@settings(max_examples=25, deadline=None)
+def test_fedpairing_greedy_is_always_valid_matching(n, seed):
+    fleet = latency.make_fleet(n=n, seed=seed)
+    pairs = pairing.fedpairing_pairing(fleet, CHAN)
+    pairing.validate_matching(pairs, n)
+
+
+@given(n=st.integers(4, 14), seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_greedy_weight_dominates_table1_baselines_and_below_optimal(n, seed):
+    """Under the Eq. (5) combined weights, the paper's greedy must collect
+    at least as much total weight as every Table-I baseline pairing, and
+    no more than the blossom optimum."""
+    fleet = latency.make_fleet(n=n, seed=seed)
+    w = pairing.edge_weights(fleet, CHAN, alpha=1.0, beta=0.05)
+
+    def total(pairs):
+        return sum(w[i, j] for i, j in pairs)
+
+    greedy = total(pairing.fedpairing_pairing(fleet, CHAN))
+    for name, base in (("random", pairing.random_pairing(n, seed)),
+                       ("location", pairing.location_pairing(fleet, CHAN)),
+                       ("compute", pairing.compute_pairing(fleet, CHAN))):
+        assert greedy >= total(base) - 1e-9, name
+    assert total(pairing.optimal_pairing(w)) + 1e-9 >= greedy
+
+
+@given(n=st.integers(3, 16), frac=st.floats(0.2, 0.9),
+       seed=st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_cohort_pairing_keeps_nonparticipants_as_self_pairs(n, frac, seed):
+    W = 12
+    fleet = latency.make_fleet(n=n, seed=seed)
+    rng = np.random.default_rng(seed)
+    cohort = participation.sample_cohort(n, frac, rng)
+    partner, lengths, active = participation.cohort_pairing(
+        fleet, CHAN, cohort, W)
+    outside = np.setdiff1d(np.arange(n), cohort)
+    assert np.all(partner[outside] == outside)       # self-pairs
+    assert np.all(lengths[outside] == W)             # full stack
+    assert np.all(active[cohort]) and not active[outside].any()
+    assert np.all(partner[partner] == np.arange(n))  # involution
+    for i in range(n):                               # split rule holds
+        if partner[i] != i:
+            assert lengths[i] + lengths[partner[i]] == W
+            assert 1 <= lengths[i] <= W - 1
+
+
+@given(n=st.integers(2, 12), seed=st.integers(0, 50),
+       k=st.integers(0, 11), scale=st.floats(1.01, 4.0))
+@settings(max_examples=30, deadline=None)
+def test_round_time_monotone_in_every_cpu_frequency(n, seed, k, scale):
+    """Speeding up ANY client never slows the simulated round (for a fixed
+    pairing; the split rule re-balances lengths internally)."""
+    fleet = latency.make_fleet(n=n, seed=seed)
+    pairs = pairing.fedpairing_pairing(fleet, CHAN)
+    partner = pairing.partner_permutation(pairs, n)
+    w = WorkloadModel(num_layers=18)
+    t0 = latency.round_time_from_partner(partner, fleet, CHAN, w)
+    f2 = fleet.cpu_hz.copy()
+    f2[k % n] *= scale
+    fleet2 = dataclasses.replace(fleet, cpu_hz=f2)
+    t1 = latency.round_time_from_partner(partner, fleet2, CHAN, w)
+    assert t1 <= t0 + 1e-9

@@ -1,0 +1,111 @@
+"""Regression pins for PR-1 edge cases (length-bucketed split execution).
+
+Small, exact-value tests so behavior changes in the chunking helpers and
+the SPMD split envelope show up as diffs, not as silent perf/semantic
+drift:
+
+* ``ce_chunk_size`` — the chunked-CE divisor floor (prime S must refuse).
+* ``wkv6_effective_chunk`` — Pallas 64-lane coercion vs exact xla honor.
+* ``fleet_phase_ranges`` — the uniform SPMD envelope on the extreme
+  L=1 vs W-1 fleet (and its covering property under granularity).
+"""
+import numpy as np
+import pytest
+
+from repro.core import fedbucket
+from repro.kernels import ops
+from repro.kernels.ref import ce_chunk_size, fit_chunk
+
+
+class TestCeChunkSizeFloor:
+    @pytest.mark.parametrize("seq_len", [61, 31, 127, 997])
+    def test_prime_seq_below_floor_raises(self, seq_len):
+        """Primes only admit divisor 1 < floor=chunk//4 -> refuse, never
+        silently degrade the chunked head to token-at-a-time."""
+        with pytest.raises(ValueError, match="degrades the chunked head"):
+            ce_chunk_size(seq_len, 16)
+
+    def test_tiny_prime_at_floor_one_is_allowed(self):
+        """chunk < 8 puts the floor at 1, so even a prime S is legal —
+        the caller asked for near-token-level chunking explicitly."""
+        assert ce_chunk_size(7, 2) == 1
+        assert ce_chunk_size(3, 4) == 3        # S itself divides
+
+    @pytest.mark.parametrize("seq_len,chunk,expect", [
+        (64, 48, 32),      # largest divisor <= chunk
+        (64, 16, 16),      # exact hit
+        (8, 64, 8),        # chunk larger than S -> S
+        (12, 8, 6),        # divisor 6 >= floor 2
+        (60, 16, 15),      # 15 >= floor 4
+    ])
+    def test_divisor_values(self, seq_len, chunk, expect):
+        assert ce_chunk_size(seq_len, chunk) == expect
+
+    def test_barely_composite_below_floor_raises(self):
+        # 62 = 2 * 31: best divisor <= 16 is 2, floor is 4 -> refuse
+        with pytest.raises(ValueError):
+            ce_chunk_size(62, 16)
+
+    def test_floor_tracks_request_not_seq(self):
+        # same S, smaller request: floor shrinks with the request
+        assert ce_chunk_size(62, 8) == 2       # floor = 8//4 = 2
+        assert fit_chunk(62, 16) == 2          # the raw helper never raises
+
+
+class TestWkv6EffectiveChunk:
+    def test_xla_honors_request_exactly(self):
+        for chunk in (1, 16, 63, 64, 128):
+            assert ops.wkv6_effective_chunk(chunk, "xla") == chunk
+
+    @pytest.mark.parametrize("impl", ["pallas", "pallas_interpret"])
+    def test_kernel_coerces_up_to_min_tile(self, impl):
+        m = ops.WKV6_MIN_KERNEL_CHUNK
+        assert ops.wkv6_effective_chunk(16, impl) == m
+        assert ops.wkv6_effective_chunk(m - 1, impl) == m
+        assert ops.wkv6_effective_chunk(m, impl) == m      # boundary
+        assert ops.wkv6_effective_chunk(m + 1, impl) == m + 1
+        assert ops.wkv6_effective_chunk(128, impl) == 128
+
+    def test_min_tile_is_pallas_lane_width(self):
+        assert ops.WKV6_MIN_KERNEL_CHUNK == 64
+
+
+class TestFleetPhaseRangesExtreme:
+    W = 8
+
+    def _extreme(self, n=6):
+        """Worst-case heterogeneity: alternating L=1 / L=W-1 pairs."""
+        partner = np.array([i ^ 1 for i in range(n)])
+        lengths = np.array([1 if i % 2 == 0 else self.W - 1
+                            for i in range(n)])
+        return partner, lengths
+
+    def test_extreme_fleet_envelope_is_nearly_full_stack(self):
+        partner, lengths = self._extreme()
+        hi, lo = fedbucket.fleet_phase_ranges(lengths, partner, self.W)
+        assert (hi, lo) == (self.W - 1, 1)
+
+    def test_envelope_covers_every_client(self):
+        """Covering property the dist core depends on (it refuses
+        uncovering ranges): bottom_hi >= max L_i, top_lo <= min L_p."""
+        partner, lengths = self._extreme()
+        for g in (1, 2, 3, self.W):
+            hi, lo = fedbucket.fleet_phase_ranges(lengths, partner, self.W,
+                                                  granularity=g)
+            assert hi >= lengths.max()
+            assert lo <= lengths[partner].min()
+            assert 1 <= hi <= self.W and 0 <= lo <= self.W
+
+    def test_granularity_full_degenerates_to_whole_stack(self):
+        partner, lengths = self._extreme()
+        hi, lo = fedbucket.fleet_phase_ranges(lengths, partner, self.W,
+                                              granularity=self.W)
+        assert (hi, lo) == (self.W, 0)
+
+    def test_extreme_fleet_still_beats_dense_in_protocol_blocks(self):
+        partner, lengths = self._extreme()
+        plan = fedbucket.plan_buckets(lengths, partner, self.W)
+        assert plan.scanned_blocks == plan.protocol_blocks
+        assert plan.protocol_blocks == plan.dense_blocks // 2
+        # exactly two scan shapes per phase on this two-length fleet
+        assert plan.num_compiled_shapes <= 4

@@ -1,0 +1,236 @@
+"""Round-driver subsystem — cross-engine equivalence at ROUND scale.
+
+The paper's claims are multi-round phenomena: per-round cohort sampling,
+re-pairing on a drifting channel, split-point recomputation, aggregation,
+straggler-bounded simulated time.  These tests pin down that
+
+* the driver is deterministic: same seed -> identical cohort / pairing /
+  length traces, regardless of the execution engine,
+* N rounds on the vmapped and bucketed engines produce allclose parameter
+  trees (the engines implement the same protocol),
+* the dist engine matches at 1 round where the host can fabricate a mesh,
+* the baselines (fl / sl / splitfed) run through the same loop,
+* partial participation excludes non-participants from aggregation,
+* the Eq. (3) accounting accumulates and FedPairing beats vanilla FL on a
+  heterogeneous fleet.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import latency, rounds
+from repro.core.latency import WorkloadModel
+
+W = 4
+N = 4
+CFG = get_smoke_config("tinyllama-1.1b").with_overrides(num_layers=W)
+FLEET = latency.make_fleet(n=N, seed=0)
+
+
+def _driver(engine="vmapped", algorithm="fedpairing", **kw):
+    rc_kw = dict(algorithm=algorithm, engine=engine, rounds=3,
+                 batches_per_round=2, participation=0.75, drift_sigma_m=2.0,
+                 donate=False, seed=0)
+    rc_kw.update(kw)
+    return rounds.RoundDriver(CFG, rounds.RoundConfig(**rc_kw), FLEET)
+
+
+def _tree_allclose(a, b, rtol=5e-4, atol=5e-5):
+    for (path, x), (_, y) in zip(jax.tree_util.tree_flatten_with_path(a)[0],
+                                 jax.tree_util.tree_flatten_with_path(b)[0]):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol,
+                                   atol=atol, err_msg=str(path))
+
+
+class TestCrossEngine:
+    def test_vmapped_vs_bucketed_rounds(self):
+        """N rounds, same seed: identical traces, allclose parameters."""
+        d_v, d_b = _driver("vmapped"), _driver("bucketed")
+        s_v, s_b = d_v.run(), d_b.run()
+        assert len(s_v.history) == len(s_b.history) == 3
+        for r_v, r_b in zip(s_v.history, s_b.history):
+            assert r_v.cohort == r_b.cohort
+            assert r_v.pairs == r_b.pairs
+            assert r_v.lengths == r_b.lengths
+            assert r_v.sim_round_s == r_b.sim_round_s
+        _tree_allclose(d_v.global_params(s_v), d_b.global_params(s_b))
+
+    def test_repairing_actually_varies(self):
+        """The harness is only meaningful if re-pairing happens: across
+        rounds on a drifting channel with cohort sampling, the pairing
+        trace must not be constant."""
+        s = _driver("bucketed", rounds=6, participation=0.5,
+                    drift_sigma_m=10.0).run()
+        assert len({(r.cohort, r.pairs) for r in s.history}) > 1
+
+    def test_bucketed_step_cache_bounded_by_distinct_pairings(self):
+        d = _driver("bucketed", rounds=6, participation=0.5,
+                    drift_sigma_m=10.0)
+        s = d.run()
+        distinct = len({(r.pairs, r.lengths, r.cohort) for r in s.history})
+        assert 1 <= s.history[-1].cached_steps <= distinct
+
+    def test_dist_engine_one_round(self):
+        """dist == vmapped for one driver round, where the mesh allows."""
+        if len(jax.devices()) < N:
+            pytest.skip(f"dist engine needs >= {N} devices, have "
+                        f"{len(jax.devices())} (run under XLA_FLAGS="
+                        f"--xla_force_host_platform_device_count={N})")
+        d_d, d_v = _driver("dist"), _driver("vmapped")
+        s_d, s_v = d_d.run(rounds=1), d_v.run(rounds=1)
+        assert s_d.history[0].pairs == s_v.history[0].pairs
+        assert s_d.history[0].lengths == s_v.history[0].lengths
+        _tree_allclose(d_d.global_params(s_d), d_v.global_params(s_v))
+
+
+class TestDeterminism:
+    def test_same_seed_same_trace(self):
+        s1, s2 = _driver().run(), _driver().run()
+        for r1, r2 in zip(s1.history, s2.history):
+            assert r1 == r2
+
+    def test_run_round_value_semantics(self):
+        """A kept RoundState snapshot re-runs with the identical trace:
+        run_round must not mutate the input state's rng or history (the
+        batch stream is external and does advance)."""
+        d = _driver(participation=0.5, drift_sigma_m=5.0)
+        s0 = d.init_state()
+        s1a = d.run_round(s0)
+        assert s0.history == [] and s0.round == 0
+        s1b = d.run_round(s0)
+        r_a, r_b = s1a.history[0], s1b.history[0]
+        assert (r_a.cohort, r_a.pairs, r_a.lengths, r_a.sim_round_s) \
+            == (r_b.cohort, r_b.pairs, r_b.lengths, r_b.sim_round_s)
+
+    def test_random_pair_mechanism_follows_driver_seed(self):
+        """The 'random' Table-I mechanism must draw from the driver rng:
+        different seeds -> different pairing traces."""
+        fleet6 = latency.make_fleet(n=6, seed=0)
+
+        def trace(seed):
+            rc = rounds.RoundConfig(pair_mechanism="random", rounds=3,
+                                    batches_per_round=1, donate=False,
+                                    seed=seed)
+            d = rounds.RoundDriver(CFG, rc, fleet6)
+            return [r.pairs for r in d.run().history]
+
+        assert trace(0) != trace(1)
+
+    def test_different_seed_different_trace(self):
+        s1 = _driver(rounds=4, drift_sigma_m=10.0).run()
+        s2 = _driver(rounds=4, drift_sigma_m=10.0, seed=7).run()
+        t1 = [(r.cohort, r.pairs, r.lengths) for r in s1.history]
+        t2 = [(r.cohort, r.pairs, r.lengths) for r in s2.history]
+        assert t1 != t2
+
+
+class TestRoundSemantics:
+    def test_cohort_closed_under_pairing(self):
+        s = _driver(participation=0.5, rounds=4, drift_sigma_m=5.0).run()
+        for r in s.history:
+            cohort = set(r.cohort)
+            for i, j in r.pairs:
+                assert {i, j} <= cohort
+            # non-participants keep the full stack (self-pair, L=W)
+            for i in range(N):
+                if i not in cohort:
+                    assert r.lengths[i] == W
+
+    def test_pair_lengths_sum_to_w(self):
+        s = _driver(rounds=3).run()
+        for r in s.history:
+            for i, j in r.pairs:
+                assert r.lengths[i] + r.lengths[j] == W
+
+    def test_nonparticipants_excluded_from_aggregation(self):
+        """Poisoning the data of non-participating clients must not move
+        the global model (or the recorded cohort loss): non-participants'
+        replicas are excluded from the round's aggregation."""
+        d_a = _driver(participation=0.5, rounds=2, drift_sigma_m=5.0)
+        s_a = d_a.run()
+        cohorts = [set(r.cohort) for r in s_a.history]
+        assert all(len(c) < N for c in cohorts)   # someone to poison
+
+        bpr = d_a.rc.batches_per_round
+        clean_fn = rounds.make_lm_batch_fn(CFG, N, seed=0)
+        calls = [0]
+
+        def poisoned_fn():
+            b = clean_fn()
+            r = min(calls[0] // bpr, len(cohorts) - 1)
+            calls[0] += 1
+            bad = np.asarray([i not in cohorts[r] for i in range(N)])
+            tok = np.array(b["tokens"])          # writable host copy
+            tok[bad] = (tok[bad] * 7 + 13) % CFG.vocab_size
+            return {"tokens": jax.numpy.asarray(tok), "labels": b["labels"]}
+
+        d_b = rounds.RoundDriver(CFG, d_a.rc, FLEET, batch_fn=poisoned_fn)
+        s_b = d_b.run()
+        for r_a, r_b in zip(s_a.history, s_b.history):
+            assert r_a.cohort == r_b.cohort and r_a.pairs == r_b.pairs
+        _tree_allclose(d_a.global_params(s_a), d_b.global_params(s_b),
+                       rtol=1e-6, atol=1e-7)
+
+    def test_sim_time_accumulates(self):
+        s = _driver(rounds=3).run()
+        totals = [r.sim_total_s for r in s.history]
+        assert all(t > 0 for t in totals)
+        np.testing.assert_allclose(totals[-1], sum(r.sim_round_s
+                                                   for r in s.history))
+        assert s.sim_time_s == totals[-1]
+
+
+class TestBaselinesThroughDriver:
+    @pytest.mark.parametrize("algorithm", ["fl", "sl", "splitfed"])
+    def test_baseline_runs_and_accumulates_time(self, algorithm):
+        d = _driver(algorithm=algorithm, rounds=2)
+        s = d.run()
+        assert len(s.history) == 2
+        assert s.sim_time_s > 0
+        assert np.isfinite(s.history[-1].mean_loss)
+        # the global model is a finite tree
+        g = d.global_params(s)
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+    def test_fedpairing_beats_fl_on_heterogeneous_fleet(self):
+        """Acceptance: simulated FedPairing round time < vanilla FL on a
+        heterogeneous fleet (straggler-bounded, paper-calibrated)."""
+        w = WorkloadModel(num_layers=18, batches_per_epoch=2, local_epochs=1)
+        fleet = latency.make_fleet(n=6, seed=0)
+        times = {}
+        for alg in ("fedpairing", "fl"):
+            rc = rounds.RoundConfig(algorithm=alg, engine="vmapped",
+                                    rounds=2, batches_per_round=2,
+                                    donate=False, seed=0)
+            d = rounds.RoundDriver(CFG, rc, fleet, workload=w)
+            times[alg] = np.mean([r.sim_round_s for r in d.run().history])
+        assert times["fedpairing"] < times["fl"]
+
+
+class TestConfigValidation:
+    def test_rejects_unknown_algorithm(self):
+        with pytest.raises(ValueError, match="algorithm"):
+            rounds.RoundConfig(algorithm="fedprox")
+
+    def test_rejects_unknown_engine(self):
+        with pytest.raises(ValueError, match="engine"):
+            rounds.RoundConfig(engine="pmap")
+
+    def test_rejects_unknown_pairing(self):
+        with pytest.raises(ValueError, match="pair_mechanism"):
+            rounds.RoundConfig(pair_mechanism="optimal")
+
+    def test_rejects_unknown_aggregation(self):
+        with pytest.raises(ValueError, match="aggregation"):
+            rounds.RoundConfig(aggregation="fedAvg")
+
+    def test_rejects_custom_loss_on_specialized_engines(self):
+        """bucketed/dist build their loss from cfg; a custom objective
+        would be silently ignored — the driver must refuse."""
+        with pytest.raises(ValueError, match="vmapped engine"):
+            rounds.RoundDriver(CFG, rounds.RoundConfig(engine="bucketed"),
+                               FLEET, loss_fn=lambda p, b: 0.0)

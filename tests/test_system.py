@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import (aggregation, baselines, fedpair, latency, pairing,
                         splitting)
 from repro.data import FederatedBatcher, SyntheticImages, iid_partition
@@ -122,6 +123,7 @@ def test_dist_engine_matches_vmapped_semantics():
     devices so this process's device count stays 1."""
     code = r"""
 import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import functools
 import jax, jax.numpy as jnp, numpy as np
@@ -153,10 +155,10 @@ new_v, _ = step_v(cp, batch, jnp.asarray(partner), jnp.asarray(lengths),
                   jnp.asarray(agg_w))
 
 # dist engine
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro import compat
+mesh = compat.make_mesh((4,), ("data",))
 dcfg = fedpair_dist.FedDistConfig(lr=0.1)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     step_d = fedpair_dist.make_dist_fed_step(
         cfg, mesh, fedpair_dist.pairs_to_ppermute(partner), agg_w, masks, dcfg)
     new_d, _ = step_d(cp, batch)
