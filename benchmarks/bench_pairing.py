@@ -1,41 +1,91 @@
-"""Table I — average round time under different pairing mechanisms.
+"""Table I — average round time under different pairing mechanisms —
+plus the split-POLICY comparison the planning layer opens up.
 
-Reports FedPairing's greedy (joint), random, location-based and
-computation-resource-based pairing on the calibrated latency model,
-averaged over fleet draws, plus the paper's numbers for reference.
+Two axes on the calibrated latency model, averaged over fleet draws:
+
+* pairing mechanism (paper Table I): FedPairing's greedy (joint), random,
+  location-based, computation-resource-based — with the paper's numbers
+  for reference,
+* split policy (beyond-paper, ``core.planning``): for the greedy pairing,
+  the paper's compute-ratio rule vs ``fixed:K`` (uniform SplitFed-style
+  cut) vs ``latency-opt`` (per-pair cut search against the full Eq. (3)
+  cost).  ``latency-opt`` is never worse than ``paper`` by construction —
+  the per-fleet max objective ratio is recorded and asserted by
+  ``scripts/bench_smoke.sh``.
+
+Writes machine-readable ``BENCH_pairing.json`` at the repo root
+(``tiny=True`` smoke runs write ``BENCH_pairing_tiny.json`` so CI never
+clobbers the tracked record):
+
+    {"table1": {"<mechanism>": {"round_s": .., "paper_s": ..}, ...},
+     "policies": {"<policy>": {"objective": .., "round_s": ..}, ...},
+     "latency_opt_vs_paper_objective": <mean ratio, <= 1.0>,
+     "max_objective_ratio": <worst fleet, <= 1.0>}
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, List
 
 import numpy as np
 
-from repro.core import latency, pairing
+from repro.core import latency, pairing, planning
 from repro.core.latency import ChannelModel, WorkloadModel
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_ROOT, "BENCH_pairing.json")
+TINY_JSON_PATH = os.path.join(_ROOT, "BENCH_pairing_tiny.json")
 
 PAPER = {"fedpairing": 1553.0, "random": 4063.0, "location": 7275.0,
          "compute": 1807.0}
 
 
-def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18
-        ) -> List[Dict]:
+def _policies(num_layers: int):
+    return ("paper", f"fixed:{num_layers // 2}", "latency-opt")
+
+
+def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
+        tiny: bool = False, json_path: str = "") -> List[Dict]:
+    json_path = json_path or (TINY_JSON_PATH if tiny else JSON_PATH)
+    if tiny:
+        n_fleets, n_clients = 3, 8
     chan = ChannelModel()
     w = WorkloadModel(num_layers=num_layers)
     acc = {k: [] for k in PAPER}
-    t0 = time.perf_counter()
-    for seed in range(n_fleets):
+    pol_obj = {p: [] for p in _policies(num_layers)}
+    pol_rt = {p: [] for p in _policies(num_layers)}
+    obj_ratios = []                     # per-fleet latency-opt / paper
+    t_mech = t_pol = 0.0                # timed separately: the Table-I
+    for seed in range(n_fleets):        # mechanisms vs the policy planning
         fleet = latency.make_fleet(n=n_clients, seed=seed)
 
         def t(pairs):
             return latency.round_time_fedpairing(pairs, fleet, chan, w)
 
-        acc["fedpairing"].append(t(pairing.fedpairing_pairing(fleet, chan)))
+        t0 = time.perf_counter()
+        greedy = pairing.fedpairing_pairing(fleet, chan)
+        acc["fedpairing"].append(t(greedy))
         acc["compute"].append(t(pairing.compute_pairing(fleet, chan)))
         acc["location"].append(t(pairing.location_pairing(fleet, chan)))
         acc["random"].append(np.mean(
             [t(pairing.random_pairing(n_clients, seed=s)) for s in range(5)]))
-    us = (time.perf_counter() - t0) * 1e6 / n_fleets
+        t_mech += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        partner = planning.partner_from_pairs(greedy, n_clients)
+        for pol in _policies(num_layers):
+            plan = planning.build_round_plan(fleet, chan, partner,
+                                             num_layers, policy=pol,
+                                             workload=w)
+            pol_obj[pol].append(plan.objective)
+            pol_rt[pol].append(latency.round_time_plan(plan, fleet, chan, w))
+        obj_ratios.append(pol_obj["latency-opt"][-1] / pol_obj["paper"][-1])
+        t_pol += time.perf_counter() - t0
+    us = t_mech * 1e6 / n_fleets
+    us_pol = t_pol * 1e6 / n_fleets
+
     rows = []
     for k in ("fedpairing", "random", "location", "compute"):
         ours = float(np.mean(acc[k]))
@@ -46,4 +96,33 @@ def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18
             "derived": f"round_s={ours:.0f} rel={rel_ours:.2f} "
                        f"paper_s={PAPER[k]:.0f} paper_rel={rel_paper:.2f}",
         })
+    policies_report = {}
+    for pol in _policies(num_layers):
+        obj, rt = float(np.mean(pol_obj[pol])), float(np.mean(pol_rt[pol]))
+        policies_report[pol] = {"objective": round(obj, 2),
+                                "round_s": round(rt, 1)}
+        rows.append({
+            "name": f"pairing/policy_{pol}", "us_per_call": us_pol,
+            "derived": f"objective={obj:.0f} round_s={rt:.0f} "
+                       f"obj_vs_paper="
+                       f"{obj / np.mean(pol_obj['paper']):.3f}",
+        })
+    mean_ratio = float(np.mean(obj_ratios))
+    max_ratio = float(np.max(obj_ratios))
+    rows.append({
+        "name": "pairing/latency_opt_vs_paper", "us_per_call": us_pol,
+        "derived": f"mean_obj_ratio={mean_ratio:.3f} "
+                   f"max_obj_ratio={max_ratio:.3f} (<= 1.0 by construction)",
+    })
+    with open(json_path, "w") as f:
+        json.dump({
+            "tiny": tiny, "fleets": n_fleets, "clients": n_clients,
+            "num_layers": num_layers,
+            "table1": {k: {"round_s": round(float(np.mean(v)), 1),
+                           "paper_s": PAPER[k]} for k, v in acc.items()},
+            "policies": policies_report,
+            "latency_opt_vs_paper_objective": round(mean_ratio, 4),
+            "max_objective_ratio": round(max_ratio, 4),
+        }, f, indent=2)
+        f.write("\n")
     return rows

@@ -1,7 +1,9 @@
 """Benchmark harness — one module per paper table/figure + perf suites.
 
 Prints ``name,us_per_call,derived`` CSV rows:
-  * table1/*  — pairing-mechanism round times   (paper Table I)
+  * table1/*, pairing/* — pairing-mechanism round times (paper Table I)
+                + split-policy comparison (``core.planning``); writes
+                machine-readable ``BENCH_pairing.json``
   * table2/*  — algorithm round times           (paper Table II)
   * fig2/*,fig3/* — convergence IID / Non-IID   (paper Figs. 2-3)
   * kernel/*  — kernel micro-benchmarks (framework)
@@ -25,14 +27,15 @@ def main() -> None:
                     help="comma list: pairing,roundtime,convergence,kernels,"
                          "fedstep")
     ap.add_argument("--tiny", action="store_true",
-                    help="shrink workloads (smoke/CI; applies to fedstep/roundtime)")
+                    help="shrink workloads (smoke/CI; applies to "
+                         "pairing/fedstep/roundtime)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     suites = []
     if only is None or "pairing" in only:
         from benchmarks import bench_pairing
-        suites.append(bench_pairing.run)
+        suites.append(functools.partial(bench_pairing.run, tiny=args.tiny))
     if only is None or "roundtime" in only:
         from benchmarks import bench_roundtime
         suites.append(functools.partial(bench_roundtime.run, tiny=args.tiny))

@@ -1,11 +1,34 @@
 #!/usr/bin/env bash
-# Benchmark bit-rot guard (tier-1 flow): tiny-config fedstep + roundtime
-# suites must exit 0 and emit valid machine-readable JSON.
+# Benchmark bit-rot guard (tier-1 flow): tiny-config pairing + fedstep +
+# roundtime suites must exit 0 and emit valid machine-readable JSON.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only fedstep,roundtime --tiny
+    python -m benchmarks.run --only pairing,fedstep,roundtime --tiny
+
+python - <<'PY'
+import json
+with open("BENCH_pairing_tiny.json") as f:
+    d = json.load(f)
+table1 = d.get("table1", {})
+assert {"fedpairing", "random", "location", "compute"} <= set(table1), \
+    table1.keys()
+policies = d.get("policies", {})
+assert {"paper", "latency-opt"} <= set(policies), policies.keys()
+for name, e in policies.items():
+    for key in ("objective", "round_s"):
+        assert key in e, (name, key)
+    assert e["objective"] > 0 and e["round_s"] > 0, (name, e)
+# the planning layer's guarantee: the latency-opt split policy is never
+# worse than the paper's compute-ratio rule, on EVERY benchmarked fleet
+assert d["max_objective_ratio"] <= 1.0 + 1e-9, d["max_objective_ratio"]
+assert d["latency_opt_vs_paper_objective"] <= 1.0 + 1e-9, \
+    d["latency_opt_vs_paper_objective"]
+print("bench_smoke: BENCH_pairing_tiny.json OK "
+      f"(latency-opt/paper objective={d['latency_opt_vs_paper_objective']}, "
+      f"worst fleet={d['max_objective_ratio']})")
+PY
 
 python - <<'PY'
 import json, sys

@@ -7,6 +7,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# planning suite first (fast, host-side): the RoundPlan invariants gate
+# everything downstream — fail here before paying for the full suite
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m planning
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 bash scripts/bench_smoke.sh

@@ -1,5 +1,13 @@
-"""FedPairing core: pairing, splitting, split-FL training, latency model."""
+"""FedPairing core: pairing, planning, splitting, split-FL training,
+latency model."""
 from repro.core.fedpair import FedPairingConfig, make_fed_step, replicate  # noqa: F401
+from repro.core.planning import (  # noqa: F401
+    RoundPlan,
+    SplitPolicy,
+    baseline_plan,
+    build_round_plan,
+    get_policy,
+)
 from repro.core.pairing import (  # noqa: F401
     compute_pairing,
     edge_weights,

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ArchFamily
+from repro.core import planning
 from repro.kernels.ref import ce_chunk_size
 from repro.models import common, rwkv6, transformer
 
@@ -198,11 +199,12 @@ def fleet_phase_ranges(lengths, partner, num_layers: int,
     exploit: scan [0, max_i ceil(L_i)) and [min_i floor(L_p), W) instead of
     two full stacks.  Degenerates to (W/2, W/2) on a homogeneous fleet —
     the old ``static_half_split`` — and to (W, 0) for a worst-case fleet.
+
+    Thin wrapper over ``planning.phase_envelope`` (the plan layer owns the
+    envelope semantics; ``RoundPlan.phase_envelope`` is the same values) —
+    kept because the bucket/dist engines and their tests address it here.
     """
-    plan = plan_buckets(lengths, partner, num_layers, granularity)
-    bottom_hi = max(g.hi for g in plan.bottom)
-    top_lo = min(g.lo for g in plan.top)
-    return bottom_hi, top_lo
+    return planning.phase_envelope(lengths, partner, num_layers, granularity)
 
 
 # ---------------------------------------------------------------------------

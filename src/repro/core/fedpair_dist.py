@@ -24,7 +24,8 @@ is semantically identical — see DESIGN.md §4.
 
 Static split ranges (beyond-paper, DESIGN.md §Perf): shard_map is SPMD —
 one program for every device — so per-client static slicing is out, but a
-*uniform* slice is not: ``split_ranges=(bottom_hi, top_lo)`` (from
+*uniform* slice is not: ``split_ranges=(bottom_hi, top_lo)`` (the round
+plan's envelope — ``planning.RoundPlan.phase_envelope`` /
 ``fedbucket.fleet_phase_ranges``) scans only blocks [0, bottom_hi) in
 phase A and [top_lo, W) in phase B, gating the per-client residual inside
 the slice.  On an all-equal fleet this degenerates to L_i = W/2 and the
@@ -105,7 +106,8 @@ def make_dist_fed_step(cfg: ArchConfig, mesh, perm_pairs: Sequence[Tuple[int, in
         raise ValueError(
             f"split ranges (bottom [0, {bot_hi}), top [{top_lo}, {W})) do "
             f"not cover the fleet's splits (max L_i={max_l}, min "
-            f"L_p={min_lp}); derive them with fedbucket.fleet_phase_ranges "
+            f"L_p={min_lp}); derive them from the RoundPlan "
+            "(plan.phase_envelope() / fedbucket.fleet_phase_ranges) "
             "or widen the envelope.")
     # the homogeneous alias runs ungated; sliced ranges gate the residual
     static_gates = dist_cfg.static_half_split

@@ -16,6 +16,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import planning
+
 
 @dataclasses.dataclass(frozen=True)
 class ChannelModel:
@@ -117,18 +119,28 @@ class WorkloadModel:
     batch_size: int = 32
     batches_per_epoch: int = 78         # 2500 samples / batch 32
     local_epochs: int = 2               # paper: 2 epochs / round
+    # optional per-cut boundary payload profiles (index cut-1, cuts
+    # 1..W-1); None -> the flat feature/grad_bytes above.  Consulted by
+    # planning.pair_cost, which lets the latency-opt split policy trade
+    # compute balance against a narrower boundary tensor.
+    feature_profile: Optional[Tuple[float, ...]] = None
+    grad_profile: Optional[Tuple[float, ...]] = None
 
 
 def split_lengths(f_i: float, f_j: float, num_layers: int) -> Tuple[int, int]:
-    """Paper: L_i = floor(f_i/(f_i+f_j) * W), L_j = W - L_i; L_i >= 1 kept."""
-    li = int(np.floor(f_i / (f_i + f_j) * num_layers))
-    li = min(max(li, 1), num_layers - 1)
+    """Paper: L_i = floor(f_i/(f_i+f_j) * W), L_j = W - L_i; L_i >= 1 kept.
+
+    Thin scalar wrapper over the ONE implementation of the rule
+    (``planning.paper_cut``); ``f_i`` is the pair's canonical
+    (lower-index) member, matching ``splitting.propagation_lengths``.
+    """
+    li = planning.paper_cut(f_i, f_j, num_layers)
     return li, num_layers - li
 
 
 def pair_round_time(f_i: float, f_j: float, rate_bps: float,
-                    w: WorkloadModel, d_i: float = 1.0, d_j: float = 1.0
-                    ) -> float:
+                    w: WorkloadModel, d_i: float = 1.0, d_j: float = 1.0,
+                    lengths: Optional[Tuple[int, int]] = None) -> float:
     """Wall time for one pair to finish a communication round.
 
     Per batch, both flows run in parallel; phases are balanced by the split
@@ -137,35 +149,29 @@ def pair_round_time(f_i: float, f_j: float, rate_bps: float,
       length by assignment) — the slower side bounds each phase.
     Communication per batch: feature maps + boundary gradients both ways
     (dataset-size weighted, Problem 1's max{...} term).
+
+    ``lengths`` overrides the split (a RoundPlan's per-pair lengths under
+    any policy); default is the paper rule.  The arithmetic itself lives
+    in ``planning.pair_cost`` (alpha = beta = 1).
     """
-    li, lj = split_lengths(f_i, f_j, w.num_layers)
-    # per-phase compute: both clients work in parallel -> max of the two
-    phase = max(li * w.cycles_per_layer / f_i, lj * w.cycles_per_layer / f_j)
-    compute = 2.0 * 2.0 * phase           # 2 phases (bottom+top) x fwd+bwd
-    # per-batch transfer: feature maps one way + boundary grads back, for
-    # batch_size samples, weighted by relative dataset sizes (Problem 1)
-    comm = w.batch_size * max(
-        d_i * w.feature_bytes + d_j * w.grad_bytes,
-        d_j * w.feature_bytes + d_i * w.grad_bytes) / rate_bps
-    per_batch = compute + comm
-    return per_batch * w.batches_per_epoch * w.local_epochs
+    li, lj = lengths if lengths is not None \
+        else split_lengths(f_i, f_j, w.num_layers)
+    return planning.pair_cost(f_i, f_j, rate_bps, w, li, lj,
+                              d_i=d_i, d_j=d_j)
 
 
 def objective_value(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
                     chan: ChannelModel, w: WorkloadModel, alpha: float = 1.0,
-                    beta: float = 1.0) -> float:
-    """Paper Problem 1 objective (Eq. 4) for a given pairing."""
-    rates = fleet.rates(chan)
-    rel = fleet.data_sizes / fleet.data_sizes.sum()
-    total = 0.0
-    for i, j in pairs:
-        li, lj = split_lengths(fleet.cpu_hz[i], fleet.cpu_hz[j], w.num_layers)
-        total += alpha * (li * w.cycles_per_layer / fleet.cpu_hz[i]
-                          + lj * w.cycles_per_layer / fleet.cpu_hz[j])
-        comm = max(rel[i] * w.feature_bytes + rel[j] * w.grad_bytes,
-                   rel[j] * w.feature_bytes + rel[i] * w.grad_bytes)
-        total += beta * comm / rates[i, j]
-    return total
+                    beta: float = 1.0, policy="paper") -> float:
+    """Paper Problem 1 objective (Eq. 4) for a given pairing: the
+    alpha/beta-weighted sum over pairs of the Eq. (3) pair cost, with the
+    split chosen by ``policy``.  Delegates to the shared RoundPlan
+    construction — there is exactly one split computation in the repo."""
+    partner = planning.partner_from_pairs(pairs, fleet.n)
+    plan = planning.build_round_plan(fleet, chan, partner, w.num_layers,
+                                     policy=policy, workload=w,
+                                     alpha=alpha, beta=beta)
+    return plan.objective
 
 
 # ---------------------------------------------------------------------------
@@ -174,12 +180,16 @@ def objective_value(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
 
 def round_time_fedpairing(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
                           chan: ChannelModel, w: WorkloadModel,
-                          server_rate_bps: Optional[np.ndarray] = None
-                          ) -> float:
-    """Round = slowest pair (parallel pairs) + model uploads."""
+                          server_rate_bps: Optional[np.ndarray] = None,
+                          lengths: Optional[np.ndarray] = None) -> float:
+    """Round = slowest pair (parallel pairs) + model uploads.  ``lengths``
+    overrides the per-client split (a RoundPlan's lengths under any
+    policy); default is the paper rule."""
     rates = fleet.rates(chan)
     per_pair = [
-        pair_round_time(fleet.cpu_hz[i], fleet.cpu_hz[j], rates[i, j], w)
+        pair_round_time(fleet.cpu_hz[i], fleet.cpu_hz[j], rates[i, j], w,
+                        lengths=(None if lengths is None
+                                 else (int(lengths[i]), int(lengths[j]))))
         for i, j in pairs
     ]
     upload = _upload_time(fleet, chan, w, server_rate_bps)
@@ -196,12 +206,13 @@ def local_full_stack_time(cpu_hz, w: WorkloadModel):
 def round_time_from_partner(partner: np.ndarray, fleet: ClientFleet,
                             chan: ChannelModel, w: WorkloadModel,
                             active: Optional[np.ndarray] = None,
-                            server_rate_bps: Optional[np.ndarray] = None
-                            ) -> float:
+                            server_rate_bps: Optional[np.ndarray] = None,
+                            lengths: Optional[np.ndarray] = None) -> float:
     """Eq. (3) round time for a partner involution (the round driver's
     representation): straggler = max over active pairs, self-paired active
     clients pay the full local stack (vanilla-FL-style), inactive clients
-    contribute nothing; + model upload over the active cohort only."""
+    contribute nothing; + model upload over the active cohort only.
+    ``lengths`` overrides the per-client split (any policy's plan)."""
     n = fleet.n
     act = np.ones(n, bool) if active is None else np.asarray(active, bool)
     if not act.any():
@@ -215,11 +226,28 @@ def round_time_from_partner(partner: np.ndarray, fleet: ClientFleet,
         if j == i:
             times.append(float(local_full_stack_time(fleet.cpu_hz[i], w)))
         elif j > i:
-            times.append(pair_round_time(fleet.cpu_hz[i], fleet.cpu_hz[j],
-                                         rates[i, j], w))
+            times.append(pair_round_time(
+                fleet.cpu_hz[i], fleet.cpu_hz[j], rates[i, j], w,
+                lengths=(None if lengths is None
+                         else (int(lengths[i]), int(lengths[j])))))
     srates = _server_rates(fleet, chan, server_rate_bps)
     upload = float(np.max(w.model_bytes / srates[act]))
     return max(times) + upload
+
+
+def round_time_plan(plan: "planning.RoundPlan", fleet: ClientFleet,
+                    chan: ChannelModel, w: WorkloadModel,
+                    server_rate_bps: Optional[np.ndarray] = None) -> float:
+    """Eq. (3) round time for a RoundPlan (paired kind): the straggler
+    bound evaluated at the PLAN's split lengths, whatever policy produced
+    them — the driver's accounting must follow the schedule it executed."""
+    if plan.kind != "paired":
+        raise ValueError(f"round_time_plan wants a paired plan, got "
+                         f"{plan.kind!r} (use the baseline round_time_*)")
+    return round_time_from_partner(plan.partner_array(), fleet, chan, w,
+                                   active=plan.active_array(),
+                                   server_rate_bps=server_rate_bps,
+                                   lengths=plan.lengths_array())
 
 
 def round_time_vanilla_fl(fleet: ClientFleet, chan: ChannelModel,

@@ -22,18 +22,18 @@ def sample_cohort(n_clients: int, fraction: float, rng: np.random.Generator
     return np.sort(rng.choice(n_clients, size=k, replace=False))
 
 
-def cohort_pairing(fleet: ClientFleet, chan: ChannelModel,
-                   cohort: np.ndarray, num_layers: int,
-                   pair_fn: Optional[PairFn] = None
-                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Pair within a cohort; non-participants map to themselves with L=W
-    (they simply don't train this round).
+def cohort_partner(fleet: ClientFleet, chan: ChannelModel,
+                   cohort: np.ndarray, pair_fn: Optional[PairFn] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pair within a cohort; non-participants map to themselves (they
+    simply don't train this round).
 
     ``pair_fn`` selects the pairing mechanism on the cohort sub-fleet
     (default: the paper's greedy ``fedpairing_pairing``; the Table-I
     baselines — random / location / compute — slot in here).
 
-    Returns (partner (N,), lengths (N,), active_mask (N,)).
+    Returns (partner (N,), active_mask (N,)); split lengths are the
+    planning layer's concern (``planning.build_round_plan``).
     """
     n = fleet.n
     sub = latency.subfleet(fleet, cohort)
@@ -43,7 +43,17 @@ def cohort_pairing(fleet: ClientFleet, chan: ChannelModel,
     for a, b in sub_pairs:
         ga, gb = int(cohort[a]), int(cohort[b])
         partner[ga], partner[gb] = gb, ga
-    lengths = splitting.propagation_lengths(fleet.cpu_hz, partner, num_layers)
     active = np.zeros(n, bool)
     active[cohort] = True
+    return partner, active
+
+
+def cohort_pairing(fleet: ClientFleet, chan: ChannelModel,
+                   cohort: np.ndarray, num_layers: int,
+                   pair_fn: Optional[PairFn] = None
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """`cohort_partner` plus paper-rule lengths — the historical one-call
+    form.  Returns (partner (N,), lengths (N,), active_mask (N,))."""
+    partner, active = cohort_partner(fleet, chan, cohort, pair_fn)
+    lengths = splitting.propagation_lengths(fleet.cpu_hz, partner, num_layers)
     return partner, lengths, active

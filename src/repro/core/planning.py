@@ -1,0 +1,462 @@
+"""Round planning — the single source of truth for one round's split schedule.
+
+Historically the per-pair split computation was scattered across four
+layers with subtly different clamping semantics: ``latency.split_lengths``
+(scalar), ``splitting.propagation_lengths`` (vectorized),
+``rounds._server_cut`` (baseline cuts) and the per-engine ``split_ranges``
+in ``fedbucket``/``fedpair_dist``.  This module centralizes all of it:
+
+* the **paper rule** ``L_i = floor(f_i/(f_i+f_j) W)`` (Eq. 6), clamped to
+  [1, W-1], in one scalar (`paper_cut`) and one vectorized
+  (`paper_lengths`) form — every other module delegates here,
+* a pluggable **SplitPolicy** registry (``paper`` | ``fixed:K`` |
+  ``latency-opt``): the paper fixes the cut by the compute ratio alone,
+  but its own Eq. (3) latency model says the optimal cut also depends on
+  the pair's link rate and boundary payloads (cf. Wen et al., *Training
+  Latency Minimization for Model-Splitting Allowed Federated Edge
+  Learning*; Sun et al., *Split Federated Learning Over Heterogeneous
+  Edge Devices*).  ``latency-opt`` searches every cut 1..W-1 per pair
+  against the full per-pair latency (`pair_cost`) — never worse than the
+  paper rule by construction, since the paper's cut is in the search set,
+* the **RoundPlan** object — pairing involution, per-client lengths,
+  active mask, bucket/`split_ranges` envelope, baseline server cut and
+  the plan's Eq. (3)/(4) latency objective — consumed by the round driver,
+  all three engines, the latency model and the benchmarks.
+
+This module is host-side numpy only (no jax) and imports nothing from
+``repro.core``, so every layer can depend on it without cycles.  Fleet,
+channel and workload objects are duck-typed (``cpu_hz`` / ``data_sizes``
+/ ``rates(chan)``; ``cycles_per_layer`` / ``feature_bytes`` / ...), see
+``latency.ClientFleet`` / ``latency.WorkloadModel``.
+
+See DESIGN.md §6 (Planning layer) for the contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+POLICY_SPECS = ("paper", "latency-opt", "fixed:K")
+
+
+# ---------------------------------------------------------------------------
+# the paper's split rule — the ONE implementation
+# ---------------------------------------------------------------------------
+
+def paper_cut(f_i: float, f_j: float, num_layers: int) -> int:
+    """Eq. (6): L_i = floor(f_i/(f_i+f_j) W), clamped to [1, W-1].
+
+    ``f_i`` is the *canonical* (lower-index) member of the pair; its
+    partner gets ``W - L_i`` so the pair always sums to W.  This is the
+    single implementation of the rule — the scalar
+    ``latency.split_lengths`` and vectorized
+    ``splitting.propagation_lengths`` are thin wrappers.
+    """
+    li = int(np.floor(f_i / (f_i + f_j) * num_layers))
+    return min(max(li, 1), num_layers - 1)
+
+
+def paper_lengths(f: np.ndarray, partner: np.ndarray,
+                  num_layers: int) -> np.ndarray:
+    """Vectorized paper rule over a partner involution.
+
+    The lower-indexed member of each pair is canonical (`paper_cut`); its
+    partner gets the complement, so lengths sum to W exactly.  Self-paired
+    clients get the full stack (L_i = W).
+    """
+    f = np.asarray(f, np.float64)
+    partner = np.asarray(partner, np.int64)
+    idx = np.arange(len(f))
+    fp = f[partner]
+    base = np.floor(f / (f + fp) * num_layers).astype(np.int64)
+    base = np.clip(base, 1, num_layers - 1)
+    li = np.where(idx <= partner, base, num_layers - base[partner])
+    return np.where(partner == idx, num_layers, li)
+
+
+def partner_from_pairs(pairs: Sequence[Tuple[int, int]], n: int) -> np.ndarray:
+    """Pair list -> partner involution; unpaired clients map to self."""
+    partner = np.arange(n)
+    for i, j in pairs:
+        partner[i], partner[j] = j, i
+    return partner
+
+
+def resolve_server_cut(server_cut: int, num_layers: int) -> int:
+    """Baseline (sl/splitfed) client-side depth; 0 -> W//2, floored at 1."""
+    return server_cut or max(1, num_layers // 2)
+
+
+# ---------------------------------------------------------------------------
+# per-pair latency (Eq. 3) — the cost both the objective and the
+# latency-opt policy evaluate
+# ---------------------------------------------------------------------------
+
+def boundary_bytes(w, cut: int) -> Tuple[float, float]:
+    """Per-sample (feature, gradient) payload at a given cut depth.
+
+    Defaults to the workload's flat ``feature_bytes``/``grad_bytes`` (the
+    paper models one representative boundary tensor); a workload may carry
+    per-cut profiles (``feature_profile``/``grad_profile``, indexed by
+    ``cut - 1`` for cuts 1..W-1) so the latency-opt policy can trade
+    compute balance against a narrower boundary.
+    """
+    fp = getattr(w, "feature_profile", None)
+    gp = getattr(w, "grad_profile", None)
+    feat = w.feature_bytes if fp is None else float(fp[cut - 1])
+    grad = w.grad_bytes if gp is None else float(gp[cut - 1])
+    return feat, grad
+
+
+def pair_cost(f_i: float, f_j: float, rate_bps: float, w, li: int, lj: int,
+              d_i: float = 1.0, d_j: float = 1.0, alpha: float = 1.0,
+              beta: float = 1.0) -> float:
+    """Eq. (3) wall time of one pair's round at split (li, lj), weighted
+    by the Problem-1 alpha/beta trade-off (Eq. 4's per-pair term).
+
+    Compute: both flows run in parallel, phases balanced by the split, so
+    each of the 2 phases (bottom+top) is bounded by the slower side;
+    fwd+bwd doubles it.  Communication: boundary features one way +
+    gradients back, per batch, dataset-size weighted (Problem 1's max
+    term).  With ``alpha == beta == 1`` this IS
+    ``latency.pair_round_time`` — the two stay consistent by delegation.
+    """
+    phase = max(li * w.cycles_per_layer / f_i, lj * w.cycles_per_layer / f_j)
+    compute = 2.0 * 2.0 * phase
+    # direction i->j carries flow i's boundary features (cut li) plus flow
+    # j's boundary gradients (cut lj), and vice versa — each flow's payload
+    # is priced at ITS OWN cut (only visible with per-cut profiles; flat
+    # profiles reduce this to the historical symmetric expression)
+    feat_i, grad_i = boundary_bytes(w, li)
+    feat_j, grad_j = boundary_bytes(w, lj)
+    comm = w.batch_size * max(d_i * feat_i + d_j * grad_j,
+                              d_j * feat_j + d_i * grad_i) / rate_bps
+    return (alpha * compute + beta * comm) \
+        * w.batches_per_epoch * w.local_epochs
+
+
+# ---------------------------------------------------------------------------
+# split policies
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PairContext:
+    """Everything a policy may consult when cutting one pair.  ``f_i`` is
+    the canonical (lower-index) member; ``rate_bps``/``d_*`` feed the
+    comm term; ``workload`` may be None for compute-only policies."""
+
+    f_i: float
+    f_j: float
+    num_layers: int
+    rate_bps: float = float("inf")
+    d_i: float = 1.0
+    d_j: float = 1.0
+    workload: Optional[object] = None
+    alpha: float = 1.0
+    beta: float = 1.0
+
+
+class SplitPolicy:
+    """A rule mapping one pair's context to the canonical member's cut."""
+
+    spec: str = "?"
+
+    def pair_cut(self, ctx: PairContext) -> int:
+        raise NotImplementedError
+
+
+class PaperSplitPolicy(SplitPolicy):
+    """The paper's compute-ratio rule (Eq. 6)."""
+
+    spec = "paper"
+
+    def pair_cut(self, ctx: PairContext) -> int:
+        return paper_cut(ctx.f_i, ctx.f_j, ctx.num_layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedSplitPolicy(SplitPolicy):
+    """Every pair cuts at depth K (clamped to [1, W-1]) regardless of
+    compute — the SplitFed-style uniform cut as a FedPairing policy."""
+
+    k: int
+
+    @property
+    def spec(self) -> str:
+        return f"fixed:{self.k}"
+
+    def pair_cut(self, ctx: PairContext) -> int:
+        return min(max(self.k, 1), ctx.num_layers - 1)
+
+
+class LatencyOptSplitPolicy(SplitPolicy):
+    """Search every cut 1..W-1 against the full Eq. (3) pair cost
+    (compute max + link-rate-weighted boundary payloads).  The paper's
+    cut is in the search set, so the chosen cut's cost is <= the paper
+    rule's by construction; ties resolve to the shallowest cut."""
+
+    spec = "latency-opt"
+
+    def pair_cut(self, ctx: PairContext) -> int:
+        if ctx.workload is None:
+            raise ValueError("latency-opt needs a workload model "
+                             "(pass workload= to the plan builder)")
+        W = ctx.num_layers
+        costs = [pair_cost(ctx.f_i, ctx.f_j, ctx.rate_bps, ctx.workload,
+                           cut, W - cut, ctx.d_i, ctx.d_j, ctx.alpha,
+                           ctx.beta)
+                 for cut in range(1, W)]
+        return 1 + int(np.argmin(costs))
+
+
+def get_policy(spec) -> SplitPolicy:
+    """Resolve a policy spec string (``paper`` | ``latency-opt`` |
+    ``fixed:K``) to a SplitPolicy; passes SplitPolicy instances through."""
+    if isinstance(spec, SplitPolicy):
+        return spec
+    if spec == "paper":
+        return PaperSplitPolicy()
+    if spec == "latency-opt":
+        return LatencyOptSplitPolicy()
+    if isinstance(spec, str) and spec.startswith("fixed:"):
+        try:
+            k = int(spec.split(":", 1)[1])
+        except ValueError:
+            raise ValueError(f"fixed:K needs an integer K, got {spec!r}") \
+                from None
+        if k < 1:
+            raise ValueError(f"fixed:K needs K >= 1, got {spec!r}")
+        return FixedSplitPolicy(k)
+    raise ValueError(f"unknown split policy {spec!r}; expected one of "
+                     f"{POLICY_SPECS}")
+
+
+def policy_lengths(f: np.ndarray, partner: np.ndarray, num_layers: int,
+                   policy="paper", *, rates: Optional[np.ndarray] = None,
+                   rel_data: Optional[np.ndarray] = None, workload=None,
+                   alpha: float = 1.0, beta: float = 1.0) -> np.ndarray:
+    """Per-client propagation lengths under a split policy.
+
+    ``rates`` is the (N, N) link-rate matrix and ``rel_data`` the relative
+    dataset sizes — consulted by rate-aware policies; omitted, the comm
+    term sees an infinite-rate link.  Self-paired clients always get the
+    full stack.
+    """
+    policy = get_policy(policy)
+    f = np.asarray(f, np.float64)
+    partner = np.asarray(partner, np.int64)
+    if isinstance(policy, PaperSplitPolicy):      # vectorized fast path
+        return paper_lengths(f, partner, num_layers)
+    lengths = np.full(len(f), num_layers, np.int64)
+    for i in range(len(f)):
+        j = int(partner[i])
+        if j <= i:
+            continue
+        ctx = PairContext(
+            f_i=float(f[i]), f_j=float(f[j]), num_layers=num_layers,
+            rate_bps=(float(rates[i, j]) if rates is not None
+                      else float("inf")),
+            d_i=float(rel_data[i]) if rel_data is not None else 1.0,
+            d_j=float(rel_data[j]) if rel_data is not None else 1.0,
+            workload=workload, alpha=alpha, beta=beta)
+        li = int(policy.pair_cut(ctx))
+        if not 1 <= li <= num_layers - 1:
+            raise ValueError(f"policy {policy.spec!r} cut {li} outside "
+                             f"[1, {num_layers - 1}] for pair ({i},{j})")
+        lengths[i], lengths[j] = li, num_layers - li
+    return lengths
+
+
+# ---------------------------------------------------------------------------
+# envelopes (the SPMD split_ranges the bucketed/dist engines consume)
+# ---------------------------------------------------------------------------
+
+def phase_envelope(lengths, partner, num_layers: int,
+                   granularity: int = 1) -> Tuple[int, int]:
+    """Uniform (bottom_hi, top_lo) static slice covering the whole fleet.
+
+    Bottom ranges round each L_i *up* to the granularity (the slice must
+    cover every owned block), top ranges round each L_p *down* (the slice
+    must cover [L_p, W)); self-pairs contribute an empty top.  This is the
+    one implementation behind ``fedbucket.fleet_phase_ranges`` and the
+    dist engine's ``split_ranges``.
+    """
+    lengths = np.asarray(lengths, np.int64)
+    partner = np.asarray(partner, np.int64)
+    W = int(num_layers)
+    g = max(1, int(granularity))
+    if np.any(lengths < 1) or np.any(lengths > W):
+        raise ValueError(f"lengths must lie in [1, {W}], got {lengths}")
+    bottom_hi = int(min(W, max(-(-int(l) // g) * g for l in lengths)))
+    top_lo = W
+    for lp in lengths[partner]:
+        top_lo = min(top_lo, W if int(lp) == W else (int(lp) // g) * g)
+    return bottom_hi, top_lo
+
+
+# ---------------------------------------------------------------------------
+# the RoundPlan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """Single source of truth for one round's split schedule.
+
+    ``kind`` states what the lengths mean:
+
+    * ``paired``       — FedPairing: ``partner`` is the pairing involution,
+                         ``lengths[i]`` is client i's own-flow depth
+                         (self-paired => full stack),
+    * ``server-split`` — sl/splitfed baselines: ``lengths`` is the
+                         client-side depth (``server_cut``) for active
+                         clients, W for inactive; partner is identity,
+    * ``local``        — vanilla FL: everyone runs the full stack.
+
+    ``objective`` is the Eq. (4) weighted sum of per-pair Eq. (3) costs
+    over the active pairs (None when no workload model was supplied).
+    The plan is hashable; ``cache_key()`` is what the engines' step caches
+    key on (everything that affects a compiled step's shape).
+    """
+
+    kind: str
+    policy: str
+    num_layers: int
+    partner: Tuple[int, ...]
+    lengths: Tuple[int, ...]
+    active: Tuple[bool, ...]
+    pairs: Tuple[Tuple[int, int], ...]
+    server_cut: int
+    granularity: int = 1
+    objective: Optional[float] = None
+
+    @property
+    def n(self) -> int:
+        return len(self.partner)
+
+    def partner_array(self) -> np.ndarray:
+        return np.asarray(self.partner, np.int64)
+
+    def lengths_array(self) -> np.ndarray:
+        return np.asarray(self.lengths, np.int64)
+
+    def active_array(self) -> np.ndarray:
+        return np.asarray(self.active, bool)
+
+    def masks(self) -> np.ndarray:
+        """(N, W) float32 bottom masks (block l active iff l < L_i)."""
+        return (np.arange(self.num_layers)[None, :]
+                < self.lengths_array()[:, None]).astype(np.float32)
+
+    def phase_envelope(self, granularity: Optional[int] = None
+                       ) -> Tuple[int, int]:
+        """The (bottom_hi, top_lo) split_ranges for the SPMD engines."""
+        return phase_envelope(self.lengths_array(), self.partner_array(),
+                              self.num_layers,
+                              self.granularity if granularity is None
+                              else granularity)
+
+    def cache_key(self) -> Tuple:
+        """What a pairing-specialized compiled step depends on."""
+        return (self.kind, self.partner, self.lengths, self.granularity)
+
+    def validate(self) -> "RoundPlan":
+        """Check the plan invariants; returns self (chainable)."""
+        n, W = self.n, self.num_layers
+        partner = self.partner_array()
+        lengths = self.lengths_array()
+        if not np.array_equal(partner[partner], np.arange(n)):
+            raise ValueError(f"partner is not an involution: {self.partner}")
+        if np.any(lengths < 1) or np.any(lengths > W):
+            raise ValueError(f"lengths outside [1, {W}]: {self.lengths}")
+        if self.kind == "paired":
+            for i in range(n):
+                j = int(partner[i])
+                if j == i:
+                    if lengths[i] != W:
+                        raise ValueError(
+                            f"self-paired client {i} must own the full "
+                            f"stack, got L={lengths[i]} (W={W})")
+                elif lengths[i] + lengths[j] != W:
+                    raise ValueError(
+                        f"pair ({i},{j}) lengths {lengths[i]}+{lengths[j]} "
+                        f"!= W={W}")
+            act = self.active_array()
+            for i, j in self.pairs:
+                if not (act[i] and act[j]):
+                    raise ValueError(f"pair ({i},{j}) not inside the "
+                                     f"active cohort")
+        return self
+
+
+def _active_pairs(partner: np.ndarray,
+                  active: np.ndarray) -> Tuple[Tuple[int, int], ...]:
+    return tuple(sorted((int(i), int(partner[i]))
+                        for i in range(len(partner))
+                        if active[i] and partner[i] > i))
+
+
+def build_round_plan(fleet, chan, partner, num_layers: int, *,
+                     policy="paper", workload=None,
+                     active: Optional[np.ndarray] = None,
+                     granularity: int = 1, server_cut: int = 0,
+                     alpha: float = 1.0, beta: float = 1.0,
+                     rates: Optional[np.ndarray] = None) -> RoundPlan:
+    """Build the FedPairing plan for one round.
+
+    ``fleet``/``chan`` are duck-typed (``latency.ClientFleet`` /
+    ``ChannelModel``); ``rates`` overrides ``fleet.rates(chan)``.  The
+    Eq. (4) objective is computed over the active pairs with the SAME
+    per-pair cost the latency-opt policy minimizes, which is what makes
+    ``latency-opt``'s objective <= ``paper``'s by construction.
+    """
+    n = fleet.n
+    partner = np.asarray(partner, np.int64)
+    act = np.ones(n, bool) if active is None else np.asarray(active, bool)
+    if rates is None and chan is not None:
+        rates = fleet.rates(chan)
+    rel = np.asarray(fleet.data_sizes, np.float64)
+    rel = rel / rel.sum()
+    pol = get_policy(policy)
+    lengths = policy_lengths(fleet.cpu_hz, partner, num_layers, pol,
+                             rates=rates, rel_data=rel, workload=workload,
+                             alpha=alpha, beta=beta)
+    pairs = _active_pairs(partner, act)
+    objective = None
+    if workload is not None:
+        objective = 0.0
+        for i, j in pairs:
+            rate = float(rates[i, j]) if rates is not None else float("inf")
+            objective += pair_cost(
+                float(fleet.cpu_hz[i]), float(fleet.cpu_hz[j]), rate,
+                workload, int(lengths[i]), int(lengths[j]),
+                float(rel[i]), float(rel[j]), alpha, beta)
+    return RoundPlan(
+        kind="paired", policy=pol.spec, num_layers=num_layers,
+        partner=tuple(int(p) for p in partner),
+        lengths=tuple(int(l) for l in lengths),
+        active=tuple(bool(a) for a in act), pairs=pairs,
+        server_cut=resolve_server_cut(server_cut, num_layers),
+        granularity=max(1, int(granularity)),
+        objective=objective).validate()
+
+
+def baseline_plan(n: int, num_layers: int, *,
+                  active: Optional[np.ndarray] = None, server_cut: int = 0,
+                  full_stack: bool = False) -> RoundPlan:
+    """Plan for the paper's baselines: ``local`` (vanilla FL — everyone
+    runs the full stack) or ``server-split`` (sl/splitfed — active
+    clients keep ``server_cut`` layers, the server runs the rest)."""
+    act = np.ones(n, bool) if active is None else np.asarray(active, bool)
+    cut = resolve_server_cut(server_cut, num_layers)
+    if full_stack:
+        lengths = np.full(n, num_layers, np.int64)
+    else:
+        lengths = np.where(act, cut, num_layers)
+    return RoundPlan(
+        kind="local" if full_stack else "server-split",
+        policy="n/a", num_layers=num_layers,
+        partner=tuple(range(n)), lengths=tuple(int(l) for l in lengths),
+        active=tuple(bool(a) for a in act), pairs=(), server_cut=cut,
+        granularity=1, objective=None).validate()

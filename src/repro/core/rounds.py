@@ -7,8 +7,11 @@ DESIGN.md §5):
 1. realizes the time-varying channel (``latency.drift_fleet`` position
    random walk; skipped without an rng draw when ``drift_sigma_m <= 0``),
 2. samples the participating cohort (``participation.sample_cohort``),
-3. re-runs pairing on the cohort with the current channel realization and
-   recomputes propagation lengths (``participation.cohort_pairing``),
+3. re-runs pairing on the cohort with the current channel realization
+   (``participation.cohort_partner``) and builds the round's
+   ``planning.RoundPlan`` — the single source of truth for split lengths
+   (under ``RoundConfig.split_policy``), envelopes, baseline cuts and the
+   Eq. (4) objective,
 4. executes ``batches_per_round`` fed steps on one of the three FedPairing
    engines — vmapped / bucketed / dist — or one of the paper's baselines
    (vanilla FL / vanilla SL / SplitFed from ``core.baselines``),
@@ -31,8 +34,8 @@ per-client gradients directly — the driver builds the vmapped step with
 Re-pairing vs recompilation: the vmapped step takes partner/lengths as
 *traced* arguments (one compile covers every round), while the bucketed
 and dist steps specialize on the pairing — the driver memoizes built steps
-by (partner, lengths, agg weights), so recompiles are bounded by the
-number of *distinct* pairings the channel process visits, not by the
+by (``RoundPlan.cache_key()``, agg weights), so recompiles are bounded by
+the number of *distinct* plans the channel process visits, not by the
 number of rounds (``RoundRecord.cached_steps`` tracks the bound).
 """
 from __future__ import annotations
@@ -47,8 +50,9 @@ import numpy as np
 
 from repro import compat
 from repro.core import aggregation, baselines, fedpair, latency, pairing
-from repro.core import participation, splitting
+from repro.core import participation, planning, splitting
 from repro.core.latency import ChannelModel, ClientFleet, WorkloadModel
+from repro.core.planning import RoundPlan
 
 ALGORITHMS = ("fedpairing", "fl", "sl", "splitfed")
 ENGINES = ("vmapped", "bucketed", "dist")
@@ -75,6 +79,7 @@ class RoundConfig:
     participation: float = 1.0          # cohort fraction per round
     drift_sigma_m: float = 0.0          # channel realization: position walk
     pair_mechanism: str = "fedpairing"  # Table-I mechanisms (PAIRINGS)
+    split_policy: str = "paper"         # paper | fixed:K | latency-opt
     lr: float = 0.05
     aggregation: str = "paper"          # paper | fedavg (DESIGN.md §3)
     overlap_boost: bool = True
@@ -93,6 +98,7 @@ class RoundConfig:
         if self.pair_mechanism not in PAIRINGS:
             raise ValueError(f"pair_mechanism must be one of "
                              f"{tuple(PAIRINGS)}, got {self.pair_mechanism!r}")
+        planning.get_policy(self.split_policy)   # raises on unknown spec
         if self.aggregation not in ("paper", "fedavg"):
             raise ValueError(f"aggregation must be 'paper' or 'fedavg', "
                              f"got {self.aggregation!r}")
@@ -125,15 +131,8 @@ class RoundState:
     history: List[RoundRecord]
 
 
-def _pairs_from_partner(partner: np.ndarray,
-                        active: np.ndarray) -> Tuple[Tuple[int, int], ...]:
-    return tuple(sorted((int(i), int(partner[i]))
-                        for i in range(len(partner))
-                        if active[i] and partner[i] > i))
-
-
 # ---------------------------------------------------------------------------
-# FedPairing engines behind one interface
+# FedPairing engines behind one interface (all consume a RoundPlan)
 # ---------------------------------------------------------------------------
 
 class _VmappedEngine:
@@ -149,21 +148,22 @@ class _VmappedEngine:
                                            fed_cfg)
         self.cached_steps = 1
 
-    def step(self, params, batch, partner, lengths, agg_w):
+    def step(self, params, batch, plan: RoundPlan, agg_w):
         new, m = self._step(params, batch,
-                            jnp.asarray(partner, jnp.int32),
-                            jnp.asarray(lengths, jnp.int32),
+                            jnp.asarray(plan.partner_array(), jnp.int32),
+                            jnp.asarray(plan.lengths_array(), jnp.int32),
                             jnp.asarray(agg_w, jnp.float32))
         return new, m["loss"]
 
 
-def _pairing_key(partner, lengths, agg_w) -> Tuple:
-    return (tuple(int(p) for p in partner), tuple(int(l) for l in lengths),
-            np.asarray(agg_w, np.float32).tobytes())
+def _plan_key(plan: RoundPlan, agg_w) -> Tuple:
+    """Step-cache key: the plan's compiled-shape identity + the agg
+    weights baked into the specialized steps."""
+    return plan.cache_key() + (np.asarray(agg_w, np.float32).tobytes(),)
 
 
 class _BucketedEngine:
-    """Length-bucketed engine; steps specialize on the pairing -> memoized."""
+    """Length-bucketed engine; steps specialize on the plan -> memoized."""
 
     def __init__(self, cfg, rc: RoundConfig, n: int, gparams, loss_fn):
         from repro.core import fedbucket
@@ -179,12 +179,13 @@ class _BucketedEngine:
     def cached_steps(self) -> int:
         return len(self._cache)
 
-    def step(self, params, batch, partner, lengths, agg_w):
-        key = _pairing_key(partner, lengths, agg_w)
+    def step(self, params, batch, plan: RoundPlan, agg_w):
+        key = _plan_key(plan, agg_w)
         built = self._cache.get(key)
         if built is None:
-            built, _plan = self._make(self._cfg, partner, lengths, agg_w,
-                                      self._bcfg)
+            built, _bplan = self._make(self._cfg, plan.partner_array(),
+                                       plan.lengths_array(), agg_w,
+                                       self._bcfg)
             self._cache[key] = built
         new, m = built(params, batch)
         return new, m["loss"]
@@ -194,7 +195,7 @@ class _DistEngine:
     """shard_map + ppermute engine; pairing is baked into the collective."""
 
     def __init__(self, cfg, rc: RoundConfig, n: int, gparams, loss_fn):
-        from repro.core import fedbucket, fedpair_dist
+        from repro.core import fedpair_dist
         ndev = len(jax.devices())
         if ndev < n:
             raise RuntimeError(
@@ -202,7 +203,6 @@ class _DistEngine:
                 f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")
         self._cfg = cfg
         self._rc = rc
-        self._fleet_ranges = fedbucket.fleet_phase_ranges
         self._dist = fedpair_dist
         self.mesh = compat.make_mesh((n,), ("data",))
         self._cache: Dict[Tuple, Callable] = {}
@@ -211,23 +211,19 @@ class _DistEngine:
     def cached_steps(self) -> int:
         return len(self._cache)
 
-    def step(self, params, batch, partner, lengths, agg_w):
-        key = _pairing_key(partner, lengths, agg_w)
+    def step(self, params, batch, plan: RoundPlan, agg_w):
+        key = _plan_key(plan, agg_w)
         built = self._cache.get(key)
         with compat.set_mesh(self.mesh):
             if built is None:
-                W = self._cfg.num_layers
-                masks = np.stack([np.arange(W) < l for l in lengths]
-                                 ).astype(np.float32)
                 dcfg = self._dist.FedDistConfig(
                     lr=self._rc.lr, overlap_boost=self._rc.overlap_boost,
-                    split_ranges=self._fleet_ranges(
-                        lengths, partner, W, self._rc.bucket_granularity),
+                    split_ranges=plan.phase_envelope(),
                     donate=self._rc.donate)
                 built = self._dist.make_dist_fed_step(
                     self._cfg, self.mesh,
-                    self._dist.pairs_to_ppermute(np.asarray(partner)),
-                    np.asarray(agg_w, np.float32), masks, dcfg)
+                    self._dist.pairs_to_ppermute(plan.partner_array()),
+                    np.asarray(agg_w, np.float32), plan.masks(), dcfg)
                 self._cache[key] = built
             new, loss = built(params, batch)
         return new, loss
@@ -363,16 +359,43 @@ class RoundDriver:
             sim_total_s=float(state.sim_time_s + round_s),
             cached_steps=cached)
 
+    def round_plan(self, fleet: ClientFleet, partner: np.ndarray,
+                   active: np.ndarray, num_layers: Optional[int] = None
+                   ) -> RoundPlan:
+        """The round's RoundPlan — the single source of truth the engines,
+        the latency accounting and the trace record all consume."""
+        rc = self.rc
+        return planning.build_round_plan(
+            fleet, self.chan, partner,
+            self.cfg.num_layers if num_layers is None else num_layers,
+            policy=rc.split_policy, workload=self.workload, active=active,
+            granularity=rc.bucket_granularity, server_cut=rc.server_cut)
+
+    def _latency_plan(self, fleet: ClientFleet, partner: np.ndarray,
+                      active: np.ndarray, plan: RoundPlan) -> RoundPlan:
+        """The plan the Eq. (3) clock is evaluated on.  Normally the
+        executed plan itself; when the workload model is calibrated at a
+        different depth than the trained architecture (e.g. the tiny smoke
+        model accounted against the paper's 18-layer ResNet18 workload,
+        bench_roundtime), the same policy/pairing is re-planned at the
+        WORKLOAD's depth so simulated times stay comparable to the
+        baselines' full-stack accounting."""
+        if self.workload.num_layers == plan.num_layers:
+            return plan
+        return self.round_plan(fleet, partner, active,
+                               num_layers=self.workload.num_layers)
+
     def _fedpairing_round(self, state, fleet, cohort, active, pair_fn):
         rc = self.rc
-        partner, lengths, _ = participation.cohort_pairing(
-            fleet, self.chan, cohort, self.cfg.num_layers, pair_fn)
+        partner, _ = participation.cohort_partner(fleet, self.chan, cohort,
+                                                  pair_fn)
+        plan = self.round_plan(fleet, partner, active)
         agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
         params = state.client_params
         losses = []
         for _ in range(rc.batches_per_round):
-            params, l = self._engine.step(params, self.batch_fn(), partner,
-                                          lengths, agg_w)
+            params, l = self._engine.step(params, self.batch_fn(), plan,
+                                          agg_w)
             losses.append(np.asarray(l))
         mean_loss = _mean_active_loss(losses, active)
         g = aggregation.aggregate(params,
@@ -380,11 +403,10 @@ class RoundDriver:
                                   rc.aggregation,
                                   active=jnp.asarray(active))
         params = aggregation.broadcast(g, self.n)
-        round_s = latency.round_time_from_partner(partner, fleet, self.chan,
-                                                  self.workload,
-                                                  active=active)
-        rec = self._record(state, cohort,
-                           _pairs_from_partner(partner, active), lengths,
+        round_s = latency.round_time_plan(
+            self._latency_plan(fleet, partner, active, plan), fleet,
+            self.chan, self.workload)
+        rec = self._record(state, cohort, plan.pairs, plan.lengths,
                            mean_loss, round_s, self._engine.cached_steps)
         return rec, params, None
 
@@ -402,23 +424,25 @@ class RoundDriver:
                                   jnp.asarray(fleet.data_sizes, jnp.float32),
                                   "fedavg", active=jnp.asarray(active))
         params = aggregation.broadcast(g, self.n)
+        plan = planning.baseline_plan(self.n, self.cfg.num_layers,
+                                      active=active,
+                                      server_cut=rc.server_cut,
+                                      full_stack=True)
         sub = latency.subfleet(fleet, cohort)
         round_s = latency.round_time_vanilla_fl(sub, self.chan, self.workload)
-        rec = self._record(state, cohort, (),
-                           np.full(self.n, self.cfg.num_layers),
+        rec = self._record(state, cohort, (), plan.lengths,
                            _mean_active_loss(losses, active), round_s, 1)
         return rec, params, None
 
-    def _server_cut(self) -> int:
-        return self.rc.server_cut or max(1, self.cfg.num_layers // 2)
-
     def _sl_round(self, state, fleet, cohort, active, pair_fn):
         rc = self.rc
-        cut = self._server_cut()
+        plan = planning.baseline_plan(self.n, self.cfg.num_layers,
+                                      active=active, server_cut=rc.server_cut)
+        cut = plan.server_cut
         if self._baseline_step is None:
-            plan = splitting.split_plan(self.cfg, self._gparams)
+            split = splitting.split_plan(self.cfg, self._gparams)
             self._baseline_step = baselines.make_sl_step(
-                self.loss_fn, plan, self.cfg.num_layers, cut, rc.lr)
+                self.loss_fn, split, self.cfg.num_layers, cut, rc.lr)
         client, server = state.client_params, state.server_params
         batches = [self.batch_fn() for _ in range(rc.batches_per_round)]
         losses = []
@@ -431,18 +455,19 @@ class RoundDriver:
         round_s = latency.round_time_vanilla_sl(sub, self.chan, self.workload,
                                                 client_layers=cut,
                                                 sequential=True)
-        lengths = np.where(active, cut, self.cfg.num_layers)
-        rec = self._record(state, cohort, (), lengths,
+        rec = self._record(state, cohort, (), plan.lengths,
                            float(np.mean(losses)), round_s, 1)
         return rec, client, server
 
     def _splitfed_round(self, state, fleet, cohort, active, pair_fn):
         rc = self.rc
-        cut = self._server_cut()
+        plan = planning.baseline_plan(self.n, self.cfg.num_layers,
+                                      active=active, server_cut=rc.server_cut)
+        cut = plan.server_cut
         if self._baseline_step is None:
-            plan = splitting.split_plan(self.cfg, self._gparams)
+            split = splitting.split_plan(self.cfg, self._gparams)
             self._baseline_step = baselines.make_splitfed_step(
-                self.loss_fn, plan, self.cfg.num_layers, cut, rc.lr)
+                self.loss_fn, split, self.cfg.num_layers, cut, rc.lr)
         client, server = state.client_params, state.server_params
         idx = np.asarray(cohort)
         sub_params = jax.tree_util.tree_map(lambda a: a[idx], client)
@@ -460,8 +485,7 @@ class RoundDriver:
         sub = latency.subfleet(fleet, cohort)
         round_s = latency.round_time_splitfed(sub, self.chan, self.workload,
                                               client_layers=cut)
-        lengths = np.where(active, cut, self.cfg.num_layers)
-        rec = self._record(state, cohort, (), lengths,
+        rec = self._record(state, cohort, (), plan.lengths,
                            float(np.mean([l.mean() for l in losses])),
                            round_s, 1)
         return rec, client, server

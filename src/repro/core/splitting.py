@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ArchFamily
+from repro.core import planning
 
 
 def propagation_lengths(f: np.ndarray, partner: np.ndarray,
@@ -29,14 +30,14 @@ def propagation_lengths(f: np.ndarray, partner: np.ndarray,
     """Vectorized paper rule: L_i = floor(f_i/(f_i+f_p(i)) W) for the
     lower-indexed member of each pair, L_j = W - L_i for its partner
     (lengths must sum to W), clamped to [1, W-1]; self-paired clients get
-    the full stack (L_i = W)."""
-    idx = np.arange(len(f))
-    fp = f[partner]
-    base = np.floor(f / (f + fp) * num_layers).astype(np.int64)
-    base = np.clip(base, 1, num_layers - 1)
-    li = np.where(idx <= partner, base, num_layers - base[partner])
-    li = np.where(partner == idx, num_layers, li)
-    return li
+    the full stack (L_i = W).
+
+    Thin wrapper over the ONE implementation (``planning.paper_lengths``,
+    shared with the scalar ``latency.split_lengths``); for policy-driven
+    lengths use ``planning.policy_lengths`` / ``planning.build_round_plan``.
+    """
+    return planning.paper_lengths(np.asarray(f, np.float64),
+                                  np.asarray(partner, np.int64), num_layers)
 
 
 def layer_mask(length: jnp.ndarray, num_layers: int) -> jnp.ndarray:

@@ -33,7 +33,7 @@ import argparse
 import time
 
 from repro.configs import ARCH_IDS, get_smoke_config
-from repro.core import latency, pairing, rounds
+from repro.core import latency, pairing, planning, rounds
 from repro.core.latency import ChannelModel, WorkloadModel
 
 
@@ -47,6 +47,9 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--engine", choices=rounds.ENGINES, default="vmapped")
+    ap.add_argument("--split-policy", default="paper", metavar="POLICY",
+                    help="per-pair split-point policy: "
+                         "paper | fixed:K | latency-opt")
     ap.add_argument("--bucket-granularity", type=int, default=1,
                     help="round split lengths to multiples of this when "
                          "bucketing (1 = exact; larger = fewer compiles)")
@@ -67,15 +70,21 @@ def main() -> None:
     w = WorkloadModel(num_layers=cfg.num_layers,
                       batches_per_epoch=args.batches_per_round,
                       local_epochs=1)
-    # round-0 pairing preview on the initial channel realization
+    # round-0 plan preview on the initial channel realization
     pairs = pairing.fedpairing_pairing(fleet, chan)
+    plan0 = planning.build_round_plan(
+        fleet, chan, planning.partner_from_pairs(pairs, n), cfg.num_layers,
+        policy=args.split_policy, workload=w)
     print(f"[fed] {n} clients, initial pairs {pairs}")
+    print(f"[fed] split policy {plan0.policy}: lengths {list(plan0.lengths)} "
+          f"objective {plan0.objective:.1f}")
     print(f"[fed] modeled round time: "
-          f"{latency.round_time_fedpairing(pairs, fleet, chan, w):.1f}s "
+          f"{latency.round_time_plan(plan0, fleet, chan, w):.1f}s "
           f"(vanilla FL {latency.round_time_vanilla_fl(fleet, chan, w):.1f}s)")
 
     rc = rounds.RoundConfig(
         algorithm="fedpairing", engine=args.engine, rounds=args.rounds,
+        split_policy=args.split_policy,
         batches_per_round=args.batches_per_round,
         participation=args.participation, drift_sigma_m=args.drift,
         lr=args.lr, aggregation=args.aggregation,

@@ -33,6 +33,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--pairing", choices=tuple(rounds.PAIRINGS),
                     default="fedpairing",
                     help="Table-I pairing mechanism (fedpairing only)")
+    ap.add_argument("--split-policy", default="paper", metavar="POLICY",
+                    help="per-pair split-point policy: "
+                         "paper | fixed:K | latency-opt")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--batches-per-round", type=int, default=4)
@@ -60,7 +63,8 @@ def run_sim(args) -> rounds.RoundState:
     cfg = get_smoke_config(args.arch)
     rc = rounds.RoundConfig(
         algorithm=args.algorithm, engine=args.engine,
-        pair_mechanism=args.pairing, rounds=args.rounds,
+        pair_mechanism=args.pairing, split_policy=args.split_policy,
+        rounds=args.rounds,
         batches_per_round=args.batches_per_round,
         participation=args.participation, drift_sigma_m=args.drift,
         lr=args.lr, aggregation=args.aggregation,

@@ -235,7 +235,8 @@ def build_serve_step(cfg: ArchConfig, shape: InputShape, mesh, *, unroll=1,
 def build_fed_step(cfg: ArchConfig, shape: InputShape, mesh, *,
                    static_half_split: bool = False, lr: float = 0.1,
                    seed: int = 0, unroll: int = 1, ce_chunk: int = 0,
-                   bucket_granularity: Optional[int] = None):
+                   bucket_granularity: Optional[int] = None,
+                   split_policy: str = "paper"):
     """Distributed FedPairing step on the production mesh: one client per
     (pod x) data position, paired by the greedy algorithm over a simulated
     heterogeneous fleet; the split handoff is the ppermute collective.
@@ -243,33 +244,35 @@ def build_fed_step(cfg: ArchConfig, shape: InputShape, mesh, *,
     ``static_half_split`` is the beyond-paper homogeneous-mesh
     specialization (§Perf): static L=W/2 halves the per-phase scan.
     ``bucket_granularity`` generalizes it to heterogeneous fleets: the
-    scans are statically sliced to the fleet's split envelope
-    (``fedbucket.fleet_phase_ranges``), gating only the residual inside.
+    scans are statically sliced to the fleet's split envelope (the
+    ``RoundPlan``'s ``phase_envelope``), gating only the residual inside.
+    ``split_policy`` picks the per-pair cut rule (paper | fixed:K |
+    latency-opt — see ``core.planning``).
     """
     import numpy as np
 
-    from repro.core import fedbucket, fedpair, fedpair_dist, pairing, \
-        splitting
-    from repro.core.latency import ChannelModel, make_fleet
+    from repro.core import fedpair, fedpair_dist, pairing, planning
+    from repro.core.latency import ChannelModel, WorkloadModel, make_fleet
 
     daxes = batch_axes(mesh)
     n_clients = rules._axis_size(mesh, daxes)
     fleet = make_fleet(n=n_clients, seed=seed)
-    pairs = pairing.fedpairing_pairing(fleet, ChannelModel())
+    chan = ChannelModel()
+    pairs = pairing.fedpairing_pairing(fleet, chan)
     partner = pairing.partner_permutation(pairs, n_clients)
     if static_half_split:
         lengths = np.full(n_clients, cfg.num_layers // 2)
+        masks = np.stack([np.arange(cfg.num_layers) < l for l in lengths]
+                         ).astype(np.float32)
+        split_ranges = None
     else:
-        lengths = splitting.propagation_lengths(fleet.cpu_hz, partner,
-                                                cfg.num_layers)
-    masks = np.stack([np.arange(cfg.num_layers) < l for l in lengths]
-                     ).astype(np.float32)
+        plan = planning.build_round_plan(
+            fleet, chan, partner, cfg.num_layers, policy=split_policy,
+            workload=WorkloadModel(num_layers=cfg.num_layers),
+            granularity=bucket_granularity or 1)
+        masks = plan.masks()
+        split_ranges = plan.phase_envelope() if bucket_granularity else None
     agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
-
-    split_ranges = None
-    if bucket_granularity and not static_half_split:
-        split_ranges = fedbucket.fleet_phase_ranges(
-            lengths, partner, cfg.num_layers, bucket_granularity)
 
     dist_cfg = fedpair_dist.FedDistConfig(
         lr=lr, static_half_split=static_half_split,

@@ -1,0 +1,329 @@
+"""Planning layer — RoundPlan invariants and split-policy guarantees.
+
+Pins down the ISSUE-3 contract (DESIGN.md §6):
+
+* ONE split computation: the scalar ``latency.split_lengths``, vectorized
+  ``splitting.propagation_lengths`` and ``planning.paper_lengths`` agree
+  for every (f_i, f_j, W) on a grid (they are wrappers of `paper_cut`),
+* plan invariants: lengths sum to W per pair, self-paired clients get the
+  full stack, partner is an involution, active pairs are inside the
+  cohort — property-tested via ``repro.hypothesis_compat``,
+* ``latency-opt``'s Eq. (4) objective is <= the ``paper`` rule's on
+  random fleets (acceptance criterion; holds by construction),
+* the phase envelope (``RoundPlan.phase_envelope``) equals the engine-side
+  ``fedbucket.fleet_phase_ranges`` it replaced,
+* the baseline (server-cut) plans fold ``rounds._server_cut``'s old
+  semantics into the plan.
+"""
+import numpy as np
+import pytest
+
+from repro.core import latency, pairing, planning, splitting
+from repro.core.latency import ChannelModel, WorkloadModel
+from repro.hypothesis_compat import given, settings, strategies as st
+
+pytestmark = pytest.mark.planning
+
+CHAN = ChannelModel()
+
+
+def _random_partner(n, rng):
+    """A random involution (some clients may stay self-paired)."""
+    perm = rng.permutation(n)
+    partner = np.arange(n)
+    for k in range(0, n - 1, 2):
+        partner[perm[k]], partner[perm[k + 1]] = perm[k + 1], perm[k]
+    return partner
+
+
+# ---------------------------------------------------------------------------
+# satellite: one split rule, one clamping semantics
+# ---------------------------------------------------------------------------
+
+class TestOneSplitRule:
+    def test_scalar_and_vectorized_agree_on_grid(self):
+        """latency.split_lengths vs splitting.propagation_lengths on a
+        full (f_i, f_j, W) grid — the historical divergence bug trap."""
+        freqs = [0.1e9, 0.35e9, 0.5e9, 1.0e9, 1.7e9, 2.0e9]
+        for w in (2, 3, 5, 8, 18, 40):
+            for f_i in freqs:
+                for f_j in freqs:
+                    li, lj = latency.split_lengths(f_i, f_j, w)
+                    vec = splitting.propagation_lengths(
+                        np.array([f_i, f_j]), np.array([1, 0]), w)
+                    assert (vec[0], vec[1]) == (li, lj), (f_i, f_j, w)
+                    assert li + lj == w and 1 <= li <= w - 1
+
+    def test_wrappers_delegate_to_paper_cut(self):
+        assert latency.split_lengths(1.6e9, 0.4e9, 20)[0] \
+            == planning.paper_cut(1.6e9, 0.4e9, 20)
+
+    @given(n=st.integers(2, 16), w=st.integers(2, 40), seed=st.integers(0, 50))
+    @settings(max_examples=30, deadline=None)
+    def test_vectorized_matches_scalar_on_random_involutions(self, n, w,
+                                                            seed):
+        rng = np.random.default_rng(seed)
+        f = rng.uniform(0.1, 2.0, n)
+        partner = _random_partner(n, rng)
+        L = planning.paper_lengths(f, partner, w)
+        for i in range(n):
+            j = int(partner[i])
+            if i < j:
+                assert (L[i], L[j]) == latency.split_lengths(f[i], f[j], w)
+            elif i == j:
+                assert L[i] == w
+
+    def test_phase_envelope_matches_bucket_plan(self):
+        """The envelope must equal (and therefore cover) the bucketed
+        engine's plan_buckets slices — plan_buckets keeps its own
+        rounding, so this pins the two implementations together
+        (fleet_phase_ranges itself is a thin wrapper over the envelope,
+        comparing against IT would be a tautology)."""
+        from repro.core import fedbucket
+        rng = np.random.default_rng(3)
+        for n, w, g in [(4, 8, 1), (6, 18, 1), (6, 18, 4), (8, 12, 3)]:
+            f = rng.uniform(0.1, 2.0, n)
+            partner = _random_partner(n, rng)
+            lengths = planning.paper_lengths(f, partner, w)
+            bplan = fedbucket.plan_buckets(lengths, partner, w, g)
+            want = (max(grp.hi for grp in bplan.bottom),
+                    min(grp.lo for grp in bplan.top))
+            got = planning.phase_envelope(lengths, partner, w, g)
+            assert got == want, (n, w, g)
+            # and the envelope covers every client's protocol ranges
+            bot_hi, top_lo = got
+            for i in range(n):
+                assert lengths[i] <= bot_hi
+                lp = lengths[int(partner[i])]
+                if lp < w:
+                    assert top_lo <= lp
+
+
+# ---------------------------------------------------------------------------
+# plan invariants (property-tested)
+# ---------------------------------------------------------------------------
+
+class TestPlanInvariants:
+    @given(n=st.integers(2, 12), w=st.integers(2, 24), seed=st.integers(0, 40),
+           pol=st.sampled_from(["paper", "fixed:3", "latency-opt"]))
+    @settings(max_examples=40, deadline=None)
+    def test_lengths_sum_and_self_pairs(self, n, w, seed, pol):
+        fleet = latency.make_fleet(n=n, seed=seed)
+        rng = np.random.default_rng(seed + 1)
+        partner = _random_partner(n, rng)
+        plan = planning.build_round_plan(
+            fleet, CHAN, partner, w, policy=pol,
+            workload=WorkloadModel(num_layers=w))
+        L = plan.lengths_array()
+        for i in range(n):
+            j = int(partner[i])
+            if i == j:
+                assert L[i] == w          # self-paired: full stack
+            else:
+                assert L[i] + L[j] == w   # pair lengths sum to W
+                assert 1 <= L[i] <= w - 1
+
+    @given(n=st.integers(2, 10), seed=st.integers(0, 30))
+    @settings(max_examples=25, deadline=None)
+    def test_latency_opt_objective_never_worse_than_paper(self, n, seed):
+        """Acceptance: Eq. (4) objective under latency-opt <= paper rule
+        on random fleets (the paper's cut is in the search set)."""
+        w = WorkloadModel(num_layers=18)
+        fleet = latency.make_fleet(n=n, seed=seed)
+        pairs = pairing.fedpairing_pairing(fleet, CHAN)
+        partner = planning.partner_from_pairs(pairs, n)
+        obj = {pol: planning.build_round_plan(
+            fleet, CHAN, partner, 18, policy=pol, workload=w).objective
+            for pol in ("paper", "latency-opt")}
+        assert obj["latency-opt"] <= obj["paper"] + 1e-9
+
+    def test_latency_opt_strictly_improves_somewhere(self):
+        """The search must actually move a cut on some fleet — otherwise
+        the policy silently degenerated to the paper rule."""
+        diffs = []
+        for seed in range(8):
+            fleet = latency.make_fleet(n=8, seed=seed)
+            partner = planning.partner_from_pairs(
+                pairing.fedpairing_pairing(fleet, CHAN), 8)
+            w = WorkloadModel(num_layers=18)
+            p = planning.build_round_plan(fleet, CHAN, partner, 18,
+                                          policy="paper", workload=w)
+            o = planning.build_round_plan(fleet, CHAN, partner, 18,
+                                          policy="latency-opt", workload=w)
+            diffs.append(o.lengths != p.lengths)
+        assert any(diffs)
+
+    def test_latency_opt_uses_boundary_profile(self):
+        """With a per-cut payload profile, narrow boundaries pull the cut
+        away from the compute-balanced depth when the link is slow — the
+        joint compute x communication trade the policy exists for.  Both
+        flows' boundaries are priced (flow i cuts at L_i, flow j at
+        W - L_i), so the cheap depths must be complementary."""
+        n, W = 2, 10
+        fleet = latency.make_fleet(n=n, seed=0)
+        # same CPU -> paper rule cuts at W/2 = 5
+        f = np.array([1.0e9, 1.0e9])
+        fleet = latency.ClientFleet(positions=fleet.positions, cpu_hz=f,
+                                    data_sizes=fleet.data_sizes)
+        # cheap boundaries only at depths 2 and 8 (complements): any other
+        # cut ships a 1e9-byte tensor on at least one flow
+        profile = tuple(1.0 if cut in (2, 8) else 1e9
+                        for cut in range(1, W))
+        w = WorkloadModel(num_layers=W, feature_profile=profile,
+                          grad_profile=profile)
+        plan = planning.build_round_plan(fleet, CHAN, np.array([1, 0]), W,
+                                         policy="latency-opt", workload=w)
+        assert plan.lengths[0] in (2, 8)  # both flows on cheap boundaries
+        paper = planning.build_round_plan(fleet, CHAN, np.array([1, 0]), W,
+                                          policy="paper", workload=w)
+        assert plan.objective <= paper.objective
+
+    def test_pair_cost_prices_each_flow_at_its_own_cut(self):
+        """Asymmetric profile: the comm term must combine flow i's
+        features at L_i with flow j's gradients at L_j (they travel the
+        same direction), not price both flows at the canonical cut."""
+        W = 6
+        feat = tuple(float(10 ** cut) for cut in range(1, W))
+        grad = tuple(float(10 ** (W - cut)) for cut in range(1, W))
+        w = WorkloadModel(num_layers=W, feature_profile=feat,
+                          grad_profile=grad, batch_size=1,
+                          batches_per_epoch=1, local_epochs=1)
+        li, lj = 2, 4
+        cost = planning.pair_cost(1e9, 1e9, 1.0, w, li, lj, alpha=0.0)
+        # i->j: feat(li)=1e2 + grad(lj)=1e2; j->i: feat(lj)=1e4 + grad(li)=1e4
+        assert cost == pytest.approx(1e4 + 1e4)
+
+    def test_active_pairs_and_validation(self):
+        fleet = latency.make_fleet(n=4, seed=0)
+        plan = planning.build_round_plan(
+            fleet, CHAN, np.array([1, 0, 3, 2]), 8,
+            active=np.array([True, True, False, False]))
+        assert plan.pairs == ((0, 1),)
+        assert plan.validate() is plan
+
+    def test_validate_rejects_non_involution(self):
+        plan = planning.RoundPlan(
+            kind="paired", policy="paper", num_layers=4,
+            partner=(1, 2, 0), lengths=(2, 2, 4), active=(True,) * 3,
+            pairs=(), server_cut=2)
+        with pytest.raises(ValueError, match="involution"):
+            plan.validate()
+
+    def test_validate_rejects_bad_pair_sum(self):
+        plan = planning.RoundPlan(
+            kind="paired", policy="paper", num_layers=4,
+            partner=(1, 0), lengths=(2, 3), active=(True, True),
+            pairs=((0, 1),), server_cut=2)
+        with pytest.raises(ValueError, match="!= W"):
+            plan.validate()
+
+    def test_validate_rejects_partial_self_pair(self):
+        plan = planning.RoundPlan(
+            kind="paired", policy="paper", num_layers=4,
+            partner=(0, 1), lengths=(2, 4), active=(True, True),
+            pairs=(), server_cut=2)
+        with pytest.raises(ValueError, match="full"):
+            plan.validate()
+
+    def test_masks_and_cache_key(self):
+        fleet = latency.make_fleet(n=2, seed=0)
+        plan = planning.build_round_plan(fleet, CHAN, np.array([1, 0]), 6)
+        m = plan.masks()
+        assert m.shape == (2, 6)
+        np.testing.assert_array_equal(m.sum(axis=1), plan.lengths_array())
+        assert plan.cache_key() == plan.cache_key()
+        assert hash(plan) == hash(plan)   # frozen/hashable
+
+
+# ---------------------------------------------------------------------------
+# policy registry
+# ---------------------------------------------------------------------------
+
+class TestPolicyRegistry:
+    def test_specs_resolve(self):
+        assert planning.get_policy("paper").spec == "paper"
+        assert planning.get_policy("latency-opt").spec == "latency-opt"
+        assert planning.get_policy("fixed:7").spec == "fixed:7"
+        pol = planning.get_policy("paper")
+        assert planning.get_policy(pol) is pol    # instances pass through
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError, match="unknown split policy"):
+            planning.get_policy("optimal")
+
+    def test_bad_fixed_k_raises(self):
+        with pytest.raises(ValueError, match="integer"):
+            planning.get_policy("fixed:half")
+        with pytest.raises(ValueError, match=">= 1"):
+            planning.get_policy("fixed:0")
+
+    def test_fixed_policy_clamps_to_w(self):
+        fleet = latency.make_fleet(n=2, seed=0)
+        plan = planning.build_round_plan(fleet, CHAN, np.array([1, 0]), 4,
+                                         policy="fixed:99")
+        assert plan.lengths == (3, 1)             # clamped to W-1
+
+    def test_latency_opt_without_workload_raises(self):
+        fleet = latency.make_fleet(n=2, seed=0)
+        with pytest.raises(ValueError, match="workload"):
+            planning.build_round_plan(fleet, CHAN, np.array([1, 0]), 4,
+                                      policy="latency-opt")
+
+
+# ---------------------------------------------------------------------------
+# baseline plans (the old rounds._server_cut, folded into the plan)
+# ---------------------------------------------------------------------------
+
+class TestBaselinePlans:
+    def test_server_split_lengths(self):
+        act = np.array([True, False, True])
+        plan = planning.baseline_plan(3, 8, active=act, server_cut=0)
+        assert plan.kind == "server-split"
+        assert plan.server_cut == 4               # 0 -> W//2
+        assert plan.lengths == (4, 8, 4)          # inactive: full stack
+        assert plan.pairs == ()
+
+    def test_explicit_cut_and_full_stack(self):
+        plan = planning.baseline_plan(2, 8, server_cut=3)
+        assert plan.server_cut == 3 and plan.lengths == (3, 3)
+        fl = planning.baseline_plan(2, 8, full_stack=True)
+        assert fl.kind == "local" and fl.lengths == (8, 8)
+
+    def test_round_time_plan_rejects_baseline_plans(self):
+        fleet = latency.make_fleet(n=2, seed=0)
+        w = WorkloadModel(num_layers=8)
+        with pytest.raises(ValueError, match="paired"):
+            latency.round_time_plan(planning.baseline_plan(2, 8), fleet,
+                                    CHAN, w)
+
+
+# ---------------------------------------------------------------------------
+# latency-model delegation
+# ---------------------------------------------------------------------------
+
+class TestLatencyDelegation:
+    def test_pair_round_time_equals_pair_cost(self):
+        w = WorkloadModel(num_layers=18)
+        t = latency.pair_round_time(1.6e9, 0.4e9, 1e8, w)
+        li, lj = latency.split_lengths(1.6e9, 0.4e9, 18)
+        assert t == planning.pair_cost(1.6e9, 0.4e9, 1e8, w, li, lj)
+
+    def test_round_time_plan_matches_from_partner_under_paper(self):
+        fleet = latency.make_fleet(n=6, seed=1)
+        w = WorkloadModel(num_layers=18)
+        partner = planning.partner_from_pairs(
+            pairing.fedpairing_pairing(fleet, CHAN), 6)
+        plan = planning.build_round_plan(fleet, CHAN, partner, 18,
+                                         workload=w)
+        np.testing.assert_allclose(
+            latency.round_time_plan(plan, fleet, CHAN, w),
+            latency.round_time_from_partner(partner, fleet, CHAN, w))
+
+    def test_objective_value_delegates_per_policy(self):
+        fleet = latency.make_fleet(n=8, seed=2)
+        w = WorkloadModel(num_layers=18)
+        pairs = pairing.fedpairing_pairing(fleet, CHAN)
+        o_paper = latency.objective_value(pairs, fleet, CHAN, w)
+        o_opt = latency.objective_value(pairs, fleet, CHAN, w,
+                                        policy="latency-opt")
+        assert 0 < o_opt <= o_paper + 1e-9

@@ -21,7 +21,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import latency, rounds
+from repro.core import latency, planning, rounds
 from repro.core.latency import WorkloadModel
 
 W = 4
@@ -46,9 +46,14 @@ def _tree_allclose(a, b, rtol=5e-4, atol=5e-5):
 
 
 class TestCrossEngine:
-    def test_vmapped_vs_bucketed_rounds(self):
-        """N rounds, same seed: identical traces, allclose parameters."""
-        d_v, d_b = _driver("vmapped"), _driver("bucketed")
+    @pytest.mark.parametrize("split_policy",
+                             ["paper", "fixed:2", "latency-opt"])
+    def test_vmapped_vs_bucketed_rounds(self, split_policy):
+        """N rounds, same seed: identical traces, allclose parameters —
+        under every split policy (the engines must agree on whatever
+        schedule the plan hands them)."""
+        d_v = _driver("vmapped", split_policy=split_policy)
+        d_b = _driver("bucketed", split_policy=split_policy)
         s_v, s_b = d_v.run(), d_b.run()
         assert len(s_v.history) == len(s_b.history) == 3
         for r_v, r_b in zip(s_v.history, s_b.history):
@@ -57,6 +62,21 @@ class TestCrossEngine:
             assert r_v.lengths == r_b.lengths
             assert r_v.sim_round_s == r_b.sim_round_s
         _tree_allclose(d_v.global_params(s_v), d_b.global_params(s_b))
+
+    def test_fixed_policy_cuts_every_pair_at_k(self):
+        s = _driver("vmapped", split_policy="fixed:1").run()
+        for r in s.history:
+            for i, j in r.pairs:
+                assert r.lengths[i] == 1 and r.lengths[j] == W - 1
+
+    def test_latency_opt_trace_never_slower_than_paper(self):
+        """Same seed -> same cohorts/pairs; the latency-opt schedule's
+        simulated round time must be <= the paper rule's every round."""
+        s_p = _driver("vmapped", split_policy="paper").run()
+        s_o = _driver("vmapped", split_policy="latency-opt").run()
+        for r_p, r_o in zip(s_p.history, s_o.history):
+            assert r_p.cohort == r_o.cohort and r_p.pairs == r_o.pairs
+            assert r_o.sim_round_s <= r_p.sim_round_s + 1e-9
 
     def test_repairing_actually_varies(self):
         """The harness is only meaningful if re-pairing happens: across
@@ -174,6 +194,25 @@ class TestRoundSemantics:
         _tree_allclose(d_a.global_params(s_a), d_b.global_params(s_b),
                        rtol=1e-6, atol=1e-7)
 
+    def test_latency_accounted_at_workload_depth(self):
+        """When the workload model is calibrated deeper than the trained
+        architecture (bench_roundtime: 18-layer paper accounting over the
+        tiny smoke model), the simulated clock must re-plan the pairing at
+        the WORKLOAD depth — otherwise FedPairing pays W=4 splits against
+        the baselines' 18-layer full stacks and the Table-II ratio is
+        fiction."""
+        w18 = WorkloadModel(num_layers=18, batches_per_epoch=2,
+                            local_epochs=1)
+        rc = rounds.RoundConfig(rounds=1, batches_per_round=2,
+                                donate=False, seed=0)
+        d = rounds.RoundDriver(CFG, rc, FLEET, workload=w18)
+        r = d.run().history[0]
+        partner = planning.partner_from_pairs(r.pairs, N)
+        expected = latency.round_time_from_partner(partner, FLEET, d.chan,
+                                                   w18)
+        assert r.sim_round_s == pytest.approx(expected)
+        assert max(r.lengths) <= W     # executed lengths stay model-scale
+
     def test_sim_time_accumulates(self):
         s = _driver(rounds=3).run()
         totals = [r.sim_total_s for r in s.history]
@@ -223,6 +262,12 @@ class TestConfigValidation:
     def test_rejects_unknown_pairing(self):
         with pytest.raises(ValueError, match="pair_mechanism"):
             rounds.RoundConfig(pair_mechanism="optimal")
+
+    def test_rejects_unknown_split_policy(self):
+        with pytest.raises(ValueError, match="split policy"):
+            rounds.RoundConfig(split_policy="optimal")
+        with pytest.raises(ValueError, match="integer"):
+            rounds.RoundConfig(split_policy="fixed:half")
 
     def test_rejects_unknown_aggregation(self):
         with pytest.raises(ValueError, match="aggregation"):
