@@ -1,7 +1,7 @@
 """Table I — average round time under different pairing mechanisms —
-plus the split-POLICY comparison the planning layer opens up.
+plus the split-POLICY comparison and the JOINT pairing x split matrix.
 
-Two axes on the calibrated latency model, averaged over fleet draws:
+Three axes on the calibrated latency model, averaged over fleet draws:
 
 * pairing mechanism (paper Table I): FedPairing's greedy (joint), random,
   location-based, computation-resource-based — with the paper's numbers
@@ -11,7 +11,13 @@ Two axes on the calibrated latency model, averaged over fleet draws:
   cut) vs ``latency-opt`` (per-pair cut search against the full Eq. (3)
   cost).  ``latency-opt`` is never worse than ``paper`` by construction —
   the per-fleet max objective ratio is recorded and asserted by
-  ``scripts/bench_smoke.sh``.
+  ``scripts/bench_smoke.sh``,
+* joint matrix (``planning.build_joint_plan``): every pairing policy
+  (paper-weight | greedy-cost | blossom-cost) x split policy
+  (paper | latency-opt).  The joint plans are never worse than the
+  sequential pair-then-cut plan by construction — the per-fleet max
+  joint/sequential objective ratio is asserted by bench_smoke on EVERY
+  fleet.
 
 Writes machine-readable ``BENCH_pairing.json`` at the repo root
 (``tiny=True`` smoke runs write ``BENCH_pairing_tiny.json`` so CI never
@@ -20,7 +26,12 @@ clobbers the tracked record):
     {"table1": {"<mechanism>": {"round_s": .., "paper_s": ..}, ...},
      "policies": {"<policy>": {"objective": .., "round_s": ..}, ...},
      "latency_opt_vs_paper_objective": <mean ratio, <= 1.0>,
-     "max_objective_ratio": <worst fleet, <= 1.0>}
+     "max_objective_ratio": <worst fleet, <= 1.0>,
+     "joint": {"<pair_policy>|<split_policy>":
+                   {"objective": .., "round_s": ..}, ...},
+     "joint_vs_sequential_objective": <mean ratio, greedy x latency-opt
+                                       headline cell, <= 1.0>,
+     "max_joint_ratio": <worst fleet x matrix cell, <= 1.0>}
 """
 from __future__ import annotations
 
@@ -33,6 +44,9 @@ import numpy as np
 
 from repro.core import latency, pairing, planning
 from repro.core.latency import ChannelModel, WorkloadModel
+
+JOINT_PAIR_POLICIES = ("paper-weight", "greedy-cost", "blossom-cost")
+JOINT_SPLIT_POLICIES = ("paper", "latency-opt")
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_PATH = os.path.join(_ROOT, "BENCH_pairing.json")
@@ -57,7 +71,12 @@ def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
     pol_obj = {p: [] for p in _policies(num_layers)}
     pol_rt = {p: [] for p in _policies(num_layers)}
     obj_ratios = []                     # per-fleet latency-opt / paper
-    t_mech = t_pol = 0.0                # timed separately: the Table-I
+    joint_cells = [(pp, sp) for pp in JOINT_PAIR_POLICIES
+                   for sp in JOINT_SPLIT_POLICIES]
+    joint_obj = {c: [] for c in joint_cells}
+    joint_rt = {c: [] for c in joint_cells}
+    joint_ratios = []                   # per-fleet joint / sequential
+    t_mech = t_pol = t_joint = 0.0      # timed separately: the Table-I
     for seed in range(n_fleets):        # mechanisms vs the policy planning
         fleet = latency.make_fleet(n=n_clients, seed=seed)
 
@@ -83,8 +102,26 @@ def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
             pol_rt[pol].append(latency.round_time_plan(plan, fleet, chan, w))
         obj_ratios.append(pol_obj["latency-opt"][-1] / pol_obj["paper"][-1])
         t_pol += time.perf_counter() - t0
+
+        # joint pairing x split matrix (each plan's seq_objective is its
+        # own sequential pair-then-cut reference under the SAME policies)
+        t0 = time.perf_counter()
+        for pp, sp in joint_cells:
+            jp = planning.build_joint_plan(fleet, chan, num_layers,
+                                           pair_policy=pp, split_policy=sp,
+                                           workload=w)
+            joint_obj[(pp, sp)].append(jp.objective)
+            joint_rt[(pp, sp)].append(
+                latency.round_time_plan(jp, fleet, chan, w))
+            # the <= guarantee is per cell (each plan carries its OWN
+            # sequential reference under the same split policy) — feed
+            # EVERY cell into the worst-case ratio bench_smoke asserts;
+            # the headline mean tracks the greedy-cost x latency-opt cell
+            joint_ratios.append((pp, sp, jp.objective / jp.seq_objective))
+        t_joint += time.perf_counter() - t0
     us = t_mech * 1e6 / n_fleets
     us_pol = t_pol * 1e6 / n_fleets
+    us_joint = t_joint * 1e6 / n_fleets
 
     rows = []
     for k in ("fedpairing", "random", "location", "compute"):
@@ -114,6 +151,28 @@ def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
         "derived": f"mean_obj_ratio={mean_ratio:.3f} "
                    f"max_obj_ratio={max_ratio:.3f} (<= 1.0 by construction)",
     })
+    joint_report = {}
+    seq_key = ("paper-weight", "latency-opt")
+    for pp, sp in joint_cells:
+        obj = float(np.mean(joint_obj[(pp, sp)]))
+        rt = float(np.mean(joint_rt[(pp, sp)]))
+        joint_report[f"{pp}|{sp}"] = {"objective": round(obj, 2),
+                                      "round_s": round(rt, 1)}
+        rows.append({
+            "name": f"pairing/joint_{pp}_{sp}", "us_per_call": us_joint,
+            "derived": f"objective={obj:.0f} round_s={rt:.0f} "
+                       f"vs_seq_latopt="
+                       f"{obj / np.mean(joint_obj[seq_key]):.3f}",
+        })
+    mean_joint = float(np.mean([r for pp, sp, r in joint_ratios
+                                if (pp, sp) == ("greedy-cost",
+                                                "latency-opt")]))
+    max_joint = float(np.max([r for _, _, r in joint_ratios]))
+    rows.append({
+        "name": "pairing/joint_vs_sequential", "us_per_call": us_joint,
+        "derived": f"mean_obj_ratio={mean_joint:.3f} "
+                   f"max_obj_ratio={max_joint:.3f} (<= 1.0 by construction)",
+    })
     with open(json_path, "w") as f:
         json.dump({
             "tiny": tiny, "fleets": n_fleets, "clients": n_clients,
@@ -123,6 +182,9 @@ def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
             "policies": policies_report,
             "latency_opt_vs_paper_objective": round(mean_ratio, 4),
             "max_objective_ratio": round(max_ratio, 4),
+            "joint": joint_report,
+            "joint_vs_sequential_objective": round(mean_joint, 4),
+            "max_joint_ratio": round(max_joint, 4),
         }, f, indent=2)
         f.write("\n")
     return rows

@@ -25,9 +25,21 @@ for name, e in policies.items():
 assert d["max_objective_ratio"] <= 1.0 + 1e-9, d["max_objective_ratio"]
 assert d["latency_opt_vs_paper_objective"] <= 1.0 + 1e-9, \
     d["latency_opt_vs_paper_objective"]
+# the joint layer's guarantee: build_joint_plan (pairing x cut together)
+# is never worse than the sequential pair-then-cut plan, on EVERY fleet
+joint = d.get("joint", {})
+for pp in ("paper-weight", "greedy-cost", "blossom-cost"):
+    for sp in ("paper", "latency-opt"):
+        e = joint.get(f"{pp}|{sp}")
+        assert e and e["objective"] > 0 and e["round_s"] > 0, (pp, sp, e)
+assert d["max_joint_ratio"] <= 1.0 + 1e-9, d["max_joint_ratio"]
+assert d["joint_vs_sequential_objective"] <= 1.0 + 1e-9, \
+    d["joint_vs_sequential_objective"]
 print("bench_smoke: BENCH_pairing_tiny.json OK "
       f"(latency-opt/paper objective={d['latency_opt_vs_paper_objective']}, "
-      f"worst fleet={d['max_objective_ratio']})")
+      f"worst fleet={d['max_objective_ratio']}; "
+      f"joint/sequential={d['joint_vs_sequential_objective']}, "
+      f"worst fleet={d['max_joint_ratio']})")
 PY
 
 python - <<'PY'

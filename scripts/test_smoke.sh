@@ -7,9 +7,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-# planning suite first (fast, host-side): the RoundPlan invariants gate
-# everything downstream — fail here before paying for the full suite
+# planning + pairing suites first (fast, host-side): the RoundPlan and
+# joint-matching invariants gate everything downstream — fail here before
+# paying for the full suite
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m planning
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m pairing
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 

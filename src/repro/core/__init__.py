@@ -5,16 +5,22 @@ from repro.core.planning import (  # noqa: F401
     RoundPlan,
     SplitPolicy,
     baseline_plan,
+    build_joint_plan,
     build_round_plan,
     get_policy,
+    plan_objective,
 )
 from repro.core.pairing import (  # noqa: F401
+    PairingContext,
+    PairingPolicy,
     compute_pairing,
     edge_weights,
     fedpairing_pairing,
+    get_pairing_policy,
     greedy_pairing,
     location_pairing,
     optimal_pairing,
+    pair_cost_matrix,
     partner_permutation,
     random_pairing,
     validate_matching,

@@ -127,6 +127,37 @@ class WorkloadModel:
     grad_profile: Optional[Tuple[float, ...]] = None
 
 
+def workload_from_arch(cfg, *, seq_len: int = 64, batch_size: int = 32,
+                       batches_per_epoch: int = 78, local_epochs: int = 2,
+                       cycles_per_layer: float = 2e8) -> WorkloadModel:
+    """WorkloadModel calibrated to a REAL architecture config.
+
+    The per-cut ``feature_profile``/``grad_profile`` come from
+    ``models.registry.boundary_profile`` (the actual residual-stream
+    payload at every split depth — patches, encoder memory and activation
+    dtype included) instead of the flat ResNet18 constant, and
+    ``model_bytes`` is the architecture's true fp32 parameter footprint —
+    so joint pairing x split costs price what the engines would really
+    ship.  ``cycles_per_layer`` keeps the paper's §IV CPU calibration by
+    default (the fleets are simulated phones, not the training host).
+    """
+    from repro.models import registry
+
+    feat, grad = registry.boundary_profile(cfg, seq_len)
+    mid = cfg.num_layers // 2
+    return WorkloadModel(
+        num_layers=cfg.num_layers,
+        cycles_per_layer=cycles_per_layer,
+        feature_bytes=feat[max(mid - 1, 0)],
+        grad_bytes=grad[max(mid - 1, 0)],
+        model_bytes=4.0 * registry.count_params_analytical(cfg),
+        batch_size=batch_size,
+        batches_per_epoch=batches_per_epoch,
+        local_epochs=local_epochs,
+        feature_profile=feat,
+        grad_profile=grad)
+
+
 def split_lengths(f_i: float, f_j: float, num_layers: int) -> Tuple[int, int]:
     """Paper: L_i = floor(f_i/(f_i+f_j) * W), L_j = W - L_i; L_i >= 1 kept.
 

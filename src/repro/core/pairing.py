@@ -1,4 +1,5 @@
-"""Client pairing — the paper's §III greedy algorithm + baselines.
+"""Client pairing — the paper's §III greedy algorithm, baselines, and the
+cost-driven PairingPolicy registry.
 
 Problem 2: max-weight edge selection on the client graph with
 ``eps_ij = alpha (f_i - f_j)^2 + beta r_ij`` subject to each vertex covered
@@ -9,13 +10,29 @@ Baselines (paper Table I): random pairing, location-based (max rate only),
 computation-resource-based (max (f_i-f_j)^2 only).  We also provide the
 *optimal* max-weight matching (NetworkX blossom) as an upper bound the
 paper doesn't evaluate — used in tests to bound the greedy's gap.
+
+Beyond the paper's weight heuristic, the **PairingPolicy** registry
+(mirroring ``planning``'s SplitPolicy) scores candidate edges by their TRUE
+Eq. (3) latency under the policy-optimal cut (``pair_cost_matrix``: each
+hypothetical pair is priced at the best cut its split policy would choose),
+so Problem 1 can be solved jointly — pairing AND cut together (cf. Wen et
+al., *Training Latency Minimization for Model-Splitting Allowed Federated
+Edge Learning*; Sun et al., *Split Federated Learning Over Heterogeneous
+Edge Devices*).  Two selectors run on the cost matrix: ``greedy-cost``
+(ascending min-cost greedy, the Alg.-1 shape on real costs) and
+``blossom-cost`` (exact min-cost maximum matching — the bound).
+``paper-weight`` remains the default policy and is bit-identical to the
+historical ``fedpairing_pairing``; see ``planning.build_joint_plan`` for
+the joint plan the round driver consumes (DESIGN.md §7).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import planning
 from repro.core.latency import ChannelModel, ClientFleet
 
 Pairs = List[Tuple[int, int]]
@@ -99,6 +116,259 @@ def fedpairing_pairing(fleet: ClientFleet, chan: ChannelModel,
     between equally-balanced pairs — larger beta sacrifices balance for
     rate and loses to the compute-only baseline."""
     return greedy_pairing(edge_weights(fleet, chan, alpha=alpha, beta=beta))
+
+
+# ---------------------------------------------------------------------------
+# cost-driven pairing — price every candidate edge by its TRUE Eq. (3)
+# latency at that hypothetical pair's policy-optimal cut
+# ---------------------------------------------------------------------------
+
+def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
+                     num_layers: int, workload, *, split_policy="paper",
+                     alpha: float = 1.0, beta: float = 1.0,
+                     rates: Optional[np.ndarray] = None,
+                     rel_data: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """(N, N) symmetric edge-cost matrix for joint pairing x split search.
+
+    Entry (i, j) is ``planning.pair_cost`` of the hypothetical pair (i, j)
+    evaluated at the cut the ``split_policy`` would choose FOR that pair —
+    i.e. each edge is priced at its policy-optimal split, so a matching
+    that minimizes the matrix sum minimizes the Eq. (4) objective of the
+    resulting ``build_round_plan`` under the same policy.  Also returns the
+    (N, N) canonical-member cut matrix (cuts[i, j] with i < j canonical)
+    so callers can reuse the search.  ``rel_data`` overrides the dataset
+    weights (e.g. full-fleet-normalized weights when pricing a cohort
+    sub-problem); the diagonal is +inf (no self-pairs).
+    """
+    if workload is None:
+        raise ValueError("pair_cost_matrix needs a workload model "
+                         "(the Eq. (3) cost has no meaning without one)")
+    n = fleet.n
+    f = np.asarray(fleet.cpu_hz, np.float64)
+    if rates is None:
+        rates = fleet.rates(chan) if chan is not None \
+            else np.full((n, n), np.inf)
+    if rel_data is None:
+        rel_data = np.asarray(fleet.data_sizes, np.float64)
+        rel_data = rel_data / rel_data.sum()
+    pol = planning.get_policy(split_policy)
+    cost = np.full((n, n), np.inf)
+    cuts = np.zeros((n, n), np.int64)
+    for i in range(n):
+        for j in range(i + 1, n):
+            ctx = planning.PairContext(
+                f_i=float(f[i]), f_j=float(f[j]), num_layers=num_layers,
+                rate_bps=float(rates[i, j]), d_i=float(rel_data[i]),
+                d_j=float(rel_data[j]), workload=workload,
+                alpha=alpha, beta=beta)
+            li, c = pol.pair_cut_cost(ctx)
+            cost[i, j] = cost[j, i] = c
+            cuts[i, j] = cuts[j, i] = int(li)
+    return cost, cuts
+
+
+def two_opt_refine(pairs: Pairs, cost: np.ndarray,
+                   max_sweeps: int = 20) -> Pairs:
+    """Pairwise-exchange (2-opt) descent on a matching's total cost.
+
+    For every two pairs (i,j),(k,l) the two rewirings (i,k)(j,l) and
+    (i,l)(j,k) are tried; the best strictly-improving exchange is applied
+    and sweeps repeat to a local optimum.  Each accepted exchange lowers
+    the total, so this can only improve the matching it starts from —
+    cheap (O(sweeps x P^2)) against the blossom's exact optimum.
+    """
+    pairs = [tuple(p) for p in pairs]
+    for _ in range(max_sweeps):
+        improved = False
+        for a in range(len(pairs)):
+            for b in range(a + 1, len(pairs)):
+                i, j = pairs[a]
+                k, l = pairs[b]
+                base = cost[i, j] + cost[k, l]
+                for p1, p2 in (((i, k), (j, l)), ((i, l), (j, k))):
+                    if cost[p1] + cost[p2] < base - 1e-12:
+                        pairs[a] = (min(p1), max(p1))
+                        pairs[b] = (min(p2), max(p2))
+                        base = cost[pairs[a]] + cost[pairs[b]]
+                        improved = True
+        if not improved:
+            break
+    return sorted(pairs)
+
+
+def min_cost_greedy_pairing(cost: np.ndarray) -> Pairs:
+    """Min-cost greedy edge selection + 2-opt exchange refinement.
+
+    Ascending-cost greedy (Alg. 1's shape on true edge costs: take the
+    cheapest edge whose endpoints are both uncovered) is a poor selector
+    for a SUM objective — it burns the cheap edges on already-fast pairs
+    and leaves the stragglers matched to each other — so the raw matching
+    is refined by ``two_opt_refine`` pairwise exchanges, which is where
+    the joint gain over pair-then-cut actually materializes (the blossom
+    selector certifies how close the local optimum lands).
+    """
+    return two_opt_refine(greedy_pairing(-cost), cost)
+
+
+def min_cost_blossom_pairing(cost: np.ndarray) -> Pairs:
+    """Exact min-cost maximum matching (blossom) — the joint bound.
+
+    Max-weight max-cardinality matching on ``C - cost`` with ``C`` above
+    every finite cost, so among maximum matchings the total cost is
+    minimized exactly (the greedy selector is tested against this bound).
+    """
+    import networkx as nx
+
+    n = cost.shape[0]
+    finite = cost[np.isfinite(cost)]
+    hi = float(finite.max()) if finite.size else 1.0
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    for i in range(n):
+        for j in range(i + 1, n):
+            if np.isfinite(cost[i, j]):
+                g.add_edge(i, j, weight=hi - float(cost[i, j]) + 1.0)
+    mate = nx.max_weight_matching(g, maxcardinality=True)
+    return sorted((min(i, j), max(i, j)) for i, j in mate)
+
+
+# ---------------------------------------------------------------------------
+# PairingPolicy registry (mirrors planning's SplitPolicy)
+# ---------------------------------------------------------------------------
+
+PAIRING_SPECS = ("paper-weight", "random", "location", "compute",
+                 "greedy-cost", "blossom-cost")
+# Table-I mechanism names accepted as aliases ("fedpairing" is the paper's
+# name for the paper-weight greedy); one resolver serves both vocabularies
+# so an unknown mechanism raises at config-validation time, not mid-round.
+MECHANISM_ALIASES = {"fedpairing": "paper-weight"}
+TABLE1_MECHANISMS = ("fedpairing", "random", "location", "compute")
+
+
+@dataclasses.dataclass(frozen=True)
+class PairingContext:
+    """Everything a pairing policy may consult.  Weight-heuristic policies
+    only need the fleet/channel they are called with; cost-driven policies
+    additionally need the stack depth, the workload model and the split
+    policy whose optimal cuts price the edges.  ``rel_data`` optionally
+    overrides dataset weights (full-fleet-normalized cohort weights);
+    ``seed`` feeds the ``random`` mechanism (drawn from the driver rng)."""
+
+    num_layers: int = 0
+    workload: Optional[object] = None
+    split_policy: object = "paper"
+    alpha: float = 1.0
+    beta: float = 1.0
+    rates: Optional[np.ndarray] = None
+    rel_data: Optional[np.ndarray] = None
+    seed: int = 0
+
+
+class PairingPolicy:
+    """A rule mapping (fleet, channel, context) to a matching."""
+
+    spec: str = "?"
+    cost_driven: bool = False        # True -> needs workload + num_layers
+
+    def pair(self, fleet: ClientFleet, chan: Optional[ChannelModel],
+             ctx: PairingContext) -> Pairs:
+        raise NotImplementedError
+
+    def bind(self, ctx: PairingContext):
+        """Close over a context -> the historical ``PairFn`` signature
+        (``participation.cohort_partner`` consumes either form)."""
+        return lambda fleet, chan: self.pair(fleet, chan, ctx)
+
+
+class PaperWeightPairing(PairingPolicy):
+    """The paper's Alg. 1: greedy on the eps_ij weight heuristic — the
+    default, bit-identical to the historical ``fedpairing_pairing``."""
+
+    spec = "paper-weight"
+
+    def pair(self, fleet, chan, ctx):
+        return fedpairing_pairing(fleet, chan)
+
+
+class RandomPairing(PairingPolicy):
+    """Table-I random baseline; the seed comes from the context (the round
+    driver draws it from its rng each round — no placeholder-None)."""
+
+    spec = "random"
+
+    def pair(self, fleet, chan, ctx):
+        return random_pairing(fleet.n, seed=ctx.seed)
+
+
+class LocationPairing(PairingPolicy):
+    spec = "location"
+
+    def pair(self, fleet, chan, ctx):
+        return location_pairing(fleet, chan)
+
+
+class ComputePairing(PairingPolicy):
+    spec = "compute"
+
+    def pair(self, fleet, chan, ctx):
+        return compute_pairing(fleet, chan)
+
+
+class _CostPairing(PairingPolicy):
+    cost_driven = True
+
+    def _select(self, cost: np.ndarray) -> Pairs:
+        raise NotImplementedError
+
+    def pair(self, fleet, chan, ctx):
+        if ctx.workload is None or ctx.num_layers <= 0:
+            raise ValueError(f"{self.spec} pairing needs num_layers and a "
+                             f"workload model in the PairingContext")
+        cost, _ = pair_cost_matrix(
+            fleet, chan, ctx.num_layers, ctx.workload,
+            split_policy=ctx.split_policy, alpha=ctx.alpha, beta=ctx.beta,
+            rates=ctx.rates, rel_data=ctx.rel_data)
+        return self._select(cost)
+
+
+class GreedyCostPairing(_CostPairing):
+    """Min-cost greedy on the true-latency cost matrix."""
+
+    spec = "greedy-cost"
+
+    def _select(self, cost):
+        return min_cost_greedy_pairing(cost)
+
+
+class BlossomCostPairing(_CostPairing):
+    """Exact min-cost blossom matching on the cost matrix — the bound."""
+
+    spec = "blossom-cost"
+
+    def _select(self, cost):
+        return min_cost_blossom_pairing(cost)
+
+
+_POLICY_CLASSES = {cls.spec: cls for cls in
+                   (PaperWeightPairing, RandomPairing, LocationPairing,
+                    ComputePairing, GreedyCostPairing, BlossomCostPairing)}
+
+
+def get_pairing_policy(spec) -> PairingPolicy:
+    """Resolve a pairing-policy spec (``PAIRING_SPECS`` or a Table-I
+    mechanism alias) to a PairingPolicy; instances pass through.  The ONE
+    resolver behind ``RoundConfig`` validation, the launchers and the
+    benchmarks — unknown specs raise here, at config time."""
+    if isinstance(spec, PairingPolicy):
+        return spec
+    name = MECHANISM_ALIASES.get(spec, spec)
+    cls = _POLICY_CLASSES.get(name)
+    if cls is None:
+        raise ValueError(f"unknown pairing policy {spec!r}; expected one "
+                         f"of {PAIRING_SPECS} (or Table-I mechanism names "
+                         f"{TABLE1_MECHANISMS})")
+    return cls()
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,7 @@ the sampling half; ``pairing`` re-runs on the sampled cohort each round).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional, Tuple
 
 import numpy as np
@@ -11,7 +12,9 @@ import numpy as np
 from repro.core import latency, pairing, splitting
 from repro.core.latency import ChannelModel, ClientFleet
 
-# (sub_fleet, chan) -> pairs within the sub-fleet's local indexing
+# (sub_fleet, chan) -> pairs within the sub-fleet's local indexing; a
+# ``pairing.PairingPolicy`` instance is also accepted wherever a PairFn is
+# (paired with an optional ``pairing.PairingContext``).
 PairFn = Callable[[ClientFleet, ChannelModel], pairing.Pairs]
 
 
@@ -23,21 +26,43 @@ def sample_cohort(n_clients: int, fraction: float, rng: np.random.Generator
 
 
 def cohort_partner(fleet: ClientFleet, chan: ChannelModel,
-                   cohort: np.ndarray, pair_fn: Optional[PairFn] = None
+                   cohort: np.ndarray, pair_fn: Optional[PairFn] = None,
+                   ctx: Optional[pairing.PairingContext] = None
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """Pair within a cohort; non-participants map to themselves (they
     simply don't train this round).
 
-    ``pair_fn`` selects the pairing mechanism on the cohort sub-fleet
-    (default: the paper's greedy ``fedpairing_pairing``; the Table-I
-    baselines — random / location / compute — slot in here).
+    ``pair_fn`` selects the pairing mechanism on the cohort sub-fleet —
+    either a bare ``(sub_fleet, chan) -> pairs`` callable (default: the
+    paper's greedy ``fedpairing_pairing``) or a ``pairing.PairingPolicy``
+    from the registry, consulted with ``ctx`` (the cost-driven policies
+    need the workload/split-policy context; the Table-I baselines ignore
+    it beyond the random seed).
 
     Returns (partner (N,), active_mask (N,)); split lengths are the
     planning layer's concern (``planning.build_round_plan``).
     """
     n = fleet.n
     sub = latency.subfleet(fleet, cohort)
-    sub_pairs = (pair_fn or pairing.fedpairing_pairing)(sub, chan)
+    if isinstance(pair_fn, pairing.PairingPolicy):
+        ctx = ctx or pairing.PairingContext()
+        if pair_fn.cost_driven:
+            # price cohort edges with FULL-fleet-normalized dataset
+            # weights (and the full fleet's link rates), matching every
+            # plan objective's normalization — sub-fleet-normalized
+            # weights would inflate the comm term and break the
+            # "min-cost matching == min-objective plan" contract
+            idx = np.asarray(cohort)
+            if ctx.rel_data is None:
+                rel = np.asarray(fleet.data_sizes, np.float64)
+                ctx = dataclasses.replace(ctx,
+                                          rel_data=(rel / rel.sum())[idx])
+            if ctx.rates is None and chan is not None:
+                ctx = dataclasses.replace(
+                    ctx, rates=fleet.rates(chan)[np.ix_(idx, idx)])
+        sub_pairs = pair_fn.pair(sub, chan, ctx)
+    else:
+        sub_pairs = (pair_fn or pairing.fedpairing_pairing)(sub, chan)
     pairing.validate_matching(sub_pairs, sub.n)   # reject bad pair_fns
     partner = np.arange(n)
     for a, b in sub_pairs:

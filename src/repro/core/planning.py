@@ -166,6 +166,15 @@ class SplitPolicy:
     def pair_cut(self, ctx: PairContext) -> int:
         raise NotImplementedError
 
+    def pair_cut_cost(self, ctx: PairContext) -> Tuple[int, float]:
+        """(cut, Eq. (3) cost at that cut) in one call — what the joint
+        cost-matrix pricing consumes; search policies override it so the
+        search is not repeated to read off the winning cost."""
+        li = self.pair_cut(ctx)
+        return li, pair_cost(ctx.f_i, ctx.f_j, ctx.rate_bps, ctx.workload,
+                             li, ctx.num_layers - li, ctx.d_i, ctx.d_j,
+                             ctx.alpha, ctx.beta)
+
 
 class PaperSplitPolicy(SplitPolicy):
     """The paper's compute-ratio rule (Eq. 6)."""
@@ -200,6 +209,9 @@ class LatencyOptSplitPolicy(SplitPolicy):
     spec = "latency-opt"
 
     def pair_cut(self, ctx: PairContext) -> int:
+        return self.pair_cut_cost(ctx)[0]
+
+    def pair_cut_cost(self, ctx: PairContext) -> Tuple[int, float]:
         if ctx.workload is None:
             raise ValueError("latency-opt needs a workload model "
                              "(pass workload= to the plan builder)")
@@ -208,7 +220,8 @@ class LatencyOptSplitPolicy(SplitPolicy):
                            cut, W - cut, ctx.d_i, ctx.d_j, ctx.alpha,
                            ctx.beta)
                  for cut in range(1, W)]
-        return 1 + int(np.argmin(costs))
+        k = int(np.argmin(costs))
+        return 1 + k, costs[k]
 
 
 def get_policy(spec) -> SplitPolicy:
@@ -330,6 +343,12 @@ class RoundPlan:
     server_cut: int
     granularity: int = 1
     objective: Optional[float] = None
+    # provenance of the matching (a PairingPolicy spec; "n/a" for the
+    # baseline plans) and, for jointly built plans, the sequential
+    # (pair-then-cut) reference objective the joint search is asserted
+    # against — neither is part of cache_key (same schedule, same compile).
+    pair_policy: str = "paper-weight"
+    seq_objective: Optional[float] = None
 
     @property
     def n(self) -> int:
@@ -397,6 +416,36 @@ def _active_pairs(partner: np.ndarray,
                         if active[i] and partner[i] > i))
 
 
+def _pairs_objective(pairs, lengths, cpu_hz, rates, rel, workload,
+                     alpha: float, beta: float) -> float:
+    """Eq. (4): the weighted sum of per-pair Eq. (3) costs at the GIVEN
+    lengths — the one arithmetic shared by the plan builders and the
+    adaptive re-pricing of a kept plan on a drifted channel."""
+    total = 0.0
+    for i, j in pairs:
+        rate = float(rates[i, j]) if rates is not None else float("inf")
+        total += pair_cost(
+            float(cpu_hz[i]), float(cpu_hz[j]), rate, workload,
+            int(lengths[i]), int(lengths[j]),
+            float(rel[i]), float(rel[j]), alpha, beta)
+    return total
+
+
+def plan_objective(plan: "RoundPlan", fleet, chan, workload,
+                   alpha: float = 1.0, beta: float = 1.0,
+                   rates: Optional[np.ndarray] = None) -> float:
+    """Re-price an existing plan's SCHEDULE (pairs + lengths, unchanged)
+    on a fleet/channel realization — what the adaptive round driver
+    compares against ``replan_threshold`` to decide whether the channel
+    drift is worth a re-matching (and a recompile)."""
+    if rates is None and chan is not None:
+        rates = fleet.rates(chan)
+    rel = np.asarray(fleet.data_sizes, np.float64)
+    rel = rel / rel.sum()
+    return _pairs_objective(plan.pairs, plan.lengths_array(), fleet.cpu_hz,
+                            rates, rel, workload, alpha, beta)
+
+
 def build_round_plan(fleet, chan, partner, num_layers: int, *,
                      policy="paper", workload=None,
                      active: Optional[np.ndarray] = None,
@@ -425,13 +474,8 @@ def build_round_plan(fleet, chan, partner, num_layers: int, *,
     pairs = _active_pairs(partner, act)
     objective = None
     if workload is not None:
-        objective = 0.0
-        for i, j in pairs:
-            rate = float(rates[i, j]) if rates is not None else float("inf")
-            objective += pair_cost(
-                float(fleet.cpu_hz[i]), float(fleet.cpu_hz[j]), rate,
-                workload, int(lengths[i]), int(lengths[j]),
-                float(rel[i]), float(rel[j]), alpha, beta)
+        objective = _pairs_objective(pairs, lengths, fleet.cpu_hz, rates,
+                                     rel, workload, alpha, beta)
     return RoundPlan(
         kind="paired", policy=pol.spec, num_layers=num_layers,
         partner=tuple(int(p) for p in partner),
@@ -440,6 +484,77 @@ def build_round_plan(fleet, chan, partner, num_layers: int, *,
         server_cut=resolve_server_cut(server_cut, num_layers),
         granularity=max(1, int(granularity)),
         objective=objective).validate()
+
+
+def build_joint_plan(fleet, chan, num_layers: int, *,
+                     pair_policy="greedy-cost", split_policy="latency-opt",
+                     workload=None, active: Optional[np.ndarray] = None,
+                     granularity: int = 1, server_cut: int = 0,
+                     alpha: float = 1.0, beta: float = 1.0,
+                     rates: Optional[np.ndarray] = None,
+                     seed: int = 0) -> RoundPlan:
+    """Solve Problem 1 jointly: pairing AND cuts chosen together.
+
+    The pairing policy sees the true Eq. (3) cost of every candidate edge
+    at its ``split_policy``-optimal cut (``pairing.pair_cost_matrix``);
+    the winning matching is then cut by the same policy, so the plan's
+    Eq. (4) objective equals the matrix sum over the selected edges.  The
+    returned plan is the BETTER of the joint candidate and the sequential
+    (paper-weight pairing, then cuts) reference — hence its objective is
+    <= the sequential ``build_round_plan``'s **by construction**, even for
+    selectors without an optimality guarantee (the ascending greedy).  The
+    reference objective is recorded as ``seq_objective``.
+
+    Cohort sub-problems (``active``) are priced with FULL-fleet-normalized
+    dataset weights so the joint objective is exactly comparable to the
+    sequential plan built over the same cohort.  ``seed`` feeds the
+    ``random`` pairing policy (the driver draws it from its rng).
+    """
+    from repro.core import latency as latency_mod
+    from repro.core import pairing as pairing_mod
+
+    if workload is None:
+        raise ValueError("build_joint_plan needs a workload model (joint "
+                         "pairing prices edges by their Eq. (3) cost)")
+    n = fleet.n
+    act = np.ones(n, bool) if active is None else np.asarray(active, bool)
+    cohort = np.flatnonzero(act)
+    if rates is None and chan is not None:
+        rates = fleet.rates(chan)
+    rel = np.asarray(fleet.data_sizes, np.float64)
+    rel = rel / rel.sum()
+    sub = latency_mod.subfleet(fleet, cohort)
+    pol = pairing_mod.get_pairing_policy(pair_policy)
+    ctx = pairing_mod.PairingContext(
+        num_layers=num_layers, workload=workload, split_policy=split_policy,
+        alpha=alpha, beta=beta, seed=seed,
+        rates=(rates[np.ix_(cohort, cohort)] if rates is not None else None),
+        rel_data=rel[cohort])
+
+    def plan_for(sub_pairs):
+        partner = np.arange(n)
+        for a, b in sub_pairs:
+            ga, gb = int(cohort[a]), int(cohort[b])
+            partner[ga], partner[gb] = gb, ga
+        return build_round_plan(
+            fleet, chan, partner, num_layers, policy=split_policy,
+            workload=workload, active=act, granularity=granularity,
+            server_cut=server_cut, alpha=alpha, beta=beta, rates=rates)
+
+    seq_plan = plan_for(pairing_mod.fedpairing_pairing(sub, chan))
+    if pol.spec == "paper-weight":
+        candidate = seq_plan
+    else:
+        candidate = plan_for(pol.pair(sub, chan, ctx))
+    # pair_policy records the provenance of the matching actually chosen:
+    # when the candidate loses to the sequential reference, the executed
+    # pairing IS the paper-weight greedy's.
+    if candidate.objective <= seq_plan.objective:
+        chosen, spec = candidate, pol.spec
+    else:
+        chosen, spec = seq_plan, "paper-weight"
+    return dataclasses.replace(chosen, pair_policy=spec,
+                               seq_objective=seq_plan.objective)
 
 
 def baseline_plan(n: int, num_layers: int, *,
@@ -459,4 +574,4 @@ def baseline_plan(n: int, num_layers: int, *,
         policy="n/a", num_layers=num_layers,
         partner=tuple(range(n)), lengths=tuple(int(l) for l in lengths),
         active=tuple(bool(a) for a in act), pairs=(), server_cut=cut,
-        granularity=1, objective=None).validate()
+        granularity=1, objective=None, pair_policy="n/a").validate()

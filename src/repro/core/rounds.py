@@ -7,11 +7,19 @@ DESIGN.md §5):
 1. realizes the time-varying channel (``latency.drift_fleet`` position
    random walk; skipped without an rng draw when ``drift_sigma_m <= 0``),
 2. samples the participating cohort (``participation.sample_cohort``),
-3. re-runs pairing on the cohort with the current channel realization
-   (``participation.cohort_partner``) and builds the round's
-   ``planning.RoundPlan`` — the single source of truth for split lengths
+3. plans the round: under the configured ``pair_policy`` (a
+   ``pairing.PairingPolicy`` spec; Table-I mechanisms are aliases) the
+   cohort is re-matched on the current channel realization — cost-driven
+   policies go through ``planning.build_joint_plan`` (pairing AND cuts
+   chosen together), the weight heuristics through
+   ``participation.cohort_partner`` — yielding the round's
+   ``planning.RoundPlan``: the single source of truth for split lengths
    (under ``RoundConfig.split_policy``), envelopes, baseline cuts and the
-   Eq. (4) objective,
+   Eq. (4) objective.  With ``replan_threshold > 0`` the matching is
+   ADAPTIVE: the previous plan is re-priced on the drifted channel
+   (``planning.plan_objective``) and kept — same pairing, same compiled
+   steps — unless its objective moved by more than the threshold
+   (relative) or the cohort changed (DESIGN.md §7),
 4. executes ``batches_per_round`` fed steps on one of the three FedPairing
    engines — vmapped / bucketed / dist — or one of the paper's baselines
    (vanilla FL / vanilla SL / SplitFed from ``core.baselines``),
@@ -57,15 +65,11 @@ from repro.core.planning import RoundPlan
 ALGORITHMS = ("fedpairing", "fl", "sl", "splitfed")
 ENGINES = ("vmapped", "bucketed", "dist")
 
-# Table-I pairing mechanisms selectable per round (cohort sub-fleet -> pairs).
-# "random" is resolved per round by the driver (it must draw its seed from
-# the driver rng to honor the determinism contract).
-PAIRINGS: Dict[str, participation.PairFn] = {
-    "fedpairing": pairing.fedpairing_pairing,
-    "random": None,                       # placeholder; see _round_pair_fn
-    "location": pairing.location_pairing,
-    "compute": pairing.compute_pairing,
-}
+# Table-I pairing mechanisms selectable per round.  ALL of them (including
+# "random", whose per-round seed comes from the driver rng) resolve through
+# the ONE registry resolver ``pairing.get_pairing_policy`` — an unknown
+# mechanism or policy raises at RoundConfig construction, not mid-round.
+PAIRINGS: Tuple[str, ...] = pairing.TABLE1_MECHANISMS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,7 +83,13 @@ class RoundConfig:
     participation: float = 1.0          # cohort fraction per round
     drift_sigma_m: float = 0.0          # channel realization: position walk
     pair_mechanism: str = "fedpairing"  # Table-I mechanisms (PAIRINGS)
+    pair_policy: str = ""               # pairing.PAIRING_SPECS; "" -> the
+                                        # Table-I mechanism above
     split_policy: str = "paper"         # paper | fixed:K | latency-opt
+    replan_threshold: float = 0.0       # adaptive re-matching: keep the
+                                        # previous plan while its re-priced
+                                        # objective moved less than this
+                                        # (relative); 0 -> re-plan each round
     lr: float = 0.05
     aggregation: str = "paper"          # paper | fedavg (DESIGN.md §3)
     overlap_boost: bool = True
@@ -97,11 +107,26 @@ class RoundConfig:
                              f"got {self.engine!r}")
         if self.pair_mechanism not in PAIRINGS:
             raise ValueError(f"pair_mechanism must be one of "
-                             f"{tuple(PAIRINGS)}, got {self.pair_mechanism!r}")
+                             f"{PAIRINGS}, got {self.pair_mechanism!r}")
+        if self.pair_policy and self.pair_mechanism != "fedpairing":
+            raise ValueError(
+                f"pair_policy={self.pair_policy!r} and pair_mechanism="
+                f"{self.pair_mechanism!r} are one knob — set at most one "
+                f"(pair_policy generalizes the Table-I mechanisms)")
+        pairing.get_pairing_policy(self.resolved_pair_policy)
         planning.get_policy(self.split_policy)   # raises on unknown spec
+        if self.replan_threshold < 0:
+            raise ValueError(f"replan_threshold must be >= 0, got "
+                             f"{self.replan_threshold}")
         if self.aggregation not in ("paper", "fedavg"):
             raise ValueError(f"aggregation must be 'paper' or 'fedavg', "
                              f"got {self.aggregation!r}")
+
+    @property
+    def resolved_pair_policy(self) -> str:
+        """The effective PairingPolicy spec (``pair_policy`` wins; the
+        Table-I ``pair_mechanism`` is the backwards-compatible alias)."""
+        return self.pair_policy or self.pair_mechanism
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +141,9 @@ class RoundRecord:
     sim_round_s: float                   # Eq. (3) straggler-bounded
     sim_total_s: float                   # accumulated simulated wall-clock
     cached_steps: int                    # engine step-cache size (compiles)
+    objective: Optional[float] = None    # Eq. (4) of the executed plan
+    replanned: bool = True               # False -> adaptive keep (no
+                                         # re-matching, cached steps reused)
 
 
 @dataclasses.dataclass
@@ -129,6 +157,11 @@ class RoundState:
     rng: np.random.Generator
     sim_time_s: float
     history: List[RoundRecord]
+    plan: Optional[RoundPlan] = None     # adaptive anchor: the last plan a
+                                         # re-matching produced, with its
+                                         # at-adoption objective (the drift
+                                         # reference replan_threshold
+                                         # compares against)
 
 
 # ---------------------------------------------------------------------------
@@ -327,37 +360,31 @@ class RoundDriver:
         rng = copy.deepcopy(state.rng)
         fleet = latency.drift_fleet(state.fleet, rng, rc.drift_sigma_m)
         cohort = participation.sample_cohort(self.n, rc.participation, rng)
-        pair_fn = self._round_pair_fn(rng)
+        # pairing seed: drawn every round for every algorithm (in fixed
+        # order, after cohort sampling) so the rng stream stays
+        # algorithm- and mechanism-invariant; only 'random' consumes it.
+        pair_seed = int(rng.integers(2 ** 31))
         active = np.zeros(self.n, bool)
         active[cohort] = True
         run = {"fedpairing": self._fedpairing_round, "fl": self._fl_round,
                "sl": self._sl_round, "splitfed": self._splitfed_round}
-        record, client, server = run[rc.algorithm](state, fleet, cohort,
-                                                  active, pair_fn)
+        record, client, server, plan = run[rc.algorithm](
+            state, fleet, cohort, active, pair_seed)
         return dataclasses.replace(
             state, round=state.round + 1, fleet=fleet, client_params=client,
             server_params=server, rng=rng, sim_time_s=record.sim_total_s,
-            history=state.history + [record])
-
-    def _round_pair_fn(self, rng: np.random.Generator) -> participation.PairFn:
-        """Per-round pairing mechanism.  'random' draws its seed from the
-        driver rng (in fixed order: after cohort sampling), so it varies
-        per round/seed like every other source of randomness; the draw
-        happens for every algorithm to keep the rng stream
-        algorithm-invariant up to the training step."""
-        seed = int(rng.integers(2 ** 31))
-        if self.rc.pair_mechanism == "random":
-            return lambda sub, chan: pairing.random_pairing(sub.n, seed=seed)
-        return PAIRINGS[self.rc.pair_mechanism]
+            history=state.history + [record], plan=plan)
 
     def _record(self, state, cohort, pairs, lengths, mean_loss, round_s,
-                cached) -> RoundRecord:
+                cached, objective=None, replanned=True) -> RoundRecord:
         return RoundRecord(
             round=state.round, cohort=tuple(int(c) for c in cohort),
             pairs=pairs, lengths=tuple(int(l) for l in lengths),
             mean_loss=float(mean_loss), sim_round_s=float(round_s),
             sim_total_s=float(state.sim_time_s + round_s),
-            cached_steps=cached)
+            cached_steps=cached,
+            objective=None if objective is None else float(objective),
+            replanned=bool(replanned))
 
     def round_plan(self, fleet: ClientFleet, partner: np.ndarray,
                    active: np.ndarray, num_layers: Optional[int] = None
@@ -385,11 +412,56 @@ class RoundDriver:
         return self.round_plan(fleet, partner, active,
                                num_layers=self.workload.num_layers)
 
-    def _fedpairing_round(self, state, fleet, cohort, active, pair_fn):
+    def _build_plan(self, fleet, cohort, active, pair_seed: int) -> RoundPlan:
+        """One fresh re-matching under the configured pairing policy.
+        Cost-driven policies take the joint path (pairing x cut chosen
+        together, ``planning.build_joint_plan``); the weight heuristics
+        keep the historical cohort_partner -> build_round_plan path
+        bit-identically."""
         rc = self.rc
+        policy = pairing.get_pairing_policy(rc.resolved_pair_policy)
+        if policy.cost_driven:
+            return planning.build_joint_plan(
+                fleet, self.chan, self.cfg.num_layers, pair_policy=policy,
+                split_policy=rc.split_policy, workload=self.workload,
+                active=active, granularity=rc.bucket_granularity,
+                server_cut=rc.server_cut, seed=pair_seed)
+        ctx = pairing.PairingContext(
+            num_layers=self.cfg.num_layers, workload=self.workload,
+            split_policy=rc.split_policy, seed=pair_seed)
         partner, _ = participation.cohort_partner(fleet, self.chan, cohort,
-                                                  pair_fn)
-        plan = self.round_plan(fleet, partner, active)
+                                                  policy, ctx=ctx)
+        return self.round_plan(fleet, partner, active)
+
+    def _adaptive_plan(self, state: RoundState, fleet, cohort, active,
+                       pair_seed: int) -> Tuple[RoundPlan, RoundPlan, bool]:
+        """(executed plan, anchor plan, replanned).  With
+        ``replan_threshold > 0`` the previous anchor plan is re-priced on
+        the drifted channel (``planning.plan_objective``) and KEPT — same
+        pairing, same lengths, same ``cache_key`` so the engines' compiled
+        steps are reused — unless the cohort changed or the objective
+        moved by more than the (relative) threshold.  The anchor keeps its
+        at-adoption objective as the drift reference; the executed plan
+        carries the re-priced objective so the simulated clock and the
+        trace follow the adapted plan."""
+        rc = self.rc
+        prev = state.plan
+        if (rc.replan_threshold > 0 and prev is not None
+                and prev.active == tuple(bool(a) for a in active)):
+            new_obj = planning.plan_objective(prev, fleet, self.chan,
+                                              self.workload)
+            if abs(new_obj - prev.objective) \
+                    <= rc.replan_threshold * abs(prev.objective):
+                kept = dataclasses.replace(prev, objective=new_obj)
+                return kept, prev, False
+        plan = self._build_plan(fleet, cohort, active, pair_seed)
+        return plan, plan, True
+
+    def _fedpairing_round(self, state, fleet, cohort, active, pair_seed):
+        rc = self.rc
+        plan, anchor, replanned = self._adaptive_plan(state, fleet, cohort,
+                                                      active, pair_seed)
+        partner = plan.partner_array()
         agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
         params = state.client_params
         losses = []
@@ -407,10 +479,11 @@ class RoundDriver:
             self._latency_plan(fleet, partner, active, plan), fleet,
             self.chan, self.workload)
         rec = self._record(state, cohort, plan.pairs, plan.lengths,
-                           mean_loss, round_s, self._engine.cached_steps)
-        return rec, params, None
+                           mean_loss, round_s, self._engine.cached_steps,
+                           objective=plan.objective, replanned=replanned)
+        return rec, params, None, anchor
 
-    def _fl_round(self, state, fleet, cohort, active, pair_fn):
+    def _fl_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
         if self._baseline_step is None:
             self._baseline_step = baselines.make_fl_step(self.loss_fn,
@@ -432,9 +505,9 @@ class RoundDriver:
         round_s = latency.round_time_vanilla_fl(sub, self.chan, self.workload)
         rec = self._record(state, cohort, (), plan.lengths,
                            _mean_active_loss(losses, active), round_s, 1)
-        return rec, params, None
+        return rec, params, None, state.plan
 
-    def _sl_round(self, state, fleet, cohort, active, pair_fn):
+    def _sl_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
         plan = planning.baseline_plan(self.n, self.cfg.num_layers,
                                       active=active, server_cut=rc.server_cut)
@@ -457,9 +530,9 @@ class RoundDriver:
                                                 sequential=True)
         rec = self._record(state, cohort, (), plan.lengths,
                            float(np.mean(losses)), round_s, 1)
-        return rec, client, server
+        return rec, client, server, state.plan
 
-    def _splitfed_round(self, state, fleet, cohort, active, pair_fn):
+    def _splitfed_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
         plan = planning.baseline_plan(self.n, self.cfg.num_layers,
                                       active=active, server_cut=rc.server_cut)
@@ -488,7 +561,7 @@ class RoundDriver:
         rec = self._record(state, cohort, (), plan.lengths,
                            float(np.mean([l.mean() for l in losses])),
                            round_s, 1)
-        return rec, client, server
+        return rec, client, server, state.plan
 
 
 def _mean_active_loss(losses: Sequence[np.ndarray],

@@ -33,8 +33,8 @@ import argparse
 import time
 
 from repro.configs import ARCH_IDS, get_smoke_config
-from repro.core import latency, pairing, planning, rounds
-from repro.core.latency import ChannelModel, WorkloadModel
+from repro.core import latency, planning, rounds
+from repro.core.latency import ChannelModel
 
 
 def main() -> None:
@@ -47,9 +47,19 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--engine", choices=rounds.ENGINES, default="vmapped")
+    ap.add_argument("--pair-policy", default="", metavar="POLICY",
+                    help="pairing policy: paper-weight | random | location "
+                         "| compute | greedy-cost | blossom-cost (the cost "
+                         "policies price every candidate pair at its "
+                         "policy-optimal cut — joint pairing x split)")
     ap.add_argument("--split-policy", default="paper", metavar="POLICY",
                     help="per-pair split-point policy: "
                          "paper | fixed:K | latency-opt")
+    ap.add_argument("--replan-threshold", type=float, default=0.0,
+                    metavar="REL",
+                    help="keep the previous pairing (and compiled steps) "
+                         "while drift moved its objective less than this "
+                         "relative amount (0 = re-pair every round)")
     ap.add_argument("--bucket-granularity", type=int, default=1,
                     help="round split lengths to multiples of this when "
                          "bucketing (1 = exact; larger = fewer compiles)")
@@ -67,29 +77,35 @@ def main() -> None:
     n = args.clients
     fleet = latency.make_fleet(n=n, seed=args.seed)
     chan = ChannelModel()
-    w = WorkloadModel(num_layers=cfg.num_layers,
-                      batches_per_epoch=args.batches_per_round,
-                      local_epochs=1)
-    # round-0 plan preview on the initial channel realization
-    pairs = pairing.fedpairing_pairing(fleet, chan)
-    plan0 = planning.build_round_plan(
-        fleet, chan, planning.partner_from_pairs(pairs, n), cfg.num_layers,
-        policy=args.split_policy, workload=w)
-    print(f"[fed] {n} clients, initial pairs {pairs}")
-    print(f"[fed] split policy {plan0.policy}: lengths {list(plan0.lengths)} "
-          f"objective {plan0.objective:.1f}")
-    print(f"[fed] modeled round time: "
-          f"{latency.round_time_plan(plan0, fleet, chan, w):.1f}s "
-          f"(vanilla FL {latency.round_time_vanilla_fl(fleet, chan, w):.1f}s)")
-
+    # per-cut boundary payloads from the REAL architecture (residual
+    # stream bytes per split depth), not the flat ResNet18 constant
+    w = latency.workload_from_arch(cfg, seq_len=args.seq,
+                                   batch_size=args.batch,
+                                   batches_per_epoch=args.batches_per_round,
+                                   local_epochs=1)
     rc = rounds.RoundConfig(
         algorithm="fedpairing", engine=args.engine, rounds=args.rounds,
-        split_policy=args.split_policy,
+        pair_policy=args.pair_policy, split_policy=args.split_policy,
+        replan_threshold=args.replan_threshold,
         batches_per_round=args.batches_per_round,
         participation=args.participation, drift_sigma_m=args.drift,
         lr=args.lr, aggregation=args.aggregation,
         overlap_boost=not args.no_overlap_boost,
         bucket_granularity=args.bucket_granularity, seed=args.seed)
+    # round-0 plan preview on the initial channel realization: the joint
+    # plan (pairing x cut together) vs the sequential pair-then-cut plan
+    plan0 = planning.build_joint_plan(
+        fleet, chan, cfg.num_layers, pair_policy=rc.resolved_pair_policy,
+        split_policy=args.split_policy, workload=w, seed=args.seed)
+    print(f"[fed] {n} clients, initial pairs {list(plan0.pairs)} "
+          f"(pair policy {plan0.pair_policy})")
+    print(f"[fed] split policy {plan0.policy}: lengths {list(plan0.lengths)} "
+          f"objective {plan0.objective:.1f} "
+          f"(sequential pair-then-cut {plan0.seq_objective:.1f})")
+    print(f"[fed] modeled round time: "
+          f"{latency.round_time_plan(plan0, fleet, chan, w):.1f}s "
+          f"(vanilla FL {latency.round_time_vanilla_fl(fleet, chan, w):.1f}s)")
+
     driver = rounds.RoundDriver(
         cfg, rc, fleet, chan=chan, workload=w,
         batch_fn=rounds.make_lm_batch_fn(cfg, n, args.batch, args.seq,
@@ -104,6 +120,7 @@ def main() -> None:
               f"mean client loss {r.mean_loss:.4f} "
               f"sim {r.sim_round_s:.1f}s "
               f"({r.cached_steps} compiled steps, "
+              f"{'replanned' if r.replanned else 'kept plan'}, "
               f"{time.time() - t0:.1f}s wall)")
     print(f"[fed] total simulated wall-clock: {state.sim_time_s:.1f}s")
 

@@ -33,9 +33,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--pairing", choices=tuple(rounds.PAIRINGS),
                     default="fedpairing",
                     help="Table-I pairing mechanism (fedpairing only)")
+    ap.add_argument("--pair-policy", default="", metavar="POLICY",
+                    help="pairing policy (generalizes --pairing): "
+                         "paper-weight | random | location | compute | "
+                         "greedy-cost | blossom-cost (cost policies solve "
+                         "pairing x cut jointly)")
     ap.add_argument("--split-policy", default="paper", metavar="POLICY",
                     help="per-pair split-point policy: "
                          "paper | fixed:K | latency-opt")
+    ap.add_argument("--replan-threshold", type=float, default=0.0,
+                    metavar="REL",
+                    help="adaptive re-planning: keep the previous round's "
+                         "pairing (and its compiled steps) while channel "
+                         "drift moved its objective less than this relative "
+                         "amount (0 = re-pair every round)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--batches-per-round", type=int, default=4)
@@ -63,7 +74,9 @@ def run_sim(args) -> rounds.RoundState:
     cfg = get_smoke_config(args.arch)
     rc = rounds.RoundConfig(
         algorithm=args.algorithm, engine=args.engine,
-        pair_mechanism=args.pairing, split_policy=args.split_policy,
+        pair_mechanism=args.pairing, pair_policy=args.pair_policy,
+        split_policy=args.split_policy,
+        replan_threshold=args.replan_threshold,
         rounds=args.rounds,
         batches_per_round=args.batches_per_round,
         participation=args.participation, drift_sigma_m=args.drift,
@@ -72,13 +85,19 @@ def run_sim(args) -> rounds.RoundState:
         bucket_granularity=args.bucket_granularity,
         server_cut=args.server_cut, seed=args.seed)
     fleet = latency.make_fleet(n=args.clients, seed=args.seed)
+    # latency accounting sees the REAL architecture's boundary payloads
+    # (per-cut residual-stream bytes) — what the cost-driven pairing
+    # policies price (ROADMAP item 3)
+    workload = latency.workload_from_arch(
+        cfg, seq_len=args.seq, batch_size=args.batch,
+        batches_per_epoch=args.batches_per_round, local_epochs=1)
     driver = rounds.RoundDriver(
-        cfg, rc, fleet, chan=ChannelModel(),
+        cfg, rc, fleet, chan=ChannelModel(), workload=workload,
         batch_fn=rounds.make_lm_batch_fn(cfg, args.clients, args.batch,
                                          args.seq, args.seed))
     print(f"[sim] {args.algorithm}/{args.engine}: {args.clients} clients, "
           f"W={cfg.num_layers}, participation={args.participation}, "
-          f"drift={args.drift}m")
+          f"drift={args.drift}m, pair_policy={rc.resolved_pair_policy}")
     state = driver.init_state()
     for _ in range(args.rounds):
         t0 = time.time()
@@ -87,7 +106,9 @@ def run_sim(args) -> rounds.RoundState:
         print(f"  round {r.round}: cohort={list(r.cohort)} "
               f"pairs={list(r.pairs)} loss={r.mean_loss:.4f} "
               f"sim={r.sim_round_s:.1f}s (total {r.sim_total_s:.1f}s, "
-              f"{r.cached_steps} compiled steps, {time.time()-t0:.1f}s wall)")
+              f"{r.cached_steps} compiled steps, "
+              f"{'replanned' if r.replanned else 'kept plan'}, "
+              f"{time.time()-t0:.1f}s wall)")
     print(f"[sim] simulated wall-clock for {args.rounds} rounds: "
           f"{state.sim_time_s:.1f}s")
     if args.json:

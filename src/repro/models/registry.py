@@ -300,6 +300,52 @@ def make_batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# split-boundary payloads (feeds the latency model's per-cut profiles)
+# ---------------------------------------------------------------------------
+
+def boundary_elements(cfg: ArchConfig, cut: int, seq_len: int) -> int:
+    """Per-SAMPLE element count of the activation crossing the split
+    boundary at depth ``cut`` (between block cut-1 and block cut).
+
+    This is the residual stream the FedPairing handoff ships: the hidden
+    states every block family carries are (S_eff, d_model) —
+
+    * VLM prepends ``frontend_tokens`` patch embeddings to the text
+      sequence, so the stream is wider than the token batch,
+    * enc-dec decoders additionally need the encoder memory
+      (encoder_seq_len, d_model) on the partner side for cross-attention
+      (and its gradient travels back), so it rides the boundary too,
+    * dense / MoE / SSM / hybrid streams are exactly (seq_len, d_model)
+      (MoE expert routing and Mamba2 state expansion stay *inside* a
+      block — the boundary tensor is the residual stream).
+    """
+    if not 1 <= cut <= cfg.num_layers - 1:
+        raise ValueError(f"cut {cut} outside [1, {cfg.num_layers - 1}]")
+    s_eff = seq_len
+    if cfg.family == ArchFamily.VLM:
+        s_eff += cfg.frontend_tokens
+    if cfg.is_encdec:
+        s_eff += cfg.encoder_seq_len
+    return s_eff * cfg.d_model
+
+
+def boundary_profile(cfg: ArchConfig, seq_len: int,
+                     ) -> Tuple[Tuple[float, ...], Tuple[float, ...]]:
+    """Per-cut (feature, gradient) boundary payloads in BYTES per sample,
+    indexed ``cut - 1`` for cuts 1..W-1 — the real-architecture
+    replacement for ``WorkloadModel``'s flat ResNet18 constant (the shape
+    ``planning.boundary_bytes`` consumes).  Features travel in the
+    activation dtype; the gradient w.r.t. the boundary comes back from the
+    fp32 loss in the compute dtype as well (our engines cast the stream),
+    so both profiles use ``cfg.dtype``'s width.
+    """
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    feat = tuple(float(boundary_elements(cfg, cut, seq_len) * itemsize)
+                 for cut in range(1, cfg.num_layers))
+    return feat, feat
+
+
+# ---------------------------------------------------------------------------
 # param counting
 # ---------------------------------------------------------------------------
 

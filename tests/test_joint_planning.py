@@ -1,0 +1,318 @@
+"""Joint pairing x split co-optimization — PairingPolicy registry,
+cost-matrix pricing and ``planning.build_joint_plan`` invariants.
+
+Pins down the ISSUE-4 contract (DESIGN.md §7):
+
+* every pairing policy returns a valid matching, perfect on even cohorts
+  (property-tested via ``repro.hypothesis_compat``),
+* the objective chain holds on random fleets:
+  joint (pairing x cut together)  <=  sequential (paper-weight pairing,
+  then policy cuts)  <=  paper-weight + paper-rule cuts,
+* the greedy-cost selector stays within the exact blossom bound
+  (blossom <= greedy on every fleet), and the joint search actually moves
+  the matching somewhere (it must not silently degenerate to sequential),
+* cost-matrix entries equal the Eq. (4) objective contribution of the
+  corresponding pair under the same split policy — what makes "min-cost
+  matching == min-objective plan" true,
+* ``plan_objective`` re-prices a kept schedule consistently (the adaptive
+  driver's drift trigger).
+"""
+import numpy as np
+import pytest
+
+from repro.core import latency, pairing, planning
+from repro.core.latency import ChannelModel, WorkloadModel
+from repro.hypothesis_compat import given, settings, strategies as st
+
+pytestmark = pytest.mark.pairing
+
+CHAN = ChannelModel()
+ALL_POLICIES = ("paper-weight", "random", "location", "compute",
+                "greedy-cost", "blossom-cost")
+
+
+def _ctx(w, split="latency-opt", seed=0):
+    return pairing.PairingContext(num_layers=w.num_layers, workload=w,
+                                  split_policy=split, seed=seed)
+
+
+class TestPairingPolicyRegistry:
+    def test_specs_resolve(self):
+        for spec in pairing.PAIRING_SPECS:
+            assert pairing.get_pairing_policy(spec).spec == spec
+
+    def test_table1_aliases_resolve(self):
+        assert pairing.get_pairing_policy("fedpairing").spec == "paper-weight"
+        for mech in pairing.TABLE1_MECHANISMS:
+            pairing.get_pairing_policy(mech)
+
+    def test_instances_pass_through(self):
+        pol = pairing.get_pairing_policy("greedy-cost")
+        assert pairing.get_pairing_policy(pol) is pol
+
+    def test_unknown_spec_raises(self):
+        with pytest.raises(ValueError, match="unknown pairing policy"):
+            pairing.get_pairing_policy("optimal")
+
+    def test_paper_weight_bit_identical_to_historical_greedy(self):
+        """The default policy IS the historical fedpairing_pairing."""
+        for seed in range(4):
+            fleet = latency.make_fleet(n=10, seed=seed)
+            w = WorkloadModel(num_layers=18)
+            pol = pairing.get_pairing_policy("paper-weight")
+            assert pol.pair(fleet, CHAN, _ctx(w)) \
+                == pairing.fedpairing_pairing(fleet, CHAN)
+
+    def test_cost_policy_without_workload_raises(self):
+        fleet = latency.make_fleet(n=4, seed=0)
+        with pytest.raises(ValueError, match="workload"):
+            pairing.get_pairing_policy("greedy-cost").pair(
+                fleet, CHAN, pairing.PairingContext())
+
+    @given(spec=st.sampled_from(ALL_POLICIES), n=st.integers(2, 13),
+           seed=st.integers(0, 40))
+    @settings(max_examples=40, deadline=None)
+    def test_every_policy_returns_perfect_matching_on_even_cohorts(
+            self, spec, n, seed):
+        """Matching validity for EVERY registered policy: involution-safe,
+        no vertex reuse, and perfect when the cohort is even."""
+        fleet = latency.make_fleet(n=n, seed=seed)
+        w = WorkloadModel(num_layers=12)
+        pairs = pairing.get_pairing_policy(spec).pair(
+            fleet, CHAN, _ctx(w, seed=seed))
+        pairing.validate_matching(pairs, n)
+        if n % 2 == 0:
+            assert len(pairs) == n // 2
+        else:
+            assert len(pairs) == n // 2   # exactly one left unpaired
+
+
+class TestCostMatrix:
+    def test_entries_match_pair_cost_at_policy_cut(self):
+        """cost[i, j] must equal the Eq. (4) contribution that pair would
+        add to a build_round_plan under the same split policy."""
+        fleet = latency.make_fleet(n=6, seed=1)
+        w = WorkloadModel(num_layers=18)
+        for sp in ("paper", "latency-opt", "fixed:4"):
+            cost, cuts = pairing.pair_cost_matrix(fleet, CHAN, 18, w,
+                                                  split_policy=sp)
+            for i in range(6):
+                for j in range(i + 1, 6):
+                    partner = np.arange(6)
+                    partner[i], partner[j] = j, i
+                    act = np.zeros(6, bool)
+                    act[[i, j]] = True
+                    plan = planning.build_round_plan(
+                        fleet, CHAN, partner, 18, policy=sp, workload=w,
+                        active=act)
+                    assert plan.lengths[i if i < j else j] == cuts[i, j]
+                    assert cost[i, j] == pytest.approx(plan.objective)
+
+    def test_symmetric_with_inf_diagonal(self):
+        fleet = latency.make_fleet(n=5, seed=0)
+        cost, _ = pairing.pair_cost_matrix(fleet, CHAN, 18,
+                                           WorkloadModel(num_layers=18))
+        assert np.all(np.isinf(np.diag(cost)))
+        assert np.allclose(cost, cost.T)
+
+    def test_requires_workload(self):
+        fleet = latency.make_fleet(n=4, seed=0)
+        with pytest.raises(ValueError, match="workload"):
+            pairing.pair_cost_matrix(fleet, CHAN, 18, None)
+
+    def test_two_opt_never_worsens(self):
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            n = int(rng.integers(2, 9)) * 2
+            cost = rng.uniform(1.0, 100.0, (n, n))
+            cost = (cost + cost.T) / 2
+            np.fill_diagonal(cost, np.inf)
+            start = pairing.random_pairing(n, seed=int(rng.integers(100)))
+            refined = pairing.two_opt_refine(start, cost)
+            pairing.validate_matching(refined, n)
+            assert sum(cost[p] for p in refined) \
+                <= sum(cost[p] for p in start) + 1e-9
+
+
+class TestJointPlan:
+    @given(n=st.integers(2, 12), seed=st.integers(0, 30),
+           sp=st.sampled_from(["paper", "latency-opt"]))
+    @settings(max_examples=30, deadline=None)
+    def test_objective_chain_joint_le_sequential_le_paper(self, n, seed,
+                                                          sp):
+        """joint <= sequential (same split policy) <= paper-weight +
+        paper cuts, on random fleets."""
+        fleet = latency.make_fleet(n=n, seed=seed)
+        w = WorkloadModel(num_layers=18)
+        joint = planning.build_joint_plan(fleet, CHAN, 18,
+                                          pair_policy="greedy-cost",
+                                          split_policy=sp, workload=w)
+        seq_partner = planning.partner_from_pairs(
+            pairing.fedpairing_pairing(fleet, CHAN), n)
+        seq = planning.build_round_plan(fleet, CHAN, seq_partner, 18,
+                                        policy=sp, workload=w)
+        paper = planning.build_round_plan(fleet, CHAN, seq_partner, 18,
+                                          policy="paper", workload=w)
+        assert joint.objective <= seq.objective + 1e-9
+        assert joint.seq_objective == pytest.approx(seq.objective)
+        assert seq.objective <= paper.objective + 1e-9
+
+    @given(n=st.integers(2, 10), seed=st.integers(0, 25))
+    @settings(max_examples=25, deadline=None)
+    def test_greedy_within_blossom_bound(self, n, seed):
+        """The exact min-cost blossom matching lower-bounds the greedy
+        selector's joint plan on every fleet."""
+        fleet = latency.make_fleet(n=n, seed=seed)
+        w = WorkloadModel(num_layers=18)
+        kw = dict(split_policy="latency-opt", workload=w)
+        greedy = planning.build_joint_plan(fleet, CHAN, 18,
+                                           pair_policy="greedy-cost", **kw)
+        blossom = planning.build_joint_plan(fleet, CHAN, 18,
+                                            pair_policy="blossom-cost", **kw)
+        assert blossom.objective <= greedy.objective + 1e-9
+
+    def test_joint_strictly_improves_somewhere(self):
+        """On the Table-I fleet scale the joint matching must actually
+        move pairs (and the objective) below sequential for SOME fleet —
+        otherwise the cost-driven layer silently degenerated."""
+        improved = []
+        for seed in range(6):
+            fleet = latency.make_fleet(n=20, seed=seed)
+            w = WorkloadModel(num_layers=18)
+            plan = planning.build_joint_plan(fleet, CHAN, 18,
+                                             pair_policy="greedy-cost",
+                                             split_policy="latency-opt",
+                                             workload=w)
+            improved.append(plan.objective < plan.seq_objective - 1e-9)
+        assert any(improved)
+
+    def test_pair_policy_provenance_recorded(self):
+        fleet = latency.make_fleet(n=6, seed=0)
+        w = WorkloadModel(num_layers=18)
+        plan = planning.build_joint_plan(fleet, CHAN, 18,
+                                         pair_policy="blossom-cost",
+                                         split_policy="latency-opt",
+                                         workload=w)
+        assert plan.pair_policy == "blossom-cost"
+        assert plan.kind == "paired"
+        assert plan.validate() is plan
+
+    def test_provenance_relabeled_on_sequential_fallback(self):
+        """When the candidate matching loses and the sequential reference
+        is returned, pair_policy must say so (the executed matching IS
+        the paper-weight greedy's), not echo the requested policy."""
+        w = WorkloadModel(num_layers=18)
+        seen_fallback = False
+        for seed in range(8):
+            fleet = latency.make_fleet(n=8, seed=seed)
+            plan = planning.build_joint_plan(
+                fleet, CHAN, 18, pair_policy="random",
+                split_policy="latency-opt", workload=w, seed=seed)
+            if plan.objective == pytest.approx(plan.seq_objective):
+                seq_pairs = planning.build_joint_plan(
+                    fleet, CHAN, 18, pair_policy="paper-weight",
+                    split_policy="latency-opt", workload=w).pairs
+                if plan.pairs == seq_pairs:
+                    assert plan.pair_policy == "paper-weight"
+                    seen_fallback = True
+        assert seen_fallback   # random must lose somewhere on 8 fleets
+
+    def test_cohort_subproblem_stays_inside_cohort(self):
+        fleet = latency.make_fleet(n=8, seed=2)
+        w = WorkloadModel(num_layers=18)
+        active = np.array([True, True, False, True, True, False, True,
+                           True])
+        plan = planning.build_joint_plan(fleet, CHAN, 18,
+                                         pair_policy="greedy-cost",
+                                         split_policy="latency-opt",
+                                         workload=w, active=active)
+        for i, j in plan.pairs:
+            assert active[i] and active[j]
+        for i in np.flatnonzero(~active):
+            assert plan.partner[i] == i and plan.lengths[i] == 18
+
+    def test_requires_workload(self):
+        fleet = latency.make_fleet(n=4, seed=0)
+        with pytest.raises(ValueError, match="workload"):
+            planning.build_joint_plan(fleet, CHAN, 18)
+
+    def test_random_policy_uses_seed(self):
+        """The random policy draws from the context seed (no placeholder
+        None), and even its joint plan keeps the <= sequential guarantee
+        (the builder falls back to the sequential reference when the
+        candidate matching prices worse)."""
+        fleet = latency.make_fleet(n=8, seed=0)
+        w = WorkloadModel(num_layers=18)
+        pol = pairing.get_pairing_policy("random")
+        traces = {tuple(pol.pair(fleet, CHAN, _ctx(w, seed=s)))
+                  for s in range(6)}
+        assert len(traces) > 1
+        p0 = planning.build_joint_plan(fleet, CHAN, 18,
+                                       pair_policy="random", workload=w,
+                                       seed=0)
+        assert p0.objective <= p0.seq_objective + 1e-9
+
+
+class TestCohortPolicyPath:
+    def test_cohort_partner_accepts_policy_and_normalizes_fleet_wide(self):
+        """participation.cohort_partner with a cost-driven PairingPolicy
+        must price cohort edges exactly like build_joint_plan (full-fleet
+        dataset normalization + the full fleet's rates) — the two paths
+        must select the same matching."""
+        from repro.core import participation
+        fleet = latency.make_fleet(n=8, seed=5)
+        w = WorkloadModel(num_layers=18)
+        cohort = np.array([0, 2, 3, 5, 6, 7])
+        active = np.zeros(8, bool)
+        active[cohort] = True
+        pol = pairing.get_pairing_policy("greedy-cost")
+        partner, act = participation.cohort_partner(
+            fleet, CHAN, cohort, pol, ctx=_ctx(w))
+        np.testing.assert_array_equal(act, active)
+        assert np.array_equal(partner[partner], np.arange(8))
+        plan = planning.build_joint_plan(
+            fleet, CHAN, 18, pair_policy="greedy-cost",
+            split_policy="latency-opt", workload=w, active=active)
+        if plan.pair_policy == "greedy-cost":   # candidate won
+            via_partner = tuple(sorted(
+                (int(i), int(partner[i])) for i in range(8)
+                if active[i] and partner[i] > i))
+            assert via_partner == plan.pairs
+
+    def test_cohort_partner_weight_policy_matches_pair_fn(self):
+        from repro.core import participation
+        fleet = latency.make_fleet(n=6, seed=1)
+        cohort = np.array([0, 1, 3, 4])
+        pol = pairing.get_pairing_policy("location")
+        p_pol, _ = participation.cohort_partner(fleet, CHAN, cohort, pol,
+                                                ctx=pairing.PairingContext())
+        p_fn, _ = participation.cohort_partner(fleet, CHAN, cohort,
+                                               pairing.location_pairing)
+        np.testing.assert_array_equal(p_pol, p_fn)
+
+
+class TestPlanRepricing:
+    def test_plan_objective_matches_builder_on_same_fleet(self):
+        fleet = latency.make_fleet(n=8, seed=3)
+        w = WorkloadModel(num_layers=18)
+        plan = planning.build_joint_plan(fleet, CHAN, 18,
+                                         pair_policy="greedy-cost",
+                                         split_policy="latency-opt",
+                                         workload=w)
+        assert planning.plan_objective(plan, fleet, CHAN, w) \
+            == pytest.approx(plan.objective)
+
+    def test_plan_objective_moves_with_drift(self):
+        """Re-pricing the SAME schedule on a drifted channel must track
+        the new rates — the adaptive driver's trigger signal."""
+        fleet = latency.make_fleet(n=6, seed=1)
+        w = WorkloadModel(num_layers=18)
+        plan = planning.build_joint_plan(fleet, CHAN, 18,
+                                         pair_policy="greedy-cost",
+                                         split_policy="latency-opt",
+                                         workload=w)
+        rng = np.random.default_rng(0)
+        drifted = latency.drift_fleet(fleet, rng, sigma_m=40.0)
+        o0 = planning.plan_objective(plan, fleet, CHAN, w)
+        o1 = planning.plan_objective(plan, drifted, CHAN, w)
+        assert o1 != pytest.approx(o0, rel=1e-12)

@@ -6,6 +6,9 @@ from repro.hypothesis_compat import given, settings, strategies as st
 from repro.core import latency, pairing
 
 
+pytestmark = pytest.mark.pairing
+
+
 def _fleet(n, seed=0):
     return latency.make_fleet(n=n, seed=seed)
 

@@ -250,6 +250,84 @@ class TestBaselinesThroughDriver:
         assert times["fedpairing"] < times["fl"]
 
 
+class TestAdaptiveJointPlanning:
+    def test_explicit_paper_weight_matches_default_trace(self):
+        """pair_policy='paper-weight' IS the default Table-I mechanism —
+        bit-identical traces (the refactor's compatibility contract)."""
+        s_def = _driver("vmapped").run()
+        s_pw = _driver("vmapped", pair_policy="paper-weight").run()
+        for a, b in zip(s_def.history, s_pw.history):
+            assert a == b
+
+    @pytest.mark.parametrize("pair_policy", ["greedy-cost", "blossom-cost"])
+    def test_cost_policies_drive_rounds(self, pair_policy):
+        """The joint policies run the full loop; every round's recorded
+        objective is the executed plan's Eq. (4) value."""
+        s = _driver("vmapped", pair_policy=pair_policy,
+                    split_policy="latency-opt").run()
+        assert len(s.history) == 3
+        for r in s.history:
+            assert r.objective is not None and np.isfinite(r.objective)
+            assert np.isfinite(r.mean_loss)
+
+    def test_joint_rounds_never_slower_than_sequential_rounds(self):
+        """Same seed -> same cohorts/drift; the joint (greedy-cost x
+        latency-opt) schedule's simulated round time objective must be <=
+        the sequential (paper-weight x latency-opt) plan's objective every
+        round (<= by the build_joint_plan construction)."""
+        s_seq = _driver("vmapped", split_policy="latency-opt").run()
+        s_joint = _driver("vmapped", pair_policy="greedy-cost",
+                          split_policy="latency-opt").run()
+        for r_s, r_j in zip(s_seq.history, s_joint.history):
+            assert r_s.cohort == r_j.cohort
+            assert r_j.objective <= r_s.objective + 1e-9
+
+    def test_replan_threshold_keeps_pairing_and_compiled_steps(self):
+        """With a huge threshold the round-1 plan is kept under drift:
+        no re-matching (replanned=False), constant pairing, and the
+        bucketed step cache stays at ONE compile — while the simulated
+        clock still follows the drifted channel."""
+        s = _driver("bucketed", rounds=5, participation=1.0,
+                    drift_sigma_m=10.0, replan_threshold=1e9).run()
+        assert [r.replanned for r in s.history] \
+            == [True, False, False, False, False]
+        assert len({r.pairs for r in s.history}) == 1
+        assert s.history[-1].cached_steps == 1
+        # the clock follows the ADAPTED plan: drifted rates re-price the
+        # kept schedule, so recorded objectives move round to round
+        objs = [r.objective for r in s.history]
+        assert len(set(objs)) > 1
+
+    def test_zero_threshold_replans_every_round(self):
+        s = _driver("vmapped", rounds=4, drift_sigma_m=10.0).run()
+        assert all(r.replanned for r in s.history)
+
+    def test_cohort_change_forces_replan(self):
+        """A kept plan is only valid for ITS cohort: when participation
+        sampling changes the cohort, the driver must re-match even under
+        an infinite threshold."""
+        s = _driver("vmapped", rounds=6, participation=0.5,
+                    drift_sigma_m=5.0, replan_threshold=1e9).run()
+        cohorts = [r.cohort for r in s.history]
+        for k in range(1, len(s.history)):
+            if cohorts[k] != cohorts[k - 1]:
+                assert s.history[k].replanned
+        assert any(cohorts[k] != cohorts[k - 1]
+                   for k in range(1, len(cohorts)))   # scenario is live
+
+    def test_threshold_trace_value_semantics(self):
+        """run_round value semantics extend to the adaptive anchor: the
+        kept-plan decision lives in RoundState, so re-running a kept
+        snapshot reproduces the same keep/replan choice."""
+        d = _driver("vmapped", drift_sigma_m=5.0, replan_threshold=1e9)
+        s0 = d.init_state()
+        s1 = d.run_round(s0)
+        s2a, s2b = d.run_round(s1), d.run_round(s1)
+        assert s2a.history[-1].replanned == s2b.history[-1].replanned
+        assert s2a.history[-1].pairs == s2b.history[-1].pairs
+        assert s2a.history[-1].objective == s2b.history[-1].objective
+
+
 class TestConfigValidation:
     def test_rejects_unknown_algorithm(self):
         with pytest.raises(ValueError, match="algorithm"):
@@ -262,6 +340,25 @@ class TestConfigValidation:
     def test_rejects_unknown_pairing(self):
         with pytest.raises(ValueError, match="pair_mechanism"):
             rounds.RoundConfig(pair_mechanism="optimal")
+
+    def test_rejects_unknown_pair_policy(self):
+        """One resolver: unknown policies raise at config time, not
+        mid-round (the old PAIRINGS None-placeholder bug class)."""
+        with pytest.raises(ValueError, match="unknown pairing policy"):
+            rounds.RoundConfig(pair_policy="optimal")
+
+    def test_rejects_policy_mechanism_conflict(self):
+        with pytest.raises(ValueError, match="one knob"):
+            rounds.RoundConfig(pair_mechanism="random",
+                               pair_policy="greedy-cost")
+
+    def test_rejects_negative_replan_threshold(self):
+        with pytest.raises(ValueError, match="replan_threshold"):
+            rounds.RoundConfig(replan_threshold=-0.1)
+
+    def test_all_table1_mechanisms_resolve(self):
+        for mech in rounds.PAIRINGS:
+            rounds.RoundConfig(pair_mechanism=mech)   # must not raise
 
     def test_rejects_unknown_split_policy(self):
         with pytest.raises(ValueError, match="split policy"):
