@@ -17,11 +17,19 @@ Three axes on the calibrated latency model, averaged over fleet draws:
   (paper | latency-opt).  The joint plans are never worse than the
   sequential pair-then-cut plan by construction — the per-fleet max
   joint/sequential objective ratio is asserted by bench_smoke on EVERY
-  fleet.
+  fleet,
+* planner scaling (``scaling``): wall-clock of one re-plan at
+  N in {20, 200, 2000} clients — the pure-loop cost-matrix baseline
+  (``pairing.pair_cost_matrix_reference``) vs the vectorized kernel vs a
+  cached re-plan (``planning.PlannerCache`` hit: cuts re-priced, not
+  re-searched), plus the end-to-end ``build_joint_plan`` time.  The
+  headline cell, asserted in the full run, is the N=2000 vectorized
+  re-plan >= 10x faster than the loop baseline (DESIGN.md §8).
 
 Writes machine-readable ``BENCH_pairing.json`` at the repo root
 (``tiny=True`` smoke runs write ``BENCH_pairing_tiny.json`` so CI never
-clobbers the tracked record):
+clobbers the tracked record); see ``benchmarks/README.md`` for the full
+schema and the expected range of every asserted ratio:
 
     {"table1": {"<mechanism>": {"round_s": .., "paper_s": ..}, ...},
      "policies": {"<policy>": {"objective": .., "round_s": ..}, ...},
@@ -31,7 +39,11 @@ clobbers the tracked record):
                    {"objective": .., "round_s": ..}, ...},
      "joint_vs_sequential_objective": <mean ratio, greedy x latency-opt
                                        headline cell, <= 1.0>,
-     "max_joint_ratio": <worst fleet x matrix cell, <= 1.0>}
+     "max_joint_ratio": <worst fleet x matrix cell, <= 1.0>,
+     "scaling": {"<N>": {"loop_ms": .., "vectorized_ms": ..,
+                         "cached_ms": .., "replan_ms": ..,
+                         "speedup": .., "cached_speedup": ..}, ...},
+     "scaling_speedup_top_n": <N=2000 loop/vectorized, >= 10 asserted>}
 """
 from __future__ import annotations
 
@@ -55,9 +67,86 @@ TINY_JSON_PATH = os.path.join(_ROOT, "BENCH_pairing_tiny.json")
 PAPER = {"fedpairing": 1553.0, "random": 4063.0, "location": 7275.0,
          "compute": 1807.0}
 
+SCALING_NS = (20, 200, 2000)        # full planner-scaling fleet sizes
+TINY_SCALING_NS = (8, 20, 40)       # CI smoke (structure, not the 10x)
+
 
 def _policies(num_layers: int):
     return ("paper", f"fixed:{num_layers // 2}", "latency-opt")
+
+
+def _scaling_suite(ns, num_layers: int, tiny: bool):
+    """Planner wall-clock per re-plan vs fleet size N.
+
+    Times three cost-matrix paths under latency-opt (the expensive,
+    rate-aware policy): the pure-Python O(N^2 W) reference loop, the
+    vectorized kernel, and a ``PlannerCache`` hit (kept cohort on a
+    mildly drifted channel: cuts re-priced in O(N^2), no re-search) —
+    plus the end-to-end joint re-plan (``build_joint_plan``,
+    greedy-cost x latency-opt, cache warm).  Returns
+    (report, rows, top-N speedup).
+    """
+    chan = ChannelModel()
+    report, rows = {}, []
+    for n in ns:
+        fleet = latency.make_fleet(n=n, seed=7)
+        w = WorkloadModel(num_layers=num_layers)
+        kw = dict(split_policy="latency-opt", workload=w)
+
+        t0 = time.perf_counter()
+        cost_ref, cuts_ref = pairing.pair_cost_matrix_reference(
+            fleet, chan, num_layers, w, split_policy="latency-opt")
+        loop_ms = (time.perf_counter() - t0) * 1e3
+
+        t0 = time.perf_counter()
+        cost_vec, cuts_vec = pairing.pair_cost_matrix(
+            fleet, chan, num_layers, w, split_policy="latency-opt")
+        vec_ms = (time.perf_counter() - t0) * 1e3
+        assert np.array_equal(cost_vec, cost_ref), \
+            f"vectorized cost matrix != scalar reference at N={n}"
+        assert np.array_equal(cuts_vec, cuts_ref), \
+            f"vectorized cuts != scalar reference at N={n}"
+
+        # kept cohort, mildly drifted channel -> cache hit (re-price only)
+        cache = planning.PlannerCache(tolerance=0.5)
+        pairing.pair_cost_matrix(fleet, chan, num_layers, w,
+                                 split_policy="latency-opt", cache=cache)
+        drifted = latency.drift_fleet(fleet, np.random.default_rng(n),
+                                      sigma_m=0.5)
+        t0 = time.perf_counter()
+        pairing.pair_cost_matrix(drifted, chan, num_layers, w,
+                                 split_policy="latency-opt", cache=cache)
+        cached_ms = (time.perf_counter() - t0) * 1e3
+        assert cache.last_status == "hit", cache.last_status
+
+        t0 = time.perf_counter()
+        jp = planning.build_joint_plan(drifted, chan, num_layers,
+                                       pair_policy="greedy-cost",
+                                       cache=cache, **kw)
+        replan_ms = (time.perf_counter() - t0) * 1e3
+        assert jp.objective <= jp.seq_objective + 1e-9
+
+        speedup = loop_ms / max(vec_ms, 1e-9)
+        cached_speedup = loop_ms / max(cached_ms, 1e-9)
+        report[str(n)] = {
+            "loop_ms": round(loop_ms, 2), "vectorized_ms": round(vec_ms, 2),
+            "cached_ms": round(cached_ms, 2),
+            "replan_ms": round(replan_ms, 2),
+            "speedup": round(speedup, 1),
+            "cached_speedup": round(cached_speedup, 1)}
+        rows.append({
+            "name": f"pairing/scaling_n{n}", "us_per_call": vec_ms * 1e3,
+            "derived": f"loop_ms={loop_ms:.1f} vec_ms={vec_ms:.1f} "
+                       f"cached_ms={cached_ms:.1f} replan_ms={replan_ms:.1f} "
+                       f"speedup={speedup:.1f}x cached={cached_speedup:.1f}x",
+        })
+    top = str(max(ns))
+    top_speedup = report[top]["speedup"]
+    if not tiny:
+        # the tentpole acceptance: fleet-scale re-planning is real
+        assert top_speedup >= 10.0, \
+            f"N={top} vectorized speedup {top_speedup} < 10x"
+    return report, rows, float(top_speedup)
 
 
 def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
@@ -173,6 +262,10 @@ def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
         "derived": f"mean_obj_ratio={mean_joint:.3f} "
                    f"max_obj_ratio={max_joint:.3f} (<= 1.0 by construction)",
     })
+    scaling_ns = TINY_SCALING_NS if tiny else SCALING_NS
+    scaling_report, scaling_rows, top_speedup = _scaling_suite(
+        scaling_ns, num_layers, tiny)
+    rows += scaling_rows
     with open(json_path, "w") as f:
         json.dump({
             "tiny": tiny, "fleets": n_fleets, "clients": n_clients,
@@ -185,6 +278,8 @@ def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
             "joint": joint_report,
             "joint_vs_sequential_objective": round(mean_joint, 4),
             "max_joint_ratio": round(max_joint, 4),
+            "scaling": scaling_report,
+            "scaling_speedup_top_n": round(top_speedup, 1),
         }, f, indent=2)
         f.write("\n")
     return rows

@@ -21,7 +21,7 @@ import functools
 import sys
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: pairing,roundtime,convergence,kernels,"
@@ -29,7 +29,11 @@ def main() -> None:
     ap.add_argument("--tiny", action="store_true",
                     help="shrink workloads (smoke/CI; applies to "
                          "pairing/fedstep/roundtime)")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     suites = []

@@ -35,11 +35,25 @@ for pp in ("paper-weight", "greedy-cost", "blossom-cost"):
 assert d["max_joint_ratio"] <= 1.0 + 1e-9, d["max_joint_ratio"]
 assert d["joint_vs_sequential_objective"] <= 1.0 + 1e-9, \
     d["joint_vs_sequential_objective"]
+# the fleet-scale planner (DESIGN.md §8): the scaling section must exist
+# with all three timed paths per N.  Structure/positivity only — the
+# tiny fleets' sub-ms single-shot timings are too noisy for ratio
+# asserts in CI; the >= 10x headline is asserted inside the full-size
+# run itself (bench_pairing._scaling_suite)
+scaling = d.get("scaling", {})
+assert len(scaling) >= 3, scaling.keys()
+for n, e in scaling.items():
+    for key in ("loop_ms", "vectorized_ms", "cached_ms", "replan_ms",
+                "speedup", "cached_speedup"):
+        assert key in e, (n, key)
+    assert e["vectorized_ms"] > 0 and e["cached_ms"] > 0, (n, e)
+assert d["scaling_speedup_top_n"] > 0, d["scaling_speedup_top_n"]
 print("bench_smoke: BENCH_pairing_tiny.json OK "
       f"(latency-opt/paper objective={d['latency_opt_vs_paper_objective']}, "
       f"worst fleet={d['max_objective_ratio']}; "
       f"joint/sequential={d['joint_vs_sequential_objective']}, "
-      f"worst fleet={d['max_joint_ratio']})")
+      f"worst fleet={d['max_joint_ratio']}; "
+      f"planner scaling top-N speedup={d['scaling_speedup_top_n']}x)")
 PY
 
 python - <<'PY'

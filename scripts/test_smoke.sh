@@ -7,6 +7,39 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# docs-consistency gate: every CLI flag documented in README.md must
+# exist in the sim/fed_train/benchmarks argparse definitions and vice
+# versa — new flags can't ship undocumented, docs can't rot silently
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import re
+
+from benchmarks.run import build_parser as bench_parser
+from repro.launch.fed_train import build_parser as fed_parser
+from repro.launch.sim import build_parser as sim_parser
+
+
+def flags(parser):
+    out = set()
+    for action in parser._actions:
+        out.update(s for s in action.option_strings if s.startswith("--"))
+    out.discard("--help")
+    return out
+
+
+in_code = flags(sim_parser()) | flags(fed_parser()) | flags(bench_parser())
+with open("README.md") as f:
+    readme = f.read()
+# long flags only; the lookahead rejects tokens that continue with '_'
+# (e.g. XLA_FLAGS values are not CLI flags of ours)
+in_docs = set(re.findall(r"--[a-z][a-z0-9-]*(?![a-z0-9_-])", readme))
+undocumented = sorted(in_code - in_docs)
+phantom = sorted(in_docs - in_code)
+assert not undocumented, f"CLI flags missing from README.md: {undocumented}"
+assert not phantom, f"README.md documents nonexistent flags: {phantom}"
+print(f"docs-consistency: README.md <-> argparse OK "
+      f"({len(in_code)} flags)")
+PY
+
 # planning + pairing suites first (fast, host-side): the RoundPlan and
 # joint-matching invariants gate everything downstream — fail here before
 # paying for the full suite

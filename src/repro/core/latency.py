@@ -21,14 +21,21 @@ from repro.core import planning
 
 @dataclasses.dataclass(frozen=True)
 class ChannelModel:
-    """Eq. (3): r_ij = B log2(1 + P h_ij / sigma^2), pathloss channel gain."""
+    """Eq. (3): r_ij = B log2(1 + P h_ij / sigma^2), pathloss channel gain.
 
-    bandwidth_hz: float = 64e6          # B  (paper: 64 MHz)
-    tx_power_w: float = 1.0             # P  (paper: 1 W)
-    noise_w: float = 1e-9               # sigma^2 (paper: 1e-9 W)
-    ref_gain: float = 1e-3              # h0 at unit distance (assumed; not in paper)
-    ref_dist_m: float = 1.0             # zeta_0
-    pathloss_exp: float = 3.0           # theta (assumed; typical urban 2.7-3.5)
+    Units: ``bandwidth_hz`` in Hz, ``tx_power_w``/``noise_w`` in watts,
+    ``ref_gain``/``pathloss_exp`` unitless, ``ref_dist_m`` in meters.
+    ``rate_bps`` is the Shannon rate the latency model divides BYTE
+    payloads by — i.e. the calibration treats it as bytes/s (the paper
+    leaves the bits/bytes factor unspecified; the constant is absorbed
+    into the §IV calibration, see ``WorkloadModel``)."""
+
+    bandwidth_hz: float = 64e6          # B, Hz  (paper: 64 MHz)
+    tx_power_w: float = 1.0             # P, W  (paper: 1 W)
+    noise_w: float = 1e-9               # sigma^2, W (paper: 1e-9 W)
+    ref_gain: float = 1e-3              # h0 at ref_dist_m, unitless (assumed; not in paper)
+    ref_dist_m: float = 1.0             # zeta_0, m
+    pathloss_exp: float = 3.0           # theta, unitless (assumed; typical urban 2.7-3.5)
 
     def gain(self, dist_m: np.ndarray) -> np.ndarray:
         d = np.maximum(np.asarray(dist_m, np.float64), self.ref_dist_m)
@@ -41,11 +48,12 @@ class ChannelModel:
 
 @dataclasses.dataclass(frozen=True)
 class ClientFleet:
-    """N heterogeneous clients: positions (m), CPU freqs (Hz), dataset sizes."""
+    """N heterogeneous clients: positions (meters), CPU frequencies
+    (cycles/s), dataset sizes (samples)."""
 
-    positions: np.ndarray       # (N, 2)
-    cpu_hz: np.ndarray          # (N,)
-    data_sizes: np.ndarray      # (N,)
+    positions: np.ndarray       # (N, 2), m (server at the origin)
+    cpu_hz: np.ndarray          # (N,), CPU cycles/s — f_i in Eq. (3)
+    data_sizes: np.ndarray      # (N,), samples — |D_i| in Problem 1
 
     @property
     def n(self) -> int:
@@ -109,14 +117,20 @@ class WorkloadModel:
     (ResNet18 mid-network: 128ch x 16 x 16 x fp32 = 131 KB) — Problem 1
     weights the transfer term by dataset size |D_i|, so comm scales with
     samples, which is what makes the rate term of Eq. (5) matter.
+
+    Units on every field: ``cycles_per_layer`` in CPU cycles (divided by
+    ``ClientFleet.cpu_hz`` in cycles/s -> seconds), ``feature_bytes`` /
+    ``grad_bytes`` / ``model_bytes`` and the per-cut profiles in bytes
+    (divided by the channel rate -> seconds), ``batch_size`` in samples,
+    ``batches_per_epoch`` / ``local_epochs`` unitless counts.
     """
 
-    num_layers: int                     # W
-    cycles_per_layer: float = 2e8       # F (per layer per mini-batch)
-    feature_bytes: float = 128 * 16 * 16 * 4   # per sample, one direction
-    grad_bytes: float = 128 * 16 * 16 * 4      # per sample, one direction
-    model_bytes: float = 4 * 11e6       # full model upload (ResNet18-ish)
-    batch_size: int = 32
+    num_layers: int                     # W, layers in the full stack
+    cycles_per_layer: float = 2e8       # F, CPU cycles / layer / mini-batch
+    feature_bytes: float = 128 * 16 * 16 * 4   # bytes / sample, one direction
+    grad_bytes: float = 128 * 16 * 16 * 4      # bytes / sample, one direction
+    model_bytes: float = 4 * 11e6       # bytes, full model upload (ResNet18-ish)
+    batch_size: int = 32                # samples / mini-batch
     batches_per_epoch: int = 78         # 2500 samples / batch 32
     local_epochs: int = 2               # paper: 2 epochs / round
     # optional per-cut boundary payload profiles (index cut-1, cuts
@@ -209,22 +223,39 @@ def objective_value(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
 # round-time simulation (Tables I & II)
 # ---------------------------------------------------------------------------
 
+def _pair_times_batch(i: np.ndarray, j: np.ndarray, fleet: ClientFleet,
+                      rates: np.ndarray, w: WorkloadModel,
+                      lengths: Optional[np.ndarray]) -> np.ndarray:
+    """Eq. (3) wall times (seconds) for an array of pairs at once — the
+    batched workload terms behind the round-time simulation (same
+    float64 arithmetic as the scalar ``pair_round_time``, via
+    ``planning.pair_cost_batch``).  ``i`` must be the canonical
+    (lower-index) member of every pair; default split is the paper rule.
+    """
+    f = np.asarray(fleet.cpu_hz, np.float64)
+    if lengths is None:
+        li = planning.paper_cut_batch(f[i], f[j], w.num_layers)
+        lj = w.num_layers - li
+    else:
+        lengths = np.asarray(lengths, np.int64)
+        li, lj = lengths[i], lengths[j]
+    return planning.pair_cost_batch(f[i], f[j], rates[i, j], w, li, lj)
+
+
 def round_time_fedpairing(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
                           chan: ChannelModel, w: WorkloadModel,
                           server_rate_bps: Optional[np.ndarray] = None,
                           lengths: Optional[np.ndarray] = None) -> float:
-    """Round = slowest pair (parallel pairs) + model uploads.  ``lengths``
-    overrides the per-client split (a RoundPlan's lengths under any
-    policy); default is the paper rule."""
+    """Round (seconds) = slowest pair (parallel pairs) + model uploads.
+    ``lengths`` overrides the per-client split (a RoundPlan's lengths
+    under any policy); default is the paper rule.  Batched over pairs."""
     rates = fleet.rates(chan)
-    per_pair = [
-        pair_round_time(fleet.cpu_hz[i], fleet.cpu_hz[j], rates[i, j], w,
-                        lengths=(None if lengths is None
-                                 else (int(lengths[i]), int(lengths[j]))))
-        for i, j in pairs
-    ]
+    idx = np.asarray([(min(i, j), max(i, j)) for i, j in pairs],
+                     np.int64).reshape(-1, 2)
+    per_pair = _pair_times_batch(idx[:, 0], idx[:, 1], fleet, rates, w,
+                                 lengths)
     upload = _upload_time(fleet, chan, w, server_rate_bps)
-    return max(per_pair) + upload
+    return float(np.max(per_pair)) + upload
 
 
 def local_full_stack_time(cpu_hz, w: WorkloadModel):
@@ -243,27 +274,32 @@ def round_time_from_partner(partner: np.ndarray, fleet: ClientFleet,
     representation): straggler = max over active pairs, self-paired active
     clients pay the full local stack (vanilla-FL-style), inactive clients
     contribute nothing; + model upload over the active cohort only.
-    ``lengths`` overrides the per-client split (any policy's plan)."""
+    ``lengths`` overrides the per-client split (any policy's plan).
+    Batched over the cohort (``_pair_times_batch``) — at fleet scale the
+    per-round accounting must not cost more than the plan itself."""
     n = fleet.n
     act = np.ones(n, bool) if active is None else np.asarray(active, bool)
     if not act.any():
         return 0.0
+    partner = np.asarray(partner, np.int64)
+    idx = np.arange(n)
     rates = fleet.rates(chan)
-    times = []
-    for i in range(n):
-        if not act[i]:
-            continue
-        j = int(partner[i])
-        if j == i:
-            times.append(float(local_full_stack_time(fleet.cpu_hz[i], w)))
-        elif j > i:
-            times.append(pair_round_time(
-                fleet.cpu_hz[i], fleet.cpu_hz[j], rates[i, j], w,
-                lengths=(None if lengths is None
-                         else (int(lengths[i]), int(lengths[j])))))
+    worst = -np.inf
+    selfp = act & (partner == idx)
+    if selfp.any():
+        worst = float(np.max(local_full_stack_time(fleet.cpu_hz[selfp], w)))
+    ci = np.flatnonzero(act & (partner > idx))   # canonical pair members
+    if ci.size:
+        times = _pair_times_batch(ci, partner[ci], fleet, rates, w, lengths)
+        worst = max(worst, float(np.max(times)))
+    if worst == -np.inf:
+        # an active cohort with no self-paired member and no canonical
+        # pair member means the active set isn't closed under the pairing
+        raise ValueError(f"active cohort {np.flatnonzero(act)} contains "
+                         f"no trainable flow under partner {partner}")
     srates = _server_rates(fleet, chan, server_rate_bps)
     upload = float(np.max(w.model_bytes / srates[act]))
-    return max(times) + upload
+    return worst + upload
 
 
 def round_time_plan(plan: "planning.RoundPlan", fleet: ClientFleet,

@@ -20,15 +20,24 @@ al., *Training Latency Minimization for Model-Splitting Allowed Federated
 Edge Learning*; Sun et al., *Split Federated Learning Over Heterogeneous
 Edge Devices*).  Two selectors run on the cost matrix: ``greedy-cost``
 (ascending min-cost greedy, the Alg.-1 shape on real costs) and
-``blossom-cost`` (exact min-cost maximum matching — the bound).
-``paper-weight`` remains the default policy and is bit-identical to the
-historical ``fedpairing_pairing``; see ``planning.build_joint_plan`` for
-the joint plan the round driver consumes (DESIGN.md §7).
+``blossom-cost`` (min-cost maximum matching — exact blossom up to
+``_BLOSSOM_EXACT_MAX_N`` clients, the scipy assignment relaxation
+beyond).  ``paper-weight`` remains the default policy and is
+bit-identical to the historical ``fedpairing_pairing``; see
+``planning.build_joint_plan`` for the joint plan the round driver
+consumes (DESIGN.md §7).
+
+At fleet scale the cost matrix is the vectorized planning kernel
+(``planning.policy_cut_costs`` — batched over candidate pairs, the cut
+axis looped), bit-identical to the scalar reference loop kept as
+``pair_cost_matrix_reference``, and re-plans of a kept cohort reuse the
+cut search through a cross-round ``planning.PlannerCache`` (DESIGN.md
+§8; the scaling wall-clocks live in ``BENCH_pairing.json``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -54,22 +63,27 @@ def edge_weights(fleet: ClientFleet, chan: ChannelModel, alpha: float = 1.0,
     return w
 
 
-def _edges_sorted_desc(weights: np.ndarray) -> Sequence[Tuple[float, int, int]]:
+def greedy_pairing(weights: np.ndarray) -> Pairs:
+    """Algorithm 1: descending-weight greedy matching.  O(N^2 log N).
+
+    Sort the candidate edges by weight (stable, so equal weights keep
+    upper-triangle order), take any edge whose endpoints are both
+    uncovered, stop as soon as the matching is maximum (floor(N/2) pairs)
+    — the early exit is what keeps the Alg.-1 scan viable on
+    thousand-client fleets where the full edge list has ~N^2/2 entries.
+    """
     n = weights.shape[0]
     iu, ju = np.triu_indices(n, k=1)
     order = np.argsort(-weights[iu, ju], kind="stable")
-    return [(weights[iu[o], ju[o]], int(iu[o]), int(ju[o])) for o in order]
-
-
-def greedy_pairing(weights: np.ndarray) -> Pairs:
-    """Algorithm 1: descending-weight greedy matching.  O(N^2 log N)."""
-    covered = set()
+    covered = np.zeros(n, bool)
     pairs: Pairs = []
-    for _, i, j in _edges_sorted_desc(weights):
-        if i not in covered and j not in covered:
+    for o in order:
+        i, j = int(iu[o]), int(ju[o])
+        if not covered[i] and not covered[j]:
             pairs.append((i, j))
-            covered.add(i)
-            covered.add(j)
+            covered[i] = covered[j] = True
+            if len(pairs) == n // 2:
+                break
     return pairs
 
 
@@ -123,27 +137,8 @@ def fedpairing_pairing(fleet: ClientFleet, chan: ChannelModel,
 # latency at that hypothetical pair's policy-optimal cut
 # ---------------------------------------------------------------------------
 
-def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
-                     num_layers: int, workload, *, split_policy="paper",
-                     alpha: float = 1.0, beta: float = 1.0,
-                     rates: Optional[np.ndarray] = None,
-                     rel_data: Optional[np.ndarray] = None
-                     ) -> Tuple[np.ndarray, np.ndarray]:
-    """(N, N) symmetric edge-cost matrix for joint pairing x split search.
-
-    Entry (i, j) is ``planning.pair_cost`` of the hypothetical pair (i, j)
-    evaluated at the cut the ``split_policy`` would choose FOR that pair —
-    i.e. each edge is priced at its policy-optimal split, so a matching
-    that minimizes the matrix sum minimizes the Eq. (4) objective of the
-    resulting ``build_round_plan`` under the same policy.  Also returns the
-    (N, N) canonical-member cut matrix (cuts[i, j] with i < j canonical)
-    so callers can reuse the search.  ``rel_data`` overrides the dataset
-    weights (e.g. full-fleet-normalized weights when pricing a cohort
-    sub-problem); the diagonal is +inf (no self-pairs).
-    """
-    if workload is None:
-        raise ValueError("pair_cost_matrix needs a workload model "
-                         "(the Eq. (3) cost has no meaning without one)")
+def _matrix_inputs(fleet, chan, rates, rel_data):
+    """Common (f, rates, rel_data) normalization for the cost matrices."""
     n = fleet.n
     f = np.asarray(fleet.cpu_hz, np.float64)
     if rates is None:
@@ -152,6 +147,103 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
     if rel_data is None:
         rel_data = np.asarray(fleet.data_sizes, np.float64)
         rel_data = rel_data / rel_data.sum()
+    return f, np.asarray(rates, np.float64), np.asarray(rel_data, np.float64)
+
+
+def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
+                     num_layers: int, workload, *, split_policy="paper",
+                     alpha: float = 1.0, beta: float = 1.0,
+                     rates: Optional[np.ndarray] = None,
+                     rel_data: Optional[np.ndarray] = None,
+                     cache: Optional[planning.PlannerCache] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """(N, N) symmetric edge-cost matrix for joint pairing x split search.
+
+    Entry (i, j) is the Eq. (3) cost (``planning.pair_cost``, seconds) of
+    the hypothetical pair (i, j) evaluated at the cut the ``split_policy``
+    would choose FOR that pair — i.e. each edge is priced at its
+    policy-optimal split, so a matching that minimizes the matrix sum
+    minimizes the Eq. (4) objective of the resulting ``build_round_plan``
+    under the same policy.  Also returns the (N, N) canonical-member cut
+    matrix (cuts[i, j] with i < j canonical) so callers can reuse the
+    search.  ``rel_data`` overrides the dataset weights (e.g.
+    full-fleet-normalized weights when pricing a cohort sub-problem); the
+    diagonal is +inf (no self-pairs).
+
+    The search is the vectorized planning kernel
+    (``planning.policy_cut_costs``: batched numpy over the candidate-pair
+    axis, the cut axis looped 1..W-1) — bit-identical float64 to the
+    scalar ``pair_cost_matrix_reference`` loop, which is kept as the
+    reference implementation the property tests compare against (and the
+    fallback for custom SplitPolicy subclasses with no vectorized form).
+    ``cache`` (a ``planning.PlannerCache``) reuses a previous round's cut
+    search across rounds: on a hit the cached cuts are re-priced on the
+    current rates in O(N^2) instead of re-searched in O(N^2 W)
+    (DESIGN.md §8).
+    """
+    if workload is None:
+        raise ValueError("pair_cost_matrix needs a workload model "
+                         "(the Eq. (3) cost has no meaning without one)")
+    n = fleet.n
+    f, rates, rel_data = _matrix_inputs(fleet, chan, rates, rel_data)
+    pol = planning.get_policy(split_policy)
+    iu, ju = np.triu_indices(n, k=1)
+    f_i, f_j = f[iu], f[ju]
+    r = rates[iu, ju]
+    d_i, d_j = rel_data[iu], rel_data[ju]
+
+    def search():
+        return planning.policy_cut_costs(pol, f_i, f_j, r, d_i, d_j,
+                                         workload, num_layers, alpha, beta)
+
+    if cache is not None:
+        key = planning.PlannerCache.problem_key(f, rel_data, workload, pol,
+                                                num_layers, alpha, beta)
+        found = cache.consult(
+            key, pol.rate_aware,
+            lambda cuts: planning.price_cuts(cuts, f_i, f_j, r, d_i, d_j,
+                                             workload, num_layers, alpha,
+                                             beta))
+        if found is None:
+            found = search()
+            if found is not None:
+                cache.store(key, *found, workload=workload)
+    else:
+        found = search()
+    if found is None:          # custom policy without a vectorized form
+        return pair_cost_matrix_reference(
+            fleet, chan, num_layers, workload, split_policy=pol,
+            alpha=alpha, beta=beta, rates=rates, rel_data=rel_data)
+    cvec, costv = found
+    cost = np.full((n, n), np.inf)
+    cuts = np.zeros((n, n), np.int64)
+    cost[iu, ju] = cost[ju, iu] = costv
+    cuts[iu, ju] = cuts[ju, iu] = cvec
+    return cost, cuts
+
+
+def pair_cost_matrix_reference(fleet: ClientFleet,
+                               chan: Optional[ChannelModel],
+                               num_layers: int, workload, *,
+                               split_policy="paper", alpha: float = 1.0,
+                               beta: float = 1.0,
+                               rates: Optional[np.ndarray] = None,
+                               rel_data: Optional[np.ndarray] = None
+                               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Scalar reference for ``pair_cost_matrix``: the pure-Python
+    O(N^2 W) per-pair loop over ``SplitPolicy.pair_cut_cost``.
+
+    Kept (1) as the ground truth the vectorized kernel is property-tested
+    bit-identical against, (2) as the execution path for custom
+    SplitPolicy subclasses that only define the scalar ``pair_cut``, and
+    (3) as the pure-loop baseline the planner-scaling benchmark times
+    (``benchmarks/bench_pairing.py``).
+    """
+    if workload is None:
+        raise ValueError("pair_cost_matrix needs a workload model "
+                         "(the Eq. (3) cost has no meaning without one)")
+    n = fleet.n
+    f, rates, rel_data = _matrix_inputs(fleet, chan, rates, rel_data)
     pol = planning.get_policy(split_policy)
     cost = np.full((n, n), np.inf)
     cuts = np.zeros((n, n), np.int64)
@@ -168,6 +260,11 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
     return cost, cuts
 
 
+# above this many pairs the scalar 2-opt scan switches to the batched
+# numpy sweep (same only-improving guarantee, different visit order)
+_TWO_OPT_BULK_MIN_PAIRS = 32
+
+
 def two_opt_refine(pairs: Pairs, cost: np.ndarray,
                    max_sweeps: int = 20) -> Pairs:
     """Pairwise-exchange (2-opt) descent on a matching's total cost.
@@ -177,8 +274,18 @@ def two_opt_refine(pairs: Pairs, cost: np.ndarray,
     and sweeps repeat to a local optimum.  Each accepted exchange lowers
     the total, so this can only improve the matching it starts from —
     cheap (O(sweeps x P^2)) against the blossom's exact optimum.
+
+    Small matchings keep the historical scalar scan (bit-stable results
+    for every existing fleet size); beyond ``_TWO_OPT_BULK_MIN_PAIRS``
+    pairs the sweep runs as a batched numpy computation over all (P, P)
+    candidate exchanges at once, applying a conflict-free set of the
+    best improving exchanges per sweep — same monotone-descent guarantee,
+    fleet-scale wall-clock (the scalar scan is O(P^2) Python-loop
+    iterations per sweep, minutes at N=2000).
     """
     pairs = [tuple(p) for p in pairs]
+    if len(pairs) > _TWO_OPT_BULK_MIN_PAIRS:
+        return _two_opt_refine_bulk(pairs, cost, max_sweeps)
     for _ in range(max_sweeps):
         improved = False
         for a in range(len(pairs)):
@@ -197,6 +304,42 @@ def two_opt_refine(pairs: Pairs, cost: np.ndarray,
     return sorted(pairs)
 
 
+def _two_opt_refine_bulk(pairs: Pairs, cost: np.ndarray,
+                         max_sweeps: int) -> Pairs:
+    """Batched 2-opt sweep: score all (P, P) pair-of-pair exchanges with
+    numpy, apply the improving ones greedily by gain, touching every pair
+    at most once per sweep (conflict-free), repeat until no exchange
+    improves.  Each applied exchange strictly lowers the total, so the
+    only-improving contract of ``two_opt_refine`` is preserved."""
+    a = np.array([p[0] for p in pairs], np.int64)
+    b = np.array([p[1] for p in pairs], np.int64)
+    for _ in range(max_sweeps):
+        base = cost[a, b]
+        pair_base = base[:, None] + base[None, :]
+        # exchange variant 1: (a_x, a_y)(b_x, b_y); variant 2: (a_x, b_y)(b_x, a_y)
+        alt1 = cost[a[:, None], a[None, :]] + cost[b[:, None], b[None, :]]
+        alt2 = cost[a[:, None], b[None, :]] + cost[b[:, None], a[None, :]]
+        gain = pair_base - np.minimum(alt1, alt2)
+        gain[np.tril_indices_from(gain)] = -np.inf     # x < y only, no self
+        xs, ys = np.nonzero(gain > 1e-12)
+        if xs.size == 0:
+            break
+        order = np.argsort(-gain[xs, ys], kind="stable")
+        touched = np.zeros(len(a), bool)
+        for o in order:
+            x, y = int(xs[o]), int(ys[o])
+            if touched[x] or touched[y]:
+                continue
+            touched[x] = touched[y] = True
+            if alt1[x, y] <= alt2[x, y]:
+                na = ((a[x], a[y]), (b[x], b[y]))
+            else:
+                na = ((a[x], b[y]), (b[x], a[y]))
+            (a[x], b[x]), (a[y], b[y]) = \
+                (min(na[0]), max(na[0])), (min(na[1]), max(na[1]))
+    return sorted((int(i), int(j)) for i, j in zip(a, b))
+
+
 def min_cost_greedy_pairing(cost: np.ndarray) -> Pairs:
     """Min-cost greedy edge selection + 2-opt exchange refinement.
 
@@ -211,16 +354,31 @@ def min_cost_greedy_pairing(cost: np.ndarray) -> Pairs:
     return two_opt_refine(greedy_pairing(-cost), cost)
 
 
-def min_cost_blossom_pairing(cost: np.ndarray) -> Pairs:
-    """Exact min-cost maximum matching (blossom) — the joint bound.
+# beyond this many clients the exact blossom (pure-Python NetworkX,
+# O(N^3) with heavy constants) hands over to the scipy assignment solver
+_BLOSSOM_EXACT_MAX_N = 64
 
-    Max-weight max-cardinality matching on ``C - cost`` with ``C`` above
+
+def min_cost_blossom_pairing(cost: np.ndarray) -> Pairs:
+    """Min-cost maximum matching on the cost matrix — the joint bound.
+
+    Up to ``_BLOSSOM_EXACT_MAX_N`` clients this is the EXACT blossom:
+    max-weight max-cardinality matching on ``C - cost`` with ``C`` above
     every finite cost, so among maximum matchings the total cost is
     minimized exactly (the greedy selector is tested against this bound).
+
+    Beyond that the pure-Python blossom stops being viable (minutes at
+    N=2000) and the selector switches to
+    ``scipy.optimize.linear_sum_assignment`` on the symmetric matrix
+    (``min_cost_assignment_pairing``): near-optimal rather than exact, but
+    fleet-scale — the appropriate bound estimator for the scaling
+    benchmark (DESIGN.md §8 discusses when to prefer which).
     """
+    n = cost.shape[0]
+    if n > _BLOSSOM_EXACT_MAX_N:
+        return min_cost_assignment_pairing(cost)
     import networkx as nx
 
-    n = cost.shape[0]
     finite = cost[np.isfinite(cost)]
     hi = float(finite.max()) if finite.size else 1.0
     g = nx.Graph()
@@ -231,6 +389,37 @@ def min_cost_blossom_pairing(cost: np.ndarray) -> Pairs:
                 g.add_edge(i, j, weight=hi - float(cost[i, j]) + 1.0)
     mate = nx.max_weight_matching(g, maxcardinality=True)
     return sorted((min(i, j), max(i, j)) for i, j in mate)
+
+
+def min_cost_assignment_pairing(cost: np.ndarray) -> Pairs:
+    """Fleet-scale min-cost matching via the Hungarian relaxation.
+
+    ``scipy.optimize.linear_sum_assignment`` on the symmetric cost (self-
+    and non-finite edges priced prohibitively) yields a min-cost
+    permutation; by symmetry it decomposes almost entirely into mutual
+    2-cycles, which ARE matching pairs.  Vertices left on longer cycles
+    are matched among themselves by the ascending-cost greedy, and the
+    whole matching is polished by ``two_opt_refine`` — not exact like the
+    blossom, but a tight bound at a solver cost of O(N^3) C-speed
+    (ms at N=2000) instead of pure-Python blossom minutes.
+    """
+    from scipy.optimize import linear_sum_assignment
+
+    n = cost.shape[0]
+    finite = np.isfinite(cost)
+    np.fill_diagonal(finite, False)
+    hi = float(cost[finite].max()) if finite.any() else 1.0
+    big = hi * n + 1.0
+    c = np.where(finite, cost, big)
+    _, sigma = linear_sum_assignment(c)
+    mutual = (sigma[sigma] == np.arange(n)) & (sigma != np.arange(n))
+    pairs = [(int(i), int(sigma[i])) for i in np.flatnonzero(mutual)
+             if i < sigma[i]]
+    leftover = np.flatnonzero(~mutual)
+    if leftover.size >= 2:
+        sub = greedy_pairing(-c[np.ix_(leftover, leftover)])
+        pairs += [(int(leftover[x]), int(leftover[y])) for x, y in sub]
+    return two_opt_refine(sorted(pairs), cost)
 
 
 # ---------------------------------------------------------------------------
@@ -253,7 +442,9 @@ class PairingContext:
     additionally need the stack depth, the workload model and the split
     policy whose optimal cuts price the edges.  ``rel_data`` optionally
     overrides dataset weights (full-fleet-normalized cohort weights);
-    ``seed`` feeds the ``random`` mechanism (drawn from the driver rng)."""
+    ``seed`` feeds the ``random`` mechanism (drawn from the driver rng);
+    ``cache`` (a ``planning.PlannerCache``) lets the cost-matrix cut
+    search be reused across rounds (DESIGN.md §8)."""
 
     num_layers: int = 0
     workload: Optional[object] = None
@@ -263,6 +454,7 @@ class PairingContext:
     rates: Optional[np.ndarray] = None
     rel_data: Optional[np.ndarray] = None
     seed: int = 0
+    cache: Optional[planning.PlannerCache] = None
 
 
 class PairingPolicy:
@@ -328,7 +520,7 @@ class _CostPairing(PairingPolicy):
         cost, _ = pair_cost_matrix(
             fleet, chan, ctx.num_layers, ctx.workload,
             split_policy=ctx.split_policy, alpha=ctx.alpha, beta=ctx.beta,
-            rates=ctx.rates, rel_data=ctx.rel_data)
+            rates=ctx.rates, rel_data=ctx.rel_data, cache=ctx.cache)
         return self._select(cost)
 
 

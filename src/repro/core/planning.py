@@ -34,7 +34,7 @@ See DESIGN.md §6 (Planning layer) for the contract.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -49,13 +49,24 @@ def paper_cut(f_i: float, f_j: float, num_layers: int) -> int:
     """Eq. (6): L_i = floor(f_i/(f_i+f_j) W), clamped to [1, W-1].
 
     ``f_i`` is the *canonical* (lower-index) member of the pair; its
-    partner gets ``W - L_i`` so the pair always sums to W.  This is the
-    single implementation of the rule — the scalar
-    ``latency.split_lengths`` and vectorized
+    partner gets ``W - L_i`` so the pair always sums to W.  This (with
+    its batched twin ``paper_cut_batch``) is the single implementation
+    of the rule — the scalar ``latency.split_lengths`` and vectorized
     ``splitting.propagation_lengths`` are thin wrappers.
     """
     li = int(np.floor(f_i / (f_i + f_j) * num_layers))
     return min(max(li, 1), num_layers - 1)
+
+
+def paper_cut_batch(f_i, f_j, num_layers: int) -> np.ndarray:
+    """Vectorized ``paper_cut`` over arrays of canonical-member pairs —
+    the ONE batched form of the Eq. (6) rule (``paper_lengths``, the
+    ``policy_cut_costs`` paper branch and the latency accounting's
+    default split all delegate here)."""
+    f_i = np.asarray(f_i, np.float64)
+    f_j = np.asarray(f_j, np.float64)
+    base = np.floor(f_i / (f_i + f_j) * num_layers).astype(np.int64)
+    return np.clip(base, 1, num_layers - 1)
 
 
 def paper_lengths(f: np.ndarray, partner: np.ndarray,
@@ -69,9 +80,7 @@ def paper_lengths(f: np.ndarray, partner: np.ndarray,
     f = np.asarray(f, np.float64)
     partner = np.asarray(partner, np.int64)
     idx = np.arange(len(f))
-    fp = f[partner]
-    base = np.floor(f / (f + fp) * num_layers).astype(np.int64)
-    base = np.clip(base, 1, num_layers - 1)
+    base = paper_cut_batch(f, f[partner], num_layers)
     li = np.where(idx <= partner, base, num_layers - base[partner])
     return np.where(partner == idx, num_layers, li)
 
@@ -95,7 +104,7 @@ def resolve_server_cut(server_cut: int, num_layers: int) -> int:
 # ---------------------------------------------------------------------------
 
 def boundary_bytes(w, cut: int) -> Tuple[float, float]:
-    """Per-sample (feature, gradient) payload at a given cut depth.
+    """Per-sample (feature, gradient) payload in **bytes** at a cut depth.
 
     Defaults to the workload's flat ``feature_bytes``/``grad_bytes`` (the
     paper models one representative boundary tensor); a workload may carry
@@ -110,11 +119,27 @@ def boundary_bytes(w, cut: int) -> Tuple[float, float]:
     return feat, grad
 
 
+def boundary_bytes_batch(w, cuts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized ``boundary_bytes``: (feature, gradient) **bytes** arrays
+    for an int array of cut depths — same profile lookup, elementwise."""
+    cuts = np.asarray(cuts, np.int64)
+    fp = getattr(w, "feature_profile", None)
+    gp = getattr(w, "grad_profile", None)
+    feat = (np.full(cuts.shape, float(w.feature_bytes)) if fp is None
+            else np.asarray(fp, np.float64)[cuts - 1])
+    grad = (np.full(cuts.shape, float(w.grad_bytes)) if gp is None
+            else np.asarray(gp, np.float64)[cuts - 1])
+    return feat, grad
+
+
 def pair_cost(f_i: float, f_j: float, rate_bps: float, w, li: int, lj: int,
               d_i: float = 1.0, d_j: float = 1.0, alpha: float = 1.0,
               beta: float = 1.0) -> float:
-    """Eq. (3) wall time of one pair's round at split (li, lj), weighted
-    by the Problem-1 alpha/beta trade-off (Eq. 4's per-pair term).
+    """Eq. (3) wall time (**seconds**) of one pair's round at split
+    (li, lj), weighted by the Problem-1 alpha/beta trade-off (Eq. 4's
+    per-pair term).  ``f_*`` are CPU frequencies in Hz, ``rate_bps`` the
+    link rate in bits/s (here bytes/s — see ``latency.ChannelModel``),
+    ``d_*`` the relative dataset weights (unitless, sum to 1 fleet-wide).
 
     Compute: both flows run in parallel, phases balanced by the split, so
     each of the 2 phases (bottom+top) is bounded by the slower side;
@@ -133,6 +158,34 @@ def pair_cost(f_i: float, f_j: float, rate_bps: float, w, li: int, lj: int,
     feat_j, grad_j = boundary_bytes(w, lj)
     comm = w.batch_size * max(d_i * feat_i + d_j * grad_j,
                               d_j * feat_j + d_i * grad_i) / rate_bps
+    return (alpha * compute + beta * comm) \
+        * w.batches_per_epoch * w.local_epochs
+
+
+def pair_cost_batch(f_i, f_j, rate_bps, w, li, lj, d_i=1.0, d_j=1.0,
+                    alpha: float = 1.0, beta: float = 1.0) -> np.ndarray:
+    """Vectorized ``pair_cost``: Eq. (3) **seconds** over arrays of pairs.
+
+    Elementwise over broadcastable arrays (``f_*`` in Hz, ``rate_bps`` in
+    bytes/s, ``li``/``lj`` int cut depths, ``d_*`` unitless weights) —
+    every arithmetic op mirrors the scalar ``pair_cost`` in the same
+    order, so the results are bit-identical float64 (the property tests
+    assert exact equality).  This is the planning kernel behind the
+    fleet-scale cost matrix (``pairing.pair_cost_matrix``), the
+    vectorized ``policy_lengths`` and the batched latency accounting
+    (``latency.round_time_from_partner``).
+    """
+    f_i = np.asarray(f_i, np.float64)
+    f_j = np.asarray(f_j, np.float64)
+    li = np.asarray(li, np.int64)
+    lj = np.asarray(lj, np.int64)
+    phase = np.maximum(li * w.cycles_per_layer / f_i,
+                       lj * w.cycles_per_layer / f_j)
+    compute = 2.0 * 2.0 * phase
+    feat_i, grad_i = boundary_bytes_batch(w, li)
+    feat_j, grad_j = boundary_bytes_batch(w, lj)
+    comm = w.batch_size * np.maximum(d_i * feat_i + d_j * grad_j,
+                                     d_j * feat_j + d_i * grad_i) / rate_bps
     return (alpha * compute + beta * comm) \
         * w.batches_per_epoch * w.local_epochs
 
@@ -159,9 +212,18 @@ class PairContext:
 
 
 class SplitPolicy:
-    """A rule mapping one pair's context to the canonical member's cut."""
+    """A rule mapping one pair's context to the canonical member's cut.
+
+    ``rate_aware`` declares whether the chosen cut depends on the channel
+    realization (link rates): rate-independent policies (``paper``,
+    ``fixed:K``) cut by compute/constants alone, so their cut search is
+    drift-invariant and a ``PlannerCache`` entry never goes stale;
+    rate-aware policies (``latency-opt``) must re-search when the channel
+    drifts beyond the cache tolerance (DESIGN.md §8).
+    """
 
     spec: str = "?"
+    rate_aware: bool = False    # True -> the cut depends on link rates
 
     def pair_cut(self, ctx: PairContext) -> int:
         raise NotImplementedError
@@ -207,6 +269,7 @@ class LatencyOptSplitPolicy(SplitPolicy):
     rule's by construction; ties resolve to the shallowest cut."""
 
     spec = "latency-opt"
+    rate_aware = True
 
     def pair_cut(self, ctx: PairContext) -> int:
         return self.pair_cut_cost(ctx)[0]
@@ -246,27 +309,214 @@ def get_policy(spec) -> SplitPolicy:
                      f"{POLICY_SPECS}")
 
 
+def policy_cut_costs(policy, f_i, f_j, rates, d_i, d_j, workload,
+                     num_layers: int, alpha: float = 1.0, beta: float = 1.0
+                     ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Vectorized ``SplitPolicy.pair_cut_cost`` over candidate-pair arrays.
+
+    ``f_i`` is the canonical (lower-index) member of every candidate pair;
+    all arguments are (P,) arrays (or scalars) over the candidates.
+    Returns ``(cuts, costs)`` — the policy-chosen cut and its Eq. (3) cost
+    per candidate, bit-identical to the scalar ``pair_cut_cost`` loop —
+    or ``None`` for policies without a vectorized form (custom SplitPolicy
+    subclasses), in which case callers fall back to the scalar path.
+    With ``workload=None`` the rate-independent policies still return
+    their cuts, with ``costs=None`` (mirroring the scalar ``pair_cut``,
+    which never consults the workload for them).
+
+    The ``latency-opt`` search batches over the candidate axis and loops
+    the (small) cut axis 1..W-1 with a strict-improvement update, so ties
+    resolve to the shallowest cut exactly like ``np.argmin``'s first-min
+    and peak memory stays O(P), not O(P·W).
+    """
+    policy = get_policy(policy)
+    f_i = np.asarray(f_i, np.float64)
+    f_j = np.asarray(f_j, np.float64)
+    W = int(num_layers)
+
+    def priced(cuts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        if workload is None:
+            return cuts, None
+        return cuts, pair_cost_batch(f_i, f_j, rates, workload, cuts,
+                                     W - cuts, d_i, d_j, alpha, beta)
+
+    if isinstance(policy, PaperSplitPolicy):
+        return priced(paper_cut_batch(f_i, f_j, W))
+    if isinstance(policy, FixedSplitPolicy):
+        k = min(max(policy.k, 1), W - 1)
+        return priced(np.full(f_i.shape, k, np.int64))
+    if isinstance(policy, LatencyOptSplitPolicy):
+        if workload is None:
+            raise ValueError("latency-opt needs a workload model "
+                             "(pass workload= to the plan builder)")
+        best_cut = np.full(f_i.shape, 1, np.int64)
+        _, best = priced(best_cut)
+        for cut in range(2, W):
+            _, cost = priced(np.full(f_i.shape, cut, np.int64))
+            upd = cost < best
+            best = np.where(upd, cost, best)
+            best_cut[upd] = cut
+        return best_cut, best
+    return None
+
+
+def price_cuts(cuts, f_i, f_j, rates, d_i, d_j, workload, num_layers: int,
+               alpha: float = 1.0, beta: float = 1.0) -> np.ndarray:
+    """Re-price GIVEN per-candidate cuts on a (possibly drifted) channel:
+    the O(P) half of a re-plan, with no O(P·W) cut re-search — what a
+    ``PlannerCache`` hit executes (DESIGN.md §8)."""
+    cuts = np.asarray(cuts, np.int64)
+    return pair_cost_batch(np.asarray(f_i, np.float64),
+                           np.asarray(f_j, np.float64), rates, workload,
+                           cuts, int(num_layers) - cuts, d_i, d_j,
+                           alpha, beta)
+
+
+# ---------------------------------------------------------------------------
+# cross-round cut-search cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _CacheEntry:
+    cuts: np.ndarray        # (P,) policy-optimal cuts at fill time
+    cost0: np.ndarray       # (P,) Eq. (3) costs on the FILL-time channel
+    workload: object = None  # strong ref: an unhashable workload is keyed
+                             # by id(), which is only unique while the
+                             # object is alive — pinning it here makes a
+                             # recycled-id false hit impossible
+
+
+class PlannerCache:
+    """Cross-round cut-search cache for ``pairing.pair_cost_matrix``.
+
+    Entries are keyed on the **drift-invariant** identity of the planning
+    problem — fleet CPU frequencies + dataset weights (positions, hence
+    rates, excluded), workload model, split policy, stack depth and the
+    alpha/beta trade-off — so a re-plan of a kept cohort finds its
+    previous cut search.  On a hit the cached cuts are re-priced on the
+    CURRENT rates (``price_cuts``, O(P)) instead of re-searched (O(P·W)):
+
+    * rate-independent policies (``paper``, ``fixed:K``): the cached cuts
+      are exact on any channel — the entry never goes stale;
+    * rate-aware policies (``latency-opt``): the entry is reused while the
+      re-priced costs moved less than ``tolerance`` (max relative Eq. (3)
+      movement over candidate edges — the same relative-drift scale
+      ``RoundConfig.replan_threshold`` consumes), else it is invalidated
+      and the search re-runs on the drifted channel.
+
+    ``last_status`` after each consult is one of ``"hit"`` (cuts reused),
+    ``"miss"`` (no entry for the key), ``"invalidated"`` (entry drifted
+    beyond tolerance, re-searched); counters accumulate for provenance
+    (``RoundRecord.cut_cache``).  Holds at most ``max_entries`` problems
+    (FIFO) so cohort-sampling drivers cache their recurring cohorts
+    without unbounded growth.  See DESIGN.md §8 for the contract.
+    """
+
+    def __init__(self, tolerance: float = 0.0, max_entries: int = 8):
+        if tolerance < 0:
+            raise ValueError(f"tolerance must be >= 0, got {tolerance}")
+        self.tolerance = float(tolerance)
+        self.max_entries = int(max_entries)
+        self._entries: Dict[Tuple, _CacheEntry] = {}
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+        self.last_status: str = "n/a"
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        """Drop every entry (the driver's explicit lifetime control)."""
+        self._entries.clear()
+        self.last_status = "n/a"
+
+    @staticmethod
+    def problem_key(fleet_cpu_hz, rel_data, workload, policy,
+                    num_layers: int, alpha: float, beta: float) -> Tuple:
+        """The drift-invariant identity of one cut-search problem."""
+        pol = get_policy(policy)
+        try:
+            hash(workload)
+            wkey = workload               # hashable -> equality-checked key
+        except TypeError:                 # unhashable duck-typed workload
+            wkey = id(workload)
+        return (np.asarray(fleet_cpu_hz, np.float64).tobytes(),
+                np.asarray(rel_data, np.float64).tobytes(),
+                wkey, pol.spec, int(num_layers), float(alpha), float(beta))
+
+    def consult(self, key: Tuple, rate_aware: bool,
+                reprice: Callable[[np.ndarray], np.ndarray]
+                ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Look up ``key``; on a valid entry return ``(cuts, costs)`` with
+        costs re-priced on the current channel via ``reprice(cuts)``.
+        Returns None (and records miss/invalidation) when the caller must
+        run the full search and ``store`` the result."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            self.last_status = "miss"
+            return None
+        cost = reprice(entry.cuts)
+        if rate_aware:
+            drift = float(np.max(np.abs(cost - entry.cost0) / entry.cost0)) \
+                if entry.cost0.size else 0.0
+            if drift > self.tolerance:
+                del self._entries[key]
+                self.invalidations += 1
+                self.last_status = "invalidated"
+                return None
+        self.hits += 1
+        self.last_status = "hit"
+        return entry.cuts, cost
+
+    def store(self, key: Tuple, cuts: np.ndarray, cost0: np.ndarray,
+              workload: object = None) -> None:
+        """Record a fresh search (FIFO-evicting beyond ``max_entries``).
+        Pass the ``workload`` so id-keyed (unhashable) workloads stay
+        alive as long as their entry does (see ``_CacheEntry``)."""
+        while len(self._entries) >= self.max_entries:
+            del self._entries[next(iter(self._entries))]
+        self._entries[key] = _CacheEntry(cuts=np.array(cuts, np.int64),
+                                         cost0=np.array(cost0, np.float64),
+                                         workload=workload)
+
+
 def policy_lengths(f: np.ndarray, partner: np.ndarray, num_layers: int,
                    policy="paper", *, rates: Optional[np.ndarray] = None,
                    rel_data: Optional[np.ndarray] = None, workload=None,
                    alpha: float = 1.0, beta: float = 1.0) -> np.ndarray:
     """Per-client propagation lengths under a split policy.
 
-    ``rates`` is the (N, N) link-rate matrix and ``rel_data`` the relative
-    dataset sizes — consulted by rate-aware policies; omitted, the comm
-    term sees an infinite-rate link.  Self-paired clients always get the
-    full stack.
+    ``rates`` is the (N, N) link-rate matrix (bytes/s) and ``rel_data``
+    the relative dataset weights — consulted by rate-aware policies;
+    omitted, the comm term sees an infinite-rate link.  Self-paired
+    clients always get the full stack.  Built-in policies take the
+    vectorized path (``policy_cut_costs`` over the canonical pairs);
+    custom SplitPolicy subclasses fall back to the scalar per-pair loop.
     """
     policy = get_policy(policy)
     f = np.asarray(f, np.float64)
     partner = np.asarray(partner, np.int64)
-    if isinstance(policy, PaperSplitPolicy):      # vectorized fast path
+    if isinstance(policy, PaperSplitPolicy):      # fully closed-form
         return paper_lengths(f, partner, num_layers)
     lengths = np.full(len(f), num_layers, np.int64)
-    for i in range(len(f)):
-        j = int(partner[i])
-        if j <= i:
-            continue
+    ci = np.flatnonzero(np.arange(len(f)) < partner)   # canonical members
+    if ci.size == 0:
+        return lengths
+    cj = partner[ci]
+    batched = policy_cut_costs(
+        policy, f[ci], f[cj],
+        rates[ci, cj] if rates is not None else float("inf"),
+        rel_data[ci] if rel_data is not None else 1.0,
+        rel_data[cj] if rel_data is not None else 1.0,
+        workload, num_layers, alpha, beta)
+    if batched is not None:
+        cuts, _ = batched
+        lengths[ci] = cuts
+        lengths[cj] = num_layers - cuts
+        return lengths
+    for i, j in zip(ci, cj):                      # custom-policy fallback
         ctx = PairContext(
             f_i=float(f[i]), f_j=float(f[j]), num_layers=num_layers,
             rate_bps=(float(rates[i, j]) if rates is not None
@@ -328,7 +578,8 @@ class RoundPlan:
     * ``local``        — vanilla FL: everyone runs the full stack.
 
     ``objective`` is the Eq. (4) weighted sum of per-pair Eq. (3) costs
-    over the active pairs (None when no workload model was supplied).
+    (seconds) over the active pairs (None when no workload model was
+    supplied).
     The plan is hashable; ``cache_key()`` is what the engines' step caches
     key on (everything that affects a compiled step's shape).
     """
@@ -418,26 +669,33 @@ def _active_pairs(partner: np.ndarray,
 
 def _pairs_objective(pairs, lengths, cpu_hz, rates, rel, workload,
                      alpha: float, beta: float) -> float:
-    """Eq. (4): the weighted sum of per-pair Eq. (3) costs at the GIVEN
-    lengths — the one arithmetic shared by the plan builders and the
-    adaptive re-pricing of a kept plan on a drifted channel."""
-    total = 0.0
-    for i, j in pairs:
-        rate = float(rates[i, j]) if rates is not None else float("inf")
-        total += pair_cost(
-            float(cpu_hz[i]), float(cpu_hz[j]), rate, workload,
-            int(lengths[i]), int(lengths[j]),
-            float(rel[i]), float(rel[j]), alpha, beta)
-    return total
+    """Eq. (4): the weighted sum of per-pair Eq. (3) costs (seconds) at
+    the GIVEN lengths — the one arithmetic shared by the plan builders and
+    the adaptive re-pricing of a kept plan on a drifted channel.
+    Vectorized over the pairs (``pair_cost_batch``)."""
+    if not pairs:
+        return 0.0
+    idx = np.asarray(pairs, np.int64)
+    i, j = idx[:, 0], idx[:, 1]
+    cpu = np.asarray(cpu_hz, np.float64)
+    rel = np.asarray(rel, np.float64)
+    lengths = np.asarray(lengths, np.int64)
+    rate = rates[i, j] if rates is not None else float("inf")
+    return float(np.sum(pair_cost_batch(
+        cpu[i], cpu[j], rate, workload, lengths[i], lengths[j],
+        rel[i], rel[j], alpha, beta)))
 
 
 def plan_objective(plan: "RoundPlan", fleet, chan, workload,
                    alpha: float = 1.0, beta: float = 1.0,
                    rates: Optional[np.ndarray] = None) -> float:
     """Re-price an existing plan's SCHEDULE (pairs + lengths, unchanged)
-    on a fleet/channel realization — what the adaptive round driver
-    compares against ``replan_threshold`` to decide whether the channel
-    drift is worth a re-matching (and a recompile)."""
+    on a fleet/channel realization: the Eq. (4) objective (seconds, the
+    alpha/beta-weighted sum of per-pair Eq. (3) costs) at the CURRENT
+    rates — what the adaptive round driver compares against
+    ``replan_threshold`` to decide whether the channel drift is worth a
+    re-matching (and a recompile).  Vectorized over the pairs, so
+    re-pricing a kept fleet-scale plan is O(N), not a search."""
     if rates is None and chan is not None:
         rates = fleet.rates(chan)
     rel = np.asarray(fleet.data_sizes, np.float64)
@@ -492,23 +750,29 @@ def build_joint_plan(fleet, chan, num_layers: int, *,
                      granularity: int = 1, server_cut: int = 0,
                      alpha: float = 1.0, beta: float = 1.0,
                      rates: Optional[np.ndarray] = None,
-                     seed: int = 0) -> RoundPlan:
+                     seed: int = 0,
+                     cache: Optional[PlannerCache] = None) -> RoundPlan:
     """Solve Problem 1 jointly: pairing AND cuts chosen together.
 
     The pairing policy sees the true Eq. (3) cost of every candidate edge
-    at its ``split_policy``-optimal cut (``pairing.pair_cost_matrix``);
-    the winning matching is then cut by the same policy, so the plan's
-    Eq. (4) objective equals the matrix sum over the selected edges.  The
-    returned plan is the BETTER of the joint candidate and the sequential
-    (paper-weight pairing, then cuts) reference — hence its objective is
-    <= the sequential ``build_round_plan``'s **by construction**, even for
-    selectors without an optimality guarantee (the ascending greedy).  The
+    at its ``split_policy``-optimal cut (``pairing.pair_cost_matrix``, the
+    vectorized planning kernel); the winning matching is then cut by the
+    same policy, so the plan's Eq. (4) objective equals the matrix sum
+    over the selected edges.  The returned plan is the BETTER of the joint
+    candidate and the sequential (paper-weight Alg.-1 pairing, then cuts)
+    reference — hence its objective is <= the sequential
+    ``build_round_plan``'s **by construction**, even for selectors without
+    an optimality guarantee (the ascending greedy) and even when a
+    ``cache`` hit priced the candidate edges at slightly-stale cuts (the
+    final comparison always uses freshly-searched true objectives).  The
     reference objective is recorded as ``seq_objective``.
 
     Cohort sub-problems (``active``) are priced with FULL-fleet-normalized
     dataset weights so the joint objective is exactly comparable to the
     sequential plan built over the same cohort.  ``seed`` feeds the
-    ``random`` pairing policy (the driver draws it from its rng).
+    ``random`` pairing policy (the driver draws it from its rng);
+    ``cache`` is the cross-round ``PlannerCache`` the cost-matrix cut
+    search consults (DESIGN.md §8).
     """
     from repro.core import latency as latency_mod
     from repro.core import pairing as pairing_mod
@@ -527,7 +791,7 @@ def build_joint_plan(fleet, chan, num_layers: int, *,
     pol = pairing_mod.get_pairing_policy(pair_policy)
     ctx = pairing_mod.PairingContext(
         num_layers=num_layers, workload=workload, split_policy=split_policy,
-        alpha=alpha, beta=beta, seed=seed,
+        alpha=alpha, beta=beta, seed=seed, cache=cache,
         rates=(rates[np.ix_(cohort, cohort)] if rates is not None else None),
         rel_data=rel[cohort])
 

@@ -19,7 +19,12 @@ DESIGN.md §5):
    ADAPTIVE: the previous plan is re-priced on the drifted channel
    (``planning.plan_objective``) and kept — same pairing, same compiled
    steps — unless its objective moved by more than the threshold
-   (relative) or the cohort changed (DESIGN.md §7),
+   (relative) or the cohort changed (DESIGN.md §7).  Cost-driven
+   re-matchings consult the driver's cross-round ``PlannerCache``: a
+   kept cohort's candidate-edge cut search is reused (cuts re-priced on
+   the current rates, O(N^2)) instead of re-run (O(N^2 W)), invalidated
+   by the same relative-drift signal (``RoundRecord.cut_cache`` records
+   hit/miss/invalidated per round; DESIGN.md §8),
 4. executes ``batches_per_round`` fed steps on one of the three FedPairing
    engines — vmapped / bucketed / dist — or one of the paper's baselines
    (vanilla FL / vanilla SL / SplitFed from ``core.baselines``),
@@ -90,6 +95,11 @@ class RoundConfig:
                                         # previous plan while its re-priced
                                         # objective moved less than this
                                         # (relative); 0 -> re-plan each round
+    cut_cache: bool = True              # cross-round cut-search cache for
+                                        # cost-driven pairing (re-plans
+                                        # re-price cached cuts instead of
+                                        # re-searching; tolerance =
+                                        # replan_threshold, DESIGN.md §8)
     lr: float = 0.05
     aggregation: str = "paper"          # paper | fedavg (DESIGN.md §3)
     overlap_boost: bool = True
@@ -144,6 +154,12 @@ class RoundRecord:
     objective: Optional[float] = None    # Eq. (4) of the executed plan
     replanned: bool = True               # False -> adaptive keep (no
                                          # re-matching, cached steps reused)
+    cut_cache: str = "n/a"               # cut-search cache provenance:
+                                         # hit | miss | invalidated (a
+                                         # re-matching consulted the
+                                         # PlannerCache), kept (no
+                                         # re-matching), n/a (weight
+                                         # policy / cache disabled)
 
 
 @dataclasses.dataclass
@@ -310,6 +326,18 @@ class RoundDriver:
         self._gparams = self.init_fn(jax.random.key(rc.seed))
         self._engine = None
         self._baseline_step = None
+        # cross-round cut-search cache (DESIGN.md §8): re-plans of a kept
+        # cohort re-price the cached candidate-edge cuts instead of
+        # re-searching them; invalidated by the same relative-drift signal
+        # replan_threshold consumes.  Lifetime = driver lifetime (the
+        # drift-invariant key carries the cohort identity, so resampled
+        # cohorts key their own entries).
+        self._cost_driven = pairing.get_pairing_policy(
+            rc.resolved_pair_policy).cost_driven
+        self.plan_cache = planning.PlannerCache(
+            tolerance=rc.replan_threshold) \
+            if (rc.cut_cache and rc.algorithm == "fedpairing"
+                and self._cost_driven) else None
         if rc.algorithm == "fedpairing":
             self._engine = _ENGINE_CLASSES[rc.engine](
                 cfg, rc, self.n, self._gparams, self.loss_fn)
@@ -376,7 +404,8 @@ class RoundDriver:
             history=state.history + [record], plan=plan)
 
     def _record(self, state, cohort, pairs, lengths, mean_loss, round_s,
-                cached, objective=None, replanned=True) -> RoundRecord:
+                cached, objective=None, replanned=True,
+                cut_cache="n/a") -> RoundRecord:
         return RoundRecord(
             round=state.round, cohort=tuple(int(c) for c in cohort),
             pairs=pairs, lengths=tuple(int(l) for l in lengths),
@@ -384,7 +413,7 @@ class RoundDriver:
             sim_total_s=float(state.sim_time_s + round_s),
             cached_steps=cached,
             objective=None if objective is None else float(objective),
-            replanned=bool(replanned))
+            replanned=bool(replanned), cut_cache=str(cut_cache))
 
     def round_plan(self, fleet: ClientFleet, partner: np.ndarray,
                    active: np.ndarray, num_layers: Optional[int] = None
@@ -425,7 +454,8 @@ class RoundDriver:
                 fleet, self.chan, self.cfg.num_layers, pair_policy=policy,
                 split_policy=rc.split_policy, workload=self.workload,
                 active=active, granularity=rc.bucket_granularity,
-                server_cut=rc.server_cut, seed=pair_seed)
+                server_cut=rc.server_cut, seed=pair_seed,
+                cache=self.plan_cache)
         ctx = pairing.PairingContext(
             num_layers=self.cfg.num_layers, workload=self.workload,
             split_policy=rc.split_policy, seed=pair_seed)
@@ -478,9 +508,16 @@ class RoundDriver:
         round_s = latency.round_time_plan(
             self._latency_plan(fleet, partner, active, plan), fleet,
             self.chan, self.workload)
+        if self.plan_cache is None:      # weight policy / cache disabled
+            cut_cache = "n/a"
+        elif not replanned:
+            cut_cache = "kept"
+        else:
+            cut_cache = self.plan_cache.last_status
         rec = self._record(state, cohort, plan.pairs, plan.lengths,
                            mean_loss, round_s, self._engine.cached_steps,
-                           objective=plan.objective, replanned=replanned)
+                           objective=plan.objective, replanned=replanned,
+                           cut_cache=cut_cache)
         return rec, params, None, anchor
 
     def _fl_round(self, state, fleet, cohort, active, pair_seed):

@@ -37,7 +37,7 @@ from repro.core import latency, planning, rounds
 from repro.core.latency import ChannelModel
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="tinyllama-1.1b")
     ap.add_argument("--clients", type=int, default=8)
@@ -71,7 +71,11 @@ def main() -> None:
     ap.add_argument("--aggregation", choices=["paper", "fedavg"],
                     default="paper")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     cfg = get_smoke_config(args.arch)
     n = args.clients
@@ -115,13 +119,15 @@ def main() -> None:
         t0 = time.time()
         state = driver.run_round(state)
         r = state.history[-1]
+        cache_note = "" if r.cut_cache == "n/a" \
+            else f", cut cache {r.cut_cache}"
         print(f"  round {r.round}: pairs {list(r.pairs)} "
               f"lengths {list(r.lengths)} (W={cfg.num_layers}) "
               f"mean client loss {r.mean_loss:.4f} "
               f"sim {r.sim_round_s:.1f}s "
               f"({r.cached_steps} compiled steps, "
-              f"{'replanned' if r.replanned else 'kept plan'}, "
-              f"{time.time() - t0:.1f}s wall)")
+              f"{'replanned' if r.replanned else 'kept plan'}"
+              f"{cache_note}, {time.time() - t0:.1f}s wall)")
     print(f"[fed] total simulated wall-clock: {state.sim_time_s:.1f}s")
 
 

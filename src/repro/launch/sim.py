@@ -103,12 +103,14 @@ def run_sim(args) -> rounds.RoundState:
         t0 = time.time()
         state = driver.run_round(state)
         r = state.history[-1]
+        cache_note = "" if r.cut_cache == "n/a" \
+            else f", cut cache {r.cut_cache}"
         print(f"  round {r.round}: cohort={list(r.cohort)} "
               f"pairs={list(r.pairs)} loss={r.mean_loss:.4f} "
               f"sim={r.sim_round_s:.1f}s (total {r.sim_total_s:.1f}s, "
               f"{r.cached_steps} compiled steps, "
-              f"{'replanned' if r.replanned else 'kept plan'}, "
-              f"{time.time()-t0:.1f}s wall)")
+              f"{'replanned' if r.replanned else 'kept plan'}"
+              f"{cache_note}, {time.time()-t0:.1f}s wall)")
     print(f"[sim] simulated wall-clock for {args.rounds} rounds: "
           f"{state.sim_time_s:.1f}s")
     if args.json:

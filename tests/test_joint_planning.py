@@ -134,6 +134,249 @@ class TestCostMatrix:
                 <= sum(cost[p] for p in start) + 1e-9
 
 
+def _random_workload(seed: int, num_layers: int = 12) -> WorkloadModel:
+    """Random fleet workload; odd seeds carry per-cut boundary profiles
+    so the batched profile lookup is exercised too."""
+    rng = np.random.default_rng(seed)
+    kw = {}
+    if seed % 2 == 1:
+        kw = dict(
+            feature_profile=tuple(rng.uniform(1e4, 5e5, num_layers - 1)),
+            grad_profile=tuple(rng.uniform(1e4, 5e5, num_layers - 1)))
+    return WorkloadModel(num_layers=num_layers,
+                         cycles_per_layer=float(rng.uniform(1e7, 5e8)),
+                         batch_size=int(rng.integers(1, 64)), **kw)
+
+
+class TestVectorizedCostMatrix:
+    """The ISSUE-5 tentpole contract: the vectorized planning kernel is
+    BIT-IDENTICAL float64 to the scalar reference loop (same IEEE ops in
+    the same order), across policies, fleets and workloads."""
+
+    @given(n=st.integers(2, 14), seed=st.integers(0, 30),
+           sp=st.sampled_from(["paper", "latency-opt", "fixed:5"]))
+    @settings(max_examples=40, deadline=None)
+    def test_vectorized_equals_scalar_reference_elementwise(self, n, seed,
+                                                            sp):
+        fleet = latency.make_fleet(n=n, seed=seed)
+        w = _random_workload(seed)
+        cost_v, cuts_v = pairing.pair_cost_matrix(fleet, CHAN, 12, w,
+                                                  split_policy=sp)
+        cost_s, cuts_s = pairing.pair_cost_matrix_reference(
+            fleet, CHAN, 12, w, split_policy=sp)
+        assert np.array_equal(cost_v, cost_s)    # exact, not approx
+        assert np.array_equal(cuts_v, cuts_s)
+
+    def test_pair_cost_batch_bit_identical_to_scalar(self):
+        rng = np.random.default_rng(3)
+        w = _random_workload(5, num_layers=10)
+        f_i = rng.uniform(0.1e9, 2e9, 50)
+        f_j = rng.uniform(0.1e9, 2e9, 50)
+        r = rng.uniform(1e5, 1e9, 50)
+        li = rng.integers(1, 10, 50)
+        d_i, d_j = rng.uniform(0, 1, 50), rng.uniform(0, 1, 50)
+        batch = planning.pair_cost_batch(f_i, f_j, r, w, li, 10 - li,
+                                         d_i, d_j, alpha=0.7, beta=1.3)
+        for k in range(50):
+            assert batch[k] == planning.pair_cost(
+                float(f_i[k]), float(f_j[k]), float(r[k]), w, int(li[k]),
+                int(10 - li[k]), float(d_i[k]), float(d_j[k]), 0.7, 1.3)
+
+    def test_policy_lengths_vectorized_matches_scalar_pair_cut(self):
+        """policy_lengths' batched fast path must agree with the scalar
+        per-pair pair_cut for every built-in policy."""
+        fleet = latency.make_fleet(n=9, seed=4)
+        w = _random_workload(4)
+        partner = planning.partner_from_pairs(
+            pairing.fedpairing_pairing(fleet, CHAN), 9)
+        rates = fleet.rates(CHAN)
+        rel = np.asarray(fleet.data_sizes, np.float64)
+        rel = rel / rel.sum()
+        for sp in ("paper", "latency-opt", "fixed:3"):
+            pol = planning.get_policy(sp)
+            lengths = planning.policy_lengths(
+                fleet.cpu_hz, partner, 12, pol, rates=rates, rel_data=rel,
+                workload=w)
+            for i in range(9):
+                j = int(partner[i])
+                if j <= i:
+                    continue
+                ctx = planning.PairContext(
+                    f_i=float(fleet.cpu_hz[i]), f_j=float(fleet.cpu_hz[j]),
+                    num_layers=12, rate_bps=float(rates[i, j]),
+                    d_i=float(rel[i]), d_j=float(rel[j]), workload=w)
+                assert lengths[i] == pol.pair_cut(ctx)
+                assert lengths[j] == 12 - lengths[i]
+
+    def test_custom_policy_falls_back_to_reference(self):
+        """A SplitPolicy subclass with only the scalar pair_cut still
+        works (scalar loop), it just skips the vectorized kernel."""
+        class MidCut(planning.SplitPolicy):
+            spec = "custom-mid"
+
+            def pair_cut(self, ctx):
+                return max(1, ctx.num_layers // 3)
+
+        fleet = latency.make_fleet(n=6, seed=0)
+        w = WorkloadModel(num_layers=12)
+        cost, cuts = pairing.pair_cost_matrix(fleet, CHAN, 12, w,
+                                              split_policy=MidCut())
+        assert np.all(cuts[np.triu_indices(6, 1)] == 4)
+        assert np.all(np.isfinite(cost[np.triu_indices(6, 1)]))
+
+
+class TestPlannerCache:
+    """Cross-round cut-search cache (DESIGN.md §8): kept cohorts hit and
+    re-price; drifted channels invalidate rate-aware entries; the
+    rate-independent policies never go stale."""
+
+    def _matrix(self, fleet, w, cache, sp="latency-opt"):
+        return pairing.pair_cost_matrix(fleet, CHAN, 18, w,
+                                        split_policy=sp, cache=cache)
+
+    def test_kept_cohort_hits_with_identical_result(self):
+        fleet = latency.make_fleet(n=10, seed=0)
+        w = WorkloadModel(num_layers=18)
+        cache = planning.PlannerCache(tolerance=0.0)
+        c1, k1 = self._matrix(fleet, w, cache)
+        assert cache.last_status == "miss" and cache.misses == 1
+        c2, k2 = self._matrix(fleet, w, cache)
+        assert cache.last_status == "hit" and cache.hits == 1
+        assert np.array_equal(c1, c2) and np.array_equal(k1, k2)
+
+    def test_kept_cohort_hit_builds_identical_round_plan(self):
+        """The satellite acceptance: a cache hit must reproduce the SAME
+        RoundPlan a cold search would build."""
+        fleet = latency.make_fleet(n=12, seed=3)
+        w = WorkloadModel(num_layers=18)
+        cache = planning.PlannerCache(tolerance=0.0)
+        kw = dict(pair_policy="greedy-cost", split_policy="latency-opt",
+                  workload=w)
+        cold = planning.build_joint_plan(fleet, CHAN, 18, **kw)
+        planning.build_joint_plan(fleet, CHAN, 18, cache=cache, **kw)
+        hit = planning.build_joint_plan(fleet, CHAN, 18, cache=cache, **kw)
+        assert cache.last_status == "hit"
+        assert hit == cold
+
+    def test_drifted_channel_invalidates_and_matches_fresh_search(self):
+        fleet = latency.make_fleet(n=10, seed=1)
+        w = WorkloadModel(num_layers=18)
+        cache = planning.PlannerCache(tolerance=0.0)
+        self._matrix(fleet, w, cache)
+        drifted = latency.drift_fleet(fleet, np.random.default_rng(7),
+                                      sigma_m=40.0)
+        c, k = self._matrix(drifted, w, cache)
+        assert cache.last_status == "invalidated"
+        ref_c, ref_k = pairing.pair_cost_matrix_reference(
+            drifted, CHAN, 18, w, split_policy="latency-opt")
+        assert np.array_equal(c, ref_c) and np.array_equal(k, ref_k)
+
+    def test_tolerant_hit_reprices_cached_cuts_on_new_rates(self):
+        """Within tolerance the cached CUTS are kept and the COSTS follow
+        the drifted channel — exactly price_cuts of the old cuts."""
+        fleet = latency.make_fleet(n=8, seed=2)
+        w = WorkloadModel(num_layers=18)
+        cache = planning.PlannerCache(tolerance=10.0)
+        _, k1 = self._matrix(fleet, w, cache)
+        drifted = latency.drift_fleet(fleet, np.random.default_rng(5),
+                                      sigma_m=5.0)
+        c2, k2 = self._matrix(drifted, w, cache)
+        assert cache.last_status == "hit"
+        assert np.array_equal(k1, k2)            # cuts reused
+        # ... while the costs track the DRIFTED rates at those cuts
+        iu, ju = np.triu_indices(8, 1)
+        rel = np.asarray(fleet.data_sizes, np.float64)
+        rel = rel / rel.sum()
+        rates = drifted.rates(CHAN)
+        expect = planning.price_cuts(
+            k2[iu, ju], drifted.cpu_hz[iu], drifted.cpu_hz[ju],
+            rates[iu, ju], rel[iu], rel[ju], w, 18)
+        assert np.array_equal(c2[iu, ju], expect)
+
+    def test_rate_independent_policy_never_invalidates(self):
+        """paper/fixed cuts don't depend on rates: even a huge drift is a
+        hit, and the re-priced matrix equals a fresh search exactly."""
+        fleet = latency.make_fleet(n=9, seed=6)
+        w = WorkloadModel(num_layers=18)
+        for sp in ("paper", "fixed:7"):
+            cache = planning.PlannerCache(tolerance=0.0)
+            self._matrix(fleet, w, cache, sp=sp)
+            drifted = latency.drift_fleet(fleet, np.random.default_rng(1),
+                                          sigma_m=80.0)
+            c, k = self._matrix(drifted, w, cache, sp=sp)
+            assert cache.last_status == "hit"
+            ref_c, ref_k = pairing.pair_cost_matrix_reference(
+                drifted, CHAN, 18, w, split_policy=sp)
+            assert np.array_equal(c, ref_c) and np.array_equal(k, ref_k)
+
+    def test_key_separates_workload_policy_and_fleet(self):
+        fleet = latency.make_fleet(n=6, seed=0)
+        w = WorkloadModel(num_layers=18)
+        cache = planning.PlannerCache()
+        self._matrix(fleet, w, cache)
+        self._matrix(fleet, WorkloadModel(num_layers=18, batch_size=64),
+                     cache)
+        assert cache.last_status == "miss"
+        self._matrix(fleet, w, cache, sp="paper")
+        assert cache.last_status == "miss"
+        self._matrix(latency.make_fleet(n=6, seed=9), w, cache)
+        assert cache.last_status == "miss"
+        self._matrix(fleet, w, cache)
+        assert cache.last_status == "hit"        # original entry retained
+
+    def test_eviction_bounds_entries(self):
+        fleet = latency.make_fleet(n=4, seed=0)
+        cache = planning.PlannerCache(max_entries=2)
+        for k in range(4):
+            self._matrix(fleet, WorkloadModel(num_layers=18,
+                                              batch_size=2 + k), cache)
+        assert len(cache) == 2
+
+    def test_negative_tolerance_rejected(self):
+        with pytest.raises(ValueError, match="tolerance"):
+            planning.PlannerCache(tolerance=-0.1)
+
+
+class TestScaledSelectors:
+    def test_assignment_pairing_valid_and_near_greedy(self):
+        """The fleet-scale Hungarian-relaxation selector returns a valid
+        perfect matching whose total is not worse than the min-cost
+        greedy's 2-opt optimum (it ends in the same 2-opt polish)."""
+        fleet = latency.make_fleet(n=80, seed=0)
+        w = WorkloadModel(num_layers=18)
+        cost, _ = pairing.pair_cost_matrix(fleet, CHAN, 18, w,
+                                           split_policy="latency-opt")
+        pa = pairing.min_cost_assignment_pairing(cost)
+        pairing.validate_matching(pa, 80)
+        assert len(pa) == 40
+        pg = pairing.min_cost_greedy_pairing(cost)
+        total = lambda ps: sum(cost[p] for p in ps)   # noqa: E731
+        assert total(pa) <= total(pg) * 1.05
+
+    def test_blossom_dispatches_to_assignment_at_scale(self):
+        """Above the exact-blossom ceiling the policy still returns a
+        valid matching (the scipy path)."""
+        n = pairing._BLOSSOM_EXACT_MAX_N + 2
+        fleet = latency.make_fleet(n=n, seed=1)
+        w = WorkloadModel(num_layers=18)
+        pol = pairing.get_pairing_policy("blossom-cost")
+        pairs = pol.pair(fleet, CHAN, _ctx(w))
+        pairing.validate_matching(pairs, n)
+        assert len(pairs) == n // 2
+
+    def test_bulk_two_opt_matches_only_improving_contract(self):
+        rng = np.random.default_rng(0)
+        n = 2 * (pairing._TWO_OPT_BULK_MIN_PAIRS + 8)
+        cost = rng.uniform(1.0, 100.0, (n, n))
+        cost = (cost + cost.T) / 2
+        np.fill_diagonal(cost, np.inf)
+        start = pairing.random_pairing(n, seed=0)
+        refined = pairing.two_opt_refine(start, cost)
+        pairing.validate_matching(refined, n)
+        assert sum(cost[p] for p in refined) \
+            <= sum(cost[p] for p in start) + 1e-9
+
+
 class TestJointPlan:
     @given(n=st.integers(2, 12), seed=st.integers(0, 30),
            sp=st.sampled_from(["paper", "latency-opt"]))

@@ -302,6 +302,47 @@ class TestAdaptiveJointPlanning:
         s = _driver("vmapped", rounds=4, drift_sigma_m=10.0).run()
         assert all(r.replanned for r in s.history)
 
+    def test_cut_cache_provenance_recorded(self):
+        """Cost-driven re-matchings consult the driver's PlannerCache:
+        static channel + full participation -> round 1 fills (miss),
+        later rounds re-price the cached cut search (hit) with identical
+        pairings; weight policies never touch the cache (n/a)."""
+        d = _driver("vmapped", rounds=3, participation=1.0,
+                    drift_sigma_m=0.0, pair_policy="greedy-cost",
+                    split_policy="latency-opt")
+        s = d.run()
+        assert [r.cut_cache for r in s.history] == ["miss", "hit", "hit"]
+        assert len({r.pairs for r in s.history}) == 1
+        assert d.plan_cache.hits == 2 and d.plan_cache.misses == 1
+        s_w = _driver("vmapped", rounds=2).run()
+        assert all(r.cut_cache == "n/a" for r in s_w.history)
+
+    def test_cut_cache_drift_invalidation_and_kept_plans(self):
+        """Under drift with zero tolerance every re-match invalidates the
+        rate-aware entry; with a tolerant threshold kept rounds are
+        marked 'kept' (no re-matching at all).  Disabling the cache
+        (cut_cache=False) records n/a and builds identical plans."""
+        d = _driver("vmapped", rounds=3, participation=1.0,
+                    drift_sigma_m=10.0, pair_policy="greedy-cost",
+                    split_policy="latency-opt")
+        s = d.run()
+        assert s.history[0].cut_cache == "miss"
+        assert all(r.cut_cache == "invalidated" for r in s.history[1:])
+        s_keep = _driver("vmapped", rounds=3, participation=1.0,
+                         drift_sigma_m=1.0, pair_policy="greedy-cost",
+                         split_policy="latency-opt",
+                         replan_threshold=1e9).run()
+        assert [r.cut_cache for r in s_keep.history] \
+            == ["miss", "kept", "kept"]
+        s_off = _driver("vmapped", rounds=3, participation=1.0,
+                        drift_sigma_m=10.0, pair_policy="greedy-cost",
+                        split_policy="latency-opt", cut_cache=False).run()
+        assert all(r.cut_cache == "n/a" for r in s_off.history)
+        for r_on, r_off in zip(s.history, s_off.history):
+            assert r_on.pairs == r_off.pairs
+            assert r_on.lengths == r_off.lengths
+            assert r_on.objective == pytest.approx(r_off.objective)
+
     def test_cohort_change_forces_replan(self):
         """A kept plan is only valid for ITS cohort: when participation
         sampling changes the cohort, the driver must re-match even under
