@@ -1,0 +1,161 @@
+"""Fault-tolerance suite — round-time / loss degradation vs fault rate,
+graceful degradation vs naive abort (DESIGN.md §9).
+
+One ``core.rounds.RoundDriver`` fleet is swept over fault rates (dropout
+AND per-attempt link outage set to the same rate; deadline at 2x the
+fault-free Eq. (3) round time).  At each rate the SAME seed runs twice —
+``mode="graceful"`` (survivors re-pair / go solo, late units excluded
+from aggregation) vs ``mode="abort"`` (any failure voids the round and
+still pays the straggler-bounded clock) — so the two traces see identical
+cohorts, channel realizations and fault draws, and the per-round
+comparison is exact:
+
+* graceful round time <= abort round time at EVERY round of EVERY rate
+  (the deadline-capped clock construction; asserted here and re-checked
+  by ``scripts/bench_smoke.sh``),
+* at rate 0.2 graceful completes every round with a finite loss while
+  abort loses at least as many rounds as graceful skips (asserted),
+* a zero-rate ``FaultConfig`` produces a trace bit-identical to the
+  fault-free driver (``faults=None``) — the zero-cost contract
+  (``zero_fault_identical``; asserted).
+
+Writes machine-readable ``BENCH_faults.json`` at the repo root
+(``tiny=True`` smoke runs write ``BENCH_faults_tiny.json``); schema in
+``benchmarks/README.md``:
+
+    {"config": {"clients": .., "rounds": .., "batches_per_round": ..,
+                "deadline_factor": .., "seed": ..},
+     "zero_fault_identical": true,
+     "graceful_never_worse": true,
+     "rates": {"<rate>": {"graceful" | "abort":
+                   {"mean_round_s": .., "total_s": ..,
+                    "completed": .., "lost": .., "degraded": ..,
+                    "retries": .., "final_loss": ..,
+                    "round_s": [..], "statuses": [..]}}, ...}}
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import faults, latency, rounds
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_ROOT, "BENCH_faults.json")
+TINY_JSON_PATH = os.path.join(_ROOT, "BENCH_faults_tiny.json")
+
+RATES = (0.0, 0.1, 0.2, 0.3)
+TINY_RATES = (0.0, 0.2)
+DEADLINE_FACTOR = 2.0
+SEED = 0
+
+
+def _driver(cfg, fleet, n, rounds_n, fc: Optional[faults.FaultConfig]):
+    rc = rounds.RoundConfig(
+        algorithm="fedpairing", engine="vmapped", rounds=rounds_n,
+        batches_per_round=2, participation=1.0, drift_sigma_m=2.0,
+        seed=SEED, faults=fc)
+    return rounds.RoundDriver(cfg, rc, fleet)
+
+
+def _fault_cfg(rate: float, mode: str) -> faults.FaultConfig:
+    return faults.FaultConfig(dropout=rate, outage=rate,
+                              deadline_factor=DEADLINE_FACTOR, mode=mode,
+                              seed=1)
+
+
+def _trace_stats(history) -> Dict:
+    trained = [r for r in history if r.status in ("ok", "degraded")]
+    lost = [r for r in history if r.status in ("skipped", "aborted")]
+    finite = [r.mean_loss for r in trained if math.isfinite(r.mean_loss)]
+    return {
+        "mean_round_s": float(np.mean([r.sim_round_s for r in history])),
+        "total_s": float(history[-1].sim_total_s),
+        "completed": len(trained),
+        "lost": len(lost),
+        "degraded": sum(1 for r in history if r.status == "degraded"),
+        "retries": int(sum(r.retries for r in history)),
+        "final_loss": float(finite[-1]) if finite else None,
+        "round_s": [float(r.sim_round_s) for r in history],
+        "statuses": [r.status for r in history],
+    }
+
+
+def run(tiny: bool = False) -> List[Dict]:
+    cfg = get_smoke_config("tinyllama-1.1b").with_overrides(
+        num_layers=4)
+    n = 4 if tiny else 8
+    rounds_n = 3 if tiny else 6
+    rates = TINY_RATES if tiny else RATES
+    fleet = latency.make_fleet(n=n, seed=SEED)
+
+    rows: List[Dict] = []
+    out: Dict = {"tiny": tiny,
+                 "config": {"clients": n, "rounds": rounds_n,
+                            "batches_per_round": 2,
+                            "deadline_factor": DEADLINE_FACTOR,
+                            "seed": SEED},
+                 "rates": {}}
+
+    # zero-cost contract: rate-0 FaultConfig == no FaultConfig, bit for bit
+    base = _driver(cfg, fleet, n, rounds_n, None).run()
+    zero = _driver(cfg, fleet, n, rounds_n,
+                   faults.FaultConfig(seed=1)).run()
+    out["zero_fault_identical"] = base.history == zero.history
+    assert out["zero_fault_identical"], \
+        "zero-rate FaultConfig changed the fault-free trace"
+
+    never_worse = True
+    for rate in rates:
+        per_rate: Dict = {}
+        for mode in faults.FAULT_MODES:
+            t0 = time.perf_counter()
+            state = _driver(cfg, fleet, n, rounds_n,
+                            _fault_cfg(rate, mode)).run()
+            stats = _trace_stats(state.history)
+            per_rate[mode] = stats
+            rows.append({
+                "name": f"faults/rate{rate}/{mode}",
+                "us_per_call": (time.perf_counter() - t0) * 1e6,
+                "derived": (
+                    f"mean_round_s={stats['mean_round_s']:.1f} "
+                    f"completed={stats['completed']}/{rounds_n} "
+                    f"lost={stats['lost']} retries={stats['retries']}"),
+            })
+        g, a = per_rate["graceful"], per_rate["abort"]
+        # identical fault draws -> exact per-round comparison
+        if any(gs > as_ + 1e-9 for gs, as_ in zip(g["round_s"],
+                                                  a["round_s"])):
+            never_worse = False
+        assert g["lost"] <= a["lost"], \
+            f"graceful lost more rounds than abort at rate {rate}"
+        out["rates"][str(rate)] = per_rate
+
+    out["graceful_never_worse"] = never_worse
+    assert never_worse, "graceful round exceeded abort round time"
+    headline = out["rates"].get("0.2")
+    if headline is not None:
+        g = headline["graceful"]
+        assert g["completed"] == rounds_n and g["lost"] == 0, \
+            "graceful lost rounds at rate 0.2"
+        assert all(s in ("ok", "degraded") for s in g["statuses"])
+        assert headline["abort"]["lost"] >= g["lost"]
+
+    path = TINY_JSON_PATH if tiny else JSON_PATH
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    rows.append({
+        "name": "faults/json",
+        "us_per_call": 0.0,
+        "derived": f"written={os.path.basename(path)} "
+                   f"zero_fault_identical={out['zero_fault_identical']} "
+                   f"graceful_never_worse={never_worse}",
+    })
+    return rows

@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * fedstep/* — dense-masked vs length-bucketed fed step (DESIGN.md
                 §Perf); also writes machine-readable ``BENCH_fedstep.json``
                 at the repo root so the perf trajectory is tracked per PR.
+  * faults/*  — graceful degradation vs naive abort across fault rates
+                (DESIGN.md §9); writes machine-readable
+                ``BENCH_faults.json``.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
        [--tiny]   (shrunken workloads — CI smoke via scripts/bench_smoke.sh)
@@ -25,7 +28,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: pairing,roundtime,convergence,kernels,"
-                         "fedstep")
+                         "fedstep,faults")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink workloads (smoke/CI; applies to "
                          "pairing/fedstep/roundtime)")
@@ -52,6 +55,9 @@ def main() -> None:
     if only is None or "fedstep" in only:
         from benchmarks import bench_fedstep
         suites.append(functools.partial(bench_fedstep.run, tiny=args.tiny))
+    if only is None or "faults" in only:
+        from benchmarks import bench_faults
+        suites.append(functools.partial(bench_faults.run, tiny=args.tiny))
 
     print("name,us_per_call,derived")
     for run in suites:

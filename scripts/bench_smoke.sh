@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # Benchmark bit-rot guard (tier-1 flow): tiny-config pairing + fedstep +
-# roundtime suites must exit 0 and emit valid machine-readable JSON.
+# roundtime + faults suites must exit 0 and emit valid machine-readable
+# JSON.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only pairing,fedstep,roundtime --tiny
+    python -m benchmarks.run --only pairing,fedstep,roundtime,faults --tiny
 
 python - <<'PY'
 import json
@@ -69,6 +70,41 @@ for name, e in fleets.items():
     assert e["bucketed_ms"] > 0, (name, e)
 print("bench_smoke: BENCH_fedstep_tiny.json OK "
       f"(speedups: {[e['speedup'] for e in fleets.values()]})")
+PY
+
+python - <<'PY'
+import json
+with open("BENCH_faults_tiny.json") as f:
+    d = json.load(f)
+# the zero-cost contract: a rate-0 FaultConfig left the driver trace
+# bit-identical to the fault-free run
+assert d["zero_fault_identical"] is True, d["zero_fault_identical"]
+rates = d.get("rates", {})
+assert len(rates) >= 2 and "0.0" in rates, rates.keys()
+for rate, per_mode in rates.items():
+    for mode in ("graceful", "abort"):
+        e = per_mode.get(mode)
+        assert e is not None, (rate, mode)
+        for key in ("mean_round_s", "total_s", "completed", "lost",
+                    "degraded", "retries", "round_s", "statuses"):
+            assert key in e, (rate, mode, key)
+        assert e["mean_round_s"] > 0, (rate, mode, e)
+    g, a = per_mode["graceful"], per_mode["abort"]
+    # graceful <= abort on the clock at EVERY round of EVERY rate (same
+    # seed, same fault realization; deadline-capped by construction)
+    for k, (gs, as_) in enumerate(zip(g["round_s"], a["round_s"])):
+        assert gs <= as_ + 1e-9, (rate, k, gs, as_)
+    # and graceful never loses more rounds than the naive abort
+    assert g["lost"] <= a["lost"], (rate, g["lost"], a["lost"])
+at02 = rates.get("0.2")
+if at02:
+    assert at02["graceful"]["lost"] == 0, at02["graceful"]
+    assert at02["abort"]["lost"] >= at02["graceful"]["lost"]
+assert d["graceful_never_worse"] is True
+print("bench_smoke: BENCH_faults_tiny.json OK "
+      f"(rates={sorted(rates)}, "
+      f"zero_fault_identical={d['zero_fault_identical']}, "
+      f"graceful_never_worse={d['graceful_never_worse']})")
 PY
 
 python - <<'PY'

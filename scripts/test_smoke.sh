@@ -46,6 +46,10 @@ PY
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m planning
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m pairing
 
+# fault-tolerance suite (DESIGN.md §9): zero-cost contract, graceful
+# degradation, checkpoint/resume exactness
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m faults
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 bash scripts/bench_smoke.sh

@@ -48,6 +48,15 @@ def save_checkpoint(path: str, tree: Pytree, metadata: Dict | None = None
         raise
 
 
+def load_checkpoint_meta(path: str) -> Dict:
+    """The metadata dict alone (leaf payloads not reconstructed) — what
+    the round driver's resume path reads first to validate compatibility
+    and rebuild host-side state (rng, history, plan)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    return payload.get("meta", {}) or {}
+
+
 def load_checkpoint(path: str, like: Pytree) -> Pytree:
     """Restore into the structure of ``like`` (shape/dtype validated)."""
     with open(path, "rb") as f:

@@ -23,7 +23,11 @@ def aggregate(client_params: Dict, agg_w: jnp.ndarray,
     ``active`` (N,) bool restricts the aggregation to a participating
     cohort (partial participation): non-participants' replicas are
     excluded — "paper" becomes the mean over the cohort, "fedavg" the
-    cohort-renormalized weighted mean.
+    cohort-renormalized weighted mean.  An empty cohort (all-False
+    ``active``, or weights summing to zero) raises instead of silently
+    renormalizing by zero into NaN params — a round with no survivors
+    must be SKIPPED by the caller (``rounds`` / ``faults``), never
+    aggregated.
     """
     if mode == "paper":
         if active is None:
@@ -36,10 +40,23 @@ def aggregate(client_params: Dict, agg_w: jnp.ndarray,
             w = w * jnp.asarray(active, jnp.float32)
     else:
         raise ValueError(f"unknown aggregation mode {mode!r}")
-    w = w / jnp.sum(w)
+    total = jnp.sum(w)
+    if float(total) <= 0.0:
+        raise ValueError(
+            "aggregate() called with an empty cohort (aggregation weights "
+            "sum to zero) — dividing would NaN the global params; skip the "
+            "round instead")
+    w = w / total
 
     def wmean(a):
-        return jnp.tensordot(w.astype(a.dtype), a, axes=(0, 0))
+        # hard-mask zero-weight replicas before the weighted sum: 0 * nan
+        # is nan, and an EXCLUDED client's params may legitimately be
+        # garbage (a late straggler that diverged) — exclusion must mean
+        # its values are never read.  Bit-identical when every weight is
+        # positive (jnp.where selects a unchanged).
+        keep = (w > 0).reshape((-1,) + (1,) * (a.ndim - 1))
+        masked = jnp.where(keep, a, jnp.zeros((), a.dtype))
+        return jnp.tensordot(w.astype(a.dtype), masked, axes=(0, 0))
 
     return jax.tree_util.tree_map(wmean, client_params)
 

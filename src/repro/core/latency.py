@@ -265,6 +265,63 @@ def local_full_stack_time(cpu_hz, w: WorkloadModel):
             * 2.0 * w.batches_per_epoch * w.local_epochs)
 
 
+def unit_times_from_partner(partner: np.ndarray, fleet: ClientFleet,
+                            chan: ChannelModel, w: WorkloadModel,
+                            active: Optional[np.ndarray] = None,
+                            lengths: Optional[np.ndarray] = None,
+                            cpu_scale: Optional[np.ndarray] = None,
+                            extra_s: Optional[np.ndarray] = None
+                            ) -> Tuple[Tuple[Tuple[int, ...], ...],
+                                       np.ndarray]:
+    """Per-unit Eq. (3) training times for a partner involution.
+
+    A *unit* is one independently-scheduled flow of the round: a
+    self-paired active client training the full stack solo (``(i,)``), or
+    a canonical pair ``(i, j)`` with ``i < j``.  Returns ``(units,
+    times)`` — the unit membership tuples and their wall times in seconds
+    (no model-upload term; round-level accounting adds it over whichever
+    units survive).  This is the decomposition the fault layer needs:
+    deadlines, stragglers and exclusions act on units, not on the round
+    scalar (``core.faults.faulted_clock``).
+
+    ``cpu_scale`` divides per-client CPU frequency (straggler slowdown
+    divisors >= 1); ``extra_s`` adds per-client seconds to the client's
+    unit — a pair pays the max over its members, so a shared link's
+    retry backoff is not double-counted.  Both default to no-ops with
+    bit-exact arithmetic (``round_time_from_partner`` delegates here).
+    """
+    n = fleet.n
+    act = np.ones(n, bool) if active is None else np.asarray(active, bool)
+    partner = np.asarray(partner, np.int64)
+    idx = np.arange(n)
+    eff = fleet
+    if cpu_scale is not None:
+        scale = np.asarray(cpu_scale, np.float64)
+        eff = dataclasses.replace(
+            fleet, cpu_hz=np.asarray(fleet.cpu_hz, np.float64) / scale)
+    units: List[Tuple[int, ...]] = []
+    times: List[float] = []
+    selfp = act & (partner == idx)
+    if selfp.any():
+        solo = np.atleast_1d(local_full_stack_time(eff.cpu_hz[selfp], w))
+        for i, t in zip(np.flatnonzero(selfp), solo):
+            units.append((int(i),))
+            times.append(float(t))
+    ci = np.flatnonzero(act & (partner > idx))   # canonical pair members
+    if ci.size:
+        rates = fleet.rates(chan)
+        per_pair = _pair_times_batch(ci, partner[ci], eff, rates, w,
+                                     lengths)
+        for i, t in zip(ci, per_pair):
+            units.append((int(i), int(partner[i])))
+            times.append(float(t))
+    if extra_s is not None:
+        ex = np.asarray(extra_s, np.float64)
+        times = [t + float(np.max(ex[list(u)]))
+                 for u, t in zip(units, times)]
+    return tuple(units), np.asarray(times, np.float64)
+
+
 def round_time_from_partner(partner: np.ndarray, fleet: ClientFleet,
                             chan: ChannelModel, w: WorkloadModel,
                             active: Optional[np.ndarray] = None,
@@ -275,31 +332,22 @@ def round_time_from_partner(partner: np.ndarray, fleet: ClientFleet,
     clients pay the full local stack (vanilla-FL-style), inactive clients
     contribute nothing; + model upload over the active cohort only.
     ``lengths`` overrides the per-client split (any policy's plan).
-    Batched over the cohort (``_pair_times_batch``) — at fleet scale the
-    per-round accounting must not cost more than the plan itself."""
+    Batched over the cohort (``unit_times_from_partner``) — at fleet scale
+    the per-round accounting must not cost more than the plan itself."""
     n = fleet.n
     act = np.ones(n, bool) if active is None else np.asarray(active, bool)
     if not act.any():
         return 0.0
-    partner = np.asarray(partner, np.int64)
-    idx = np.arange(n)
-    rates = fleet.rates(chan)
-    worst = -np.inf
-    selfp = act & (partner == idx)
-    if selfp.any():
-        worst = float(np.max(local_full_stack_time(fleet.cpu_hz[selfp], w)))
-    ci = np.flatnonzero(act & (partner > idx))   # canonical pair members
-    if ci.size:
-        times = _pair_times_batch(ci, partner[ci], fleet, rates, w, lengths)
-        worst = max(worst, float(np.max(times)))
-    if worst == -np.inf:
+    units, times = unit_times_from_partner(partner, fleet, chan, w,
+                                           active=act, lengths=lengths)
+    if not units:
         # an active cohort with no self-paired member and no canonical
         # pair member means the active set isn't closed under the pairing
         raise ValueError(f"active cohort {np.flatnonzero(act)} contains "
                          f"no trainable flow under partner {partner}")
     srates = _server_rates(fleet, chan, server_rate_bps)
     upload = float(np.max(w.model_bytes / srates[act]))
-    return worst + upload
+    return float(np.max(times)) + upload
 
 
 def round_time_plan(plan: "planning.RoundPlan", fleet: ClientFleet,

@@ -155,7 +155,8 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
                      alpha: float = 1.0, beta: float = 1.0,
                      rates: Optional[np.ndarray] = None,
                      rel_data: Optional[np.ndarray] = None,
-                     cache: Optional[planning.PlannerCache] = None
+                     cache: Optional[planning.PlannerCache] = None,
+                     fail: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """(N, N) symmetric edge-cost matrix for joint pairing x split search.
 
@@ -179,7 +180,10 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
     ``cache`` (a ``planning.PlannerCache``) reuses a previous round's cut
     search across rounds: on a hit the cached cuts are re-priced on the
     current rates in O(N^2) instead of re-searched in O(N^2 W)
-    (DESIGN.md §8).
+    (DESIGN.md §8).  ``fail`` ((N,) per-client failure probabilities)
+    prices every edge with the expected-latency reliability multiplier
+    (``planning.pair_cost``) — cut-independent, so the cut matrix is
+    unchanged; part of the cache's problem key.
     """
     if workload is None:
         raise ValueError("pair_cost_matrix needs a workload model "
@@ -191,19 +195,26 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
     f_i, f_j = f[iu], f[ju]
     r = rates[iu, ju]
     d_i, d_j = rel_data[iu], rel_data[ju]
+    if fail is None:
+        fl_i = fl_j = 0.0
+    else:
+        fl = np.asarray(fail, np.float64)
+        fl_i, fl_j = fl[iu], fl[ju]
 
     def search():
         return planning.policy_cut_costs(pol, f_i, f_j, r, d_i, d_j,
-                                         workload, num_layers, alpha, beta)
+                                         workload, num_layers, alpha, beta,
+                                         fl_i, fl_j)
 
     if cache is not None:
         key = planning.PlannerCache.problem_key(f, rel_data, workload, pol,
-                                                num_layers, alpha, beta)
+                                                num_layers, alpha, beta,
+                                                fail=fail)
         found = cache.consult(
             key, pol.rate_aware,
             lambda cuts: planning.price_cuts(cuts, f_i, f_j, r, d_i, d_j,
                                              workload, num_layers, alpha,
-                                             beta))
+                                             beta, fl_i, fl_j))
         if found is None:
             found = search()
             if found is not None:
@@ -213,7 +224,8 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
     if found is None:          # custom policy without a vectorized form
         return pair_cost_matrix_reference(
             fleet, chan, num_layers, workload, split_policy=pol,
-            alpha=alpha, beta=beta, rates=rates, rel_data=rel_data)
+            alpha=alpha, beta=beta, rates=rates, rel_data=rel_data,
+            fail=fail)
     cvec, costv = found
     cost = np.full((n, n), np.inf)
     cuts = np.zeros((n, n), np.int64)
@@ -228,7 +240,8 @@ def pair_cost_matrix_reference(fleet: ClientFleet,
                                split_policy="paper", alpha: float = 1.0,
                                beta: float = 1.0,
                                rates: Optional[np.ndarray] = None,
-                               rel_data: Optional[np.ndarray] = None
+                               rel_data: Optional[np.ndarray] = None,
+                               fail: Optional[np.ndarray] = None
                                ) -> Tuple[np.ndarray, np.ndarray]:
     """Scalar reference for ``pair_cost_matrix``: the pure-Python
     O(N^2 W) per-pair loop over ``SplitPolicy.pair_cut_cost``.
@@ -245,6 +258,7 @@ def pair_cost_matrix_reference(fleet: ClientFleet,
     n = fleet.n
     f, rates, rel_data = _matrix_inputs(fleet, chan, rates, rel_data)
     pol = planning.get_policy(split_policy)
+    fl = None if fail is None else np.asarray(fail, np.float64)
     cost = np.full((n, n), np.inf)
     cuts = np.zeros((n, n), np.int64)
     for i in range(n):
@@ -253,7 +267,9 @@ def pair_cost_matrix_reference(fleet: ClientFleet,
                 f_i=float(f[i]), f_j=float(f[j]), num_layers=num_layers,
                 rate_bps=float(rates[i, j]), d_i=float(rel_data[i]),
                 d_j=float(rel_data[j]), workload=workload,
-                alpha=alpha, beta=beta)
+                alpha=alpha, beta=beta,
+                fail_i=float(fl[i]) if fl is not None else 0.0,
+                fail_j=float(fl[j]) if fl is not None else 0.0)
             li, c = pol.pair_cut_cost(ctx)
             cost[i, j] = cost[j, i] = c
             cuts[i, j] = cuts[j, i] = int(li)
@@ -455,6 +471,9 @@ class PairingContext:
     rel_data: Optional[np.ndarray] = None
     seed: int = 0
     cache: Optional[planning.PlannerCache] = None
+    # per-client failure probabilities (cohort-local, like rates/rel_data)
+    # for reliability-aware edge pricing; None -> no reliability term
+    fail: Optional[np.ndarray] = None
 
 
 class PairingPolicy:
@@ -520,7 +539,8 @@ class _CostPairing(PairingPolicy):
         cost, _ = pair_cost_matrix(
             fleet, chan, ctx.num_layers, ctx.workload,
             split_policy=ctx.split_policy, alpha=ctx.alpha, beta=ctx.beta,
-            rates=ctx.rates, rel_data=ctx.rel_data, cache=ctx.cache)
+            rates=ctx.rates, rel_data=ctx.rel_data, cache=ctx.cache,
+            fail=ctx.fail)
         return self._select(cost)
 
 

@@ -20,8 +20,18 @@ PairFn = Callable[[ClientFleet, ChannelModel], pairing.Pairs]
 
 def sample_cohort(n_clients: int, fraction: float, rng: np.random.Generator
                   ) -> np.ndarray:
-    """Sorted indices of the participating cohort (at least 2 clients)."""
-    k = max(2, int(round(n_clients * fraction)))
+    """Sorted indices of the participating cohort.
+
+    A fraction that rounds to >= 1 client is floored at 2 (pairing needs
+    two endpoints — the historical contract, draw-for-draw identical for
+    every such fraction).  A fraction that rounds to ZERO yields an empty
+    cohort: the driver records a defined no-op round (``status ==
+    "empty"``) instead of conjuring participants the configuration never
+    asked for.  The rng is consulted either way, so the driver's draw
+    order is cohort-size-invariant."""
+    k = int(round(n_clients * fraction))
+    if k >= 1:
+        k = min(n_clients, max(2, k))
     return np.sort(rng.choice(n_clients, size=k, replace=False))
 
 

@@ -134,7 +134,8 @@ def boundary_bytes_batch(w, cuts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
 
 def pair_cost(f_i: float, f_j: float, rate_bps: float, w, li: int, lj: int,
               d_i: float = 1.0, d_j: float = 1.0, alpha: float = 1.0,
-              beta: float = 1.0) -> float:
+              beta: float = 1.0, fail_i: float = 0.0,
+              fail_j: float = 0.0) -> float:
     """Eq. (3) wall time (**seconds**) of one pair's round at split
     (li, lj), weighted by the Problem-1 alpha/beta trade-off (Eq. 4's
     per-pair term).  ``f_*`` are CPU frequencies in Hz, ``rate_bps`` the
@@ -147,6 +148,16 @@ def pair_cost(f_i: float, f_j: float, rate_bps: float, w, li: int, lj: int,
     gradients back, per batch, dataset-size weighted (Problem 1's max
     term).  With ``alpha == beta == 1`` this IS
     ``latency.pair_round_time`` — the two stay consistent by delegation.
+
+    ``fail_*`` are the members' per-round failure probabilities (dropout /
+    exhausted link outage, ``faults.FaultModel.fail_prob``): the cost
+    becomes the EXPECTED latency until the pair delivers a round,
+    ``cost / ((1 - fail_i)(1 - fail_j))`` — a geometric expected-attempts
+    multiplier (cf. *Split Federated Learning Over Heterogeneous Edge
+    Devices*, arXiv 2411.13907).  The multiplier is cut-independent, so
+    it never changes a pair's optimal cut — only which pairs a joint
+    matching builds its critical path through.  At the 0.0 default the
+    divisor is exactly 1.0, so fault-free costs stay bit-identical.
     """
     phase = max(li * w.cycles_per_layer / f_i, lj * w.cycles_per_layer / f_j)
     compute = 2.0 * 2.0 * phase
@@ -159,20 +170,25 @@ def pair_cost(f_i: float, f_j: float, rate_bps: float, w, li: int, lj: int,
     comm = w.batch_size * max(d_i * feat_i + d_j * grad_j,
                               d_j * feat_j + d_i * grad_i) / rate_bps
     return (alpha * compute + beta * comm) \
-        * w.batches_per_epoch * w.local_epochs
+        * w.batches_per_epoch * w.local_epochs \
+        / ((1.0 - fail_i) * (1.0 - fail_j))
 
 
 def pair_cost_batch(f_i, f_j, rate_bps, w, li, lj, d_i=1.0, d_j=1.0,
-                    alpha: float = 1.0, beta: float = 1.0) -> np.ndarray:
+                    alpha: float = 1.0, beta: float = 1.0,
+                    fail_i=0.0, fail_j=0.0) -> np.ndarray:
     """Vectorized ``pair_cost``: Eq. (3) **seconds** over arrays of pairs.
 
     Elementwise over broadcastable arrays (``f_*`` in Hz, ``rate_bps`` in
-    bytes/s, ``li``/``lj`` int cut depths, ``d_*`` unitless weights) —
-    every arithmetic op mirrors the scalar ``pair_cost`` in the same
-    order, so the results are bit-identical float64 (the property tests
-    assert exact equality).  This is the planning kernel behind the
-    fleet-scale cost matrix (``pairing.pair_cost_matrix``), the
-    vectorized ``policy_lengths`` and the batched latency accounting
+    bytes/s, ``li``/``lj`` int cut depths, ``d_*`` unitless weights,
+    ``fail_*`` per-member failure probabilities — the expected-latency
+    reliability multiplier, see ``pair_cost``) — every arithmetic op
+    mirrors the scalar ``pair_cost`` in the same order, so the results
+    are bit-identical float64 (the property tests assert exact
+    equality; at ``fail = 0.0`` the divisor is exactly 1.0).  This is
+    the planning kernel behind the fleet-scale cost matrix
+    (``pairing.pair_cost_matrix``), the vectorized ``policy_lengths``
+    and the batched latency accounting
     (``latency.round_time_from_partner``).
     """
     f_i = np.asarray(f_i, np.float64)
@@ -187,7 +203,9 @@ def pair_cost_batch(f_i, f_j, rate_bps, w, li, lj, d_i=1.0, d_j=1.0,
     comm = w.batch_size * np.maximum(d_i * feat_i + d_j * grad_j,
                                      d_j * feat_j + d_i * grad_i) / rate_bps
     return (alpha * compute + beta * comm) \
-        * w.batches_per_epoch * w.local_epochs
+        * w.batches_per_epoch * w.local_epochs \
+        / ((1.0 - np.asarray(fail_i, np.float64))
+           * (1.0 - np.asarray(fail_j, np.float64)))
 
 
 # ---------------------------------------------------------------------------
@@ -198,7 +216,10 @@ def pair_cost_batch(f_i, f_j, rate_bps, w, li, lj, d_i=1.0, d_j=1.0,
 class PairContext:
     """Everything a policy may consult when cutting one pair.  ``f_i`` is
     the canonical (lower-index) member; ``rate_bps``/``d_*`` feed the
-    comm term; ``workload`` may be None for compute-only policies."""
+    comm term; ``workload`` may be None for compute-only policies;
+    ``fail_*`` are per-member failure probabilities (the expected-latency
+    reliability multiplier of ``pair_cost`` — cut-independent, so it
+    scales a policy's costs without moving its chosen cut)."""
 
     f_i: float
     f_j: float
@@ -209,6 +230,8 @@ class PairContext:
     workload: Optional[object] = None
     alpha: float = 1.0
     beta: float = 1.0
+    fail_i: float = 0.0
+    fail_j: float = 0.0
 
 
 class SplitPolicy:
@@ -235,7 +258,7 @@ class SplitPolicy:
         li = self.pair_cut(ctx)
         return li, pair_cost(ctx.f_i, ctx.f_j, ctx.rate_bps, ctx.workload,
                              li, ctx.num_layers - li, ctx.d_i, ctx.d_j,
-                             ctx.alpha, ctx.beta)
+                             ctx.alpha, ctx.beta, ctx.fail_i, ctx.fail_j)
 
 
 class PaperSplitPolicy(SplitPolicy):
@@ -281,7 +304,7 @@ class LatencyOptSplitPolicy(SplitPolicy):
         W = ctx.num_layers
         costs = [pair_cost(ctx.f_i, ctx.f_j, ctx.rate_bps, ctx.workload,
                            cut, W - cut, ctx.d_i, ctx.d_j, ctx.alpha,
-                           ctx.beta)
+                           ctx.beta, ctx.fail_i, ctx.fail_j)
                  for cut in range(1, W)]
         k = int(np.argmin(costs))
         return 1 + k, costs[k]
@@ -310,7 +333,8 @@ def get_policy(spec) -> SplitPolicy:
 
 
 def policy_cut_costs(policy, f_i, f_j, rates, d_i, d_j, workload,
-                     num_layers: int, alpha: float = 1.0, beta: float = 1.0
+                     num_layers: int, alpha: float = 1.0, beta: float = 1.0,
+                     fail_i=0.0, fail_j=0.0
                      ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
     """Vectorized ``SplitPolicy.pair_cut_cost`` over candidate-pair arrays.
 
@@ -338,7 +362,8 @@ def policy_cut_costs(policy, f_i, f_j, rates, d_i, d_j, workload,
         if workload is None:
             return cuts, None
         return cuts, pair_cost_batch(f_i, f_j, rates, workload, cuts,
-                                     W - cuts, d_i, d_j, alpha, beta)
+                                     W - cuts, d_i, d_j, alpha, beta,
+                                     fail_i, fail_j)
 
     if isinstance(policy, PaperSplitPolicy):
         return priced(paper_cut_batch(f_i, f_j, W))
@@ -361,7 +386,8 @@ def policy_cut_costs(policy, f_i, f_j, rates, d_i, d_j, workload,
 
 
 def price_cuts(cuts, f_i, f_j, rates, d_i, d_j, workload, num_layers: int,
-               alpha: float = 1.0, beta: float = 1.0) -> np.ndarray:
+               alpha: float = 1.0, beta: float = 1.0,
+               fail_i=0.0, fail_j=0.0) -> np.ndarray:
     """Re-price GIVEN per-candidate cuts on a (possibly drifted) channel:
     the O(P) half of a re-plan, with no O(P·W) cut re-search — what a
     ``PlannerCache`` hit executes (DESIGN.md §8)."""
@@ -369,7 +395,7 @@ def price_cuts(cuts, f_i, f_j, rates, d_i, d_j, workload, num_layers: int,
     return pair_cost_batch(np.asarray(f_i, np.float64),
                            np.asarray(f_j, np.float64), rates, workload,
                            cuts, int(num_layers) - cuts, d_i, d_j,
-                           alpha, beta)
+                           alpha, beta, fail_i, fail_j)
 
 
 # ---------------------------------------------------------------------------
@@ -433,17 +459,24 @@ class PlannerCache:
 
     @staticmethod
     def problem_key(fleet_cpu_hz, rel_data, workload, policy,
-                    num_layers: int, alpha: float, beta: float) -> Tuple:
-        """The drift-invariant identity of one cut-search problem."""
+                    num_layers: int, alpha: float, beta: float,
+                    fail=None) -> Tuple:
+        """The drift-invariant identity of one cut-search problem.
+        ``fail`` (per-client failure probabilities, the reliability
+        pricing term) is part of the identity: the same cohort priced
+        with and without reliability is a different problem."""
         pol = get_policy(policy)
         try:
             hash(workload)
             wkey = workload               # hashable -> equality-checked key
         except TypeError:                 # unhashable duck-typed workload
             wkey = id(workload)
+        fkey = None if fail is None \
+            else np.asarray(fail, np.float64).tobytes()
         return (np.asarray(fleet_cpu_hz, np.float64).tobytes(),
                 np.asarray(rel_data, np.float64).tobytes(),
-                wkey, pol.spec, int(num_layers), float(alpha), float(beta))
+                wkey, pol.spec, int(num_layers), float(alpha), float(beta),
+                fkey)
 
     def consult(self, key: Tuple, rate_aware: bool,
                 reprice: Callable[[np.ndarray], np.ndarray]
@@ -668,11 +701,12 @@ def _active_pairs(partner: np.ndarray,
 
 
 def _pairs_objective(pairs, lengths, cpu_hz, rates, rel, workload,
-                     alpha: float, beta: float) -> float:
+                     alpha: float, beta: float, fail=None) -> float:
     """Eq. (4): the weighted sum of per-pair Eq. (3) costs (seconds) at
     the GIVEN lengths — the one arithmetic shared by the plan builders and
     the adaptive re-pricing of a kept plan on a drifted channel.
-    Vectorized over the pairs (``pair_cost_batch``)."""
+    Vectorized over the pairs (``pair_cost_batch``); ``fail`` is the
+    optional (N,) reliability-pricing vector (see ``pair_cost``)."""
     if not pairs:
         return 0.0
     idx = np.asarray(pairs, np.int64)
@@ -681,14 +715,20 @@ def _pairs_objective(pairs, lengths, cpu_hz, rates, rel, workload,
     rel = np.asarray(rel, np.float64)
     lengths = np.asarray(lengths, np.int64)
     rate = rates[i, j] if rates is not None else float("inf")
+    if fail is None:
+        fi = fj = 0.0
+    else:
+        fail = np.asarray(fail, np.float64)
+        fi, fj = fail[i], fail[j]
     return float(np.sum(pair_cost_batch(
         cpu[i], cpu[j], rate, workload, lengths[i], lengths[j],
-        rel[i], rel[j], alpha, beta)))
+        rel[i], rel[j], alpha, beta, fi, fj)))
 
 
 def plan_objective(plan: "RoundPlan", fleet, chan, workload,
                    alpha: float = 1.0, beta: float = 1.0,
-                   rates: Optional[np.ndarray] = None) -> float:
+                   rates: Optional[np.ndarray] = None,
+                   fail: Optional[np.ndarray] = None) -> float:
     """Re-price an existing plan's SCHEDULE (pairs + lengths, unchanged)
     on a fleet/channel realization: the Eq. (4) objective (seconds, the
     alpha/beta-weighted sum of per-pair Eq. (3) costs) at the CURRENT
@@ -701,7 +741,7 @@ def plan_objective(plan: "RoundPlan", fleet, chan, workload,
     rel = np.asarray(fleet.data_sizes, np.float64)
     rel = rel / rel.sum()
     return _pairs_objective(plan.pairs, plan.lengths_array(), fleet.cpu_hz,
-                            rates, rel, workload, alpha, beta)
+                            rates, rel, workload, alpha, beta, fail)
 
 
 def build_round_plan(fleet, chan, partner, num_layers: int, *,
@@ -709,7 +749,8 @@ def build_round_plan(fleet, chan, partner, num_layers: int, *,
                      active: Optional[np.ndarray] = None,
                      granularity: int = 1, server_cut: int = 0,
                      alpha: float = 1.0, beta: float = 1.0,
-                     rates: Optional[np.ndarray] = None) -> RoundPlan:
+                     rates: Optional[np.ndarray] = None,
+                     fail: Optional[np.ndarray] = None) -> RoundPlan:
     """Build the FedPairing plan for one round.
 
     ``fleet``/``chan`` are duck-typed (``latency.ClientFleet`` /
@@ -717,6 +758,10 @@ def build_round_plan(fleet, chan, partner, num_layers: int, *,
     Eq. (4) objective is computed over the active pairs with the SAME
     per-pair cost the latency-opt policy minimizes, which is what makes
     ``latency-opt``'s objective <= ``paper``'s by construction.
+    ``fail`` (optional (N,) per-client failure probabilities) prices the
+    objective with the expected-latency reliability multiplier (see
+    ``pair_cost``); the multiplier is cut-independent, so the cut search
+    itself is unaffected.
     """
     n = fleet.n
     partner = np.asarray(partner, np.int64)
@@ -733,7 +778,7 @@ def build_round_plan(fleet, chan, partner, num_layers: int, *,
     objective = None
     if workload is not None:
         objective = _pairs_objective(pairs, lengths, fleet.cpu_hz, rates,
-                                     rel, workload, alpha, beta)
+                                     rel, workload, alpha, beta, fail)
     return RoundPlan(
         kind="paired", policy=pol.spec, num_layers=num_layers,
         partner=tuple(int(p) for p in partner),
@@ -751,7 +796,8 @@ def build_joint_plan(fleet, chan, num_layers: int, *,
                      alpha: float = 1.0, beta: float = 1.0,
                      rates: Optional[np.ndarray] = None,
                      seed: int = 0,
-                     cache: Optional[PlannerCache] = None) -> RoundPlan:
+                     cache: Optional[PlannerCache] = None,
+                     fail: Optional[np.ndarray] = None) -> RoundPlan:
     """Solve Problem 1 jointly: pairing AND cuts chosen together.
 
     The pairing policy sees the true Eq. (3) cost of every candidate edge
@@ -772,7 +818,12 @@ def build_joint_plan(fleet, chan, num_layers: int, *,
     sequential plan built over the same cohort.  ``seed`` feeds the
     ``random`` pairing policy (the driver draws it from its rng);
     ``cache`` is the cross-round ``PlannerCache`` the cost-matrix cut
-    search consults (DESIGN.md §8).
+    search consults (DESIGN.md §8).  ``fail`` ((N,) per-client failure
+    probabilities, ``faults.FaultModel.fail_prob``) prices every
+    candidate edge with the expected-latency reliability multiplier, so
+    the matching avoids building critical paths through flaky clients —
+    both the joint candidate and the sequential reference are priced
+    with it, keeping the joint <= sequential contract coherent.
     """
     from repro.core import latency as latency_mod
     from repro.core import pairing as pairing_mod
@@ -793,7 +844,9 @@ def build_joint_plan(fleet, chan, num_layers: int, *,
         num_layers=num_layers, workload=workload, split_policy=split_policy,
         alpha=alpha, beta=beta, seed=seed, cache=cache,
         rates=(rates[np.ix_(cohort, cohort)] if rates is not None else None),
-        rel_data=rel[cohort])
+        rel_data=rel[cohort],
+        fail=(np.asarray(fail, np.float64)[cohort] if fail is not None
+              else None))
 
     def plan_for(sub_pairs):
         partner = np.arange(n)
@@ -803,7 +856,8 @@ def build_joint_plan(fleet, chan, num_layers: int, *,
         return build_round_plan(
             fleet, chan, partner, num_layers, policy=split_policy,
             workload=workload, active=act, granularity=granularity,
-            server_cut=server_cut, alpha=alpha, beta=beta, rates=rates)
+            server_cut=server_cut, alpha=alpha, beta=beta, rates=rates,
+            fail=fail)
 
     seq_plan = plan_for(pairing_mod.fedpairing_pairing(sub, chan))
     if pol.spec == "paper-weight":

@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import json
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -63,7 +64,7 @@ import numpy as np
 
 from repro import compat
 from repro.core import aggregation, baselines, fedpair, latency, pairing
-from repro.core import participation, planning, splitting
+from repro.core import faults, participation, planning, splitting
 from repro.core.latency import ChannelModel, ClientFleet, WorkloadModel
 from repro.core.planning import RoundPlan
 
@@ -107,6 +108,10 @@ class RoundConfig:
     server_cut: int = 0                 # sl/splitfed split; 0 -> W//2
     donate: bool = True                 # thread params in place (engines)
     seed: int = 0
+    # fault injection (core.faults): None -> the historical fault-free
+    # path, untouched.  A FaultConfig with all rates zero behaves
+    # identically (the zero-cost contract, DESIGN.md §9).
+    faults: Optional[faults.FaultConfig] = None
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -115,6 +120,21 @@ class RoundConfig:
         if self.engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {self.engine!r}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(f"participation must lie in (0, 1], got "
+                             f"{self.participation} (a cohort fraction)")
+        if self.batches_per_round < 1:
+            raise ValueError(f"batches_per_round must be >= 1, got "
+                             f"{self.batches_per_round}")
+        if self.faults is not None:
+            if not isinstance(self.faults, faults.FaultConfig):
+                raise ValueError(f"faults must be a faults.FaultConfig, "
+                                 f"got {type(self.faults).__name__}")
+            if self.faults.enabled and self.algorithm != "fedpairing":
+                raise ValueError(
+                    f"fault injection is wired through the fedpairing "
+                    f"round (pair degradation, Eq. (3) clock); algorithm "
+                    f"{self.algorithm!r} does not support it")
         if self.pair_mechanism not in PAIRINGS:
             raise ValueError(f"pair_mechanism must be one of "
                              f"{PAIRINGS}, got {self.pair_mechanism!r}")
@@ -160,6 +180,27 @@ class RoundRecord:
                                          # PlannerCache), kept (no
                                          # re-matching), n/a (weight
                                          # policy / cache disabled)
+    status: str = "ok"                   # ok | degraded (survivors only) |
+                                         # skipped (no survivors) |
+                                         # aborted (naive abort) |
+                                         # empty (zero-client cohort)
+    failed: Tuple[int, ...] = ()         # clients excluded by faults
+    retries: int = 0                     # link retry attempts this round
+
+    def __eq__(self, other):
+        # field-by-field with NaN-aware float compare: skipped/aborted
+        # rounds record mean_loss = nan, and the trace-equality contract
+        # ("tuples so traces compare ==") must survive them
+        if not isinstance(other, RoundRecord):
+            return NotImplemented
+        for f in dataclasses.fields(self):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if isinstance(a, float) and isinstance(b, float):
+                if a != b and not (a != a and b != b):   # nan == nan here
+                    return False
+            elif a != b:
+                return False
+        return True
 
 
 @dataclasses.dataclass
@@ -338,6 +379,14 @@ class RoundDriver:
             tolerance=rc.replan_threshold) \
             if (rc.cut_cache and rc.algorithm == "fedpairing"
                 and self._cost_driven) else None
+        # fault layer (DESIGN.md §9): stateless per-round realization —
+        # NEVER consumes the driver rng — and the reliability-pricing
+        # vector the planner sees (None when every probability is zero,
+        # so fault-free planning stays bit-identical)
+        self.fault_cfg = rc.faults or faults.FaultConfig()
+        self.fault_model = faults.FaultModel(self.fault_cfg, self.n,
+                                             seed=rc.seed)
+        self._fail = self.fault_model.fail_prob()
         if rc.algorithm == "fedpairing":
             self._engine = _ENGINE_CLASSES[rc.engine](
                 cfg, rc, self.n, self._gparams, self.loss_fn)
@@ -372,6 +421,104 @@ class RoundDriver:
             state = self.run_round(state)
         return state
 
+    # -- checkpoint / resume (DESIGN.md §9) -------------------------------
+
+    def save_state(self, state: RoundState, path: str) -> None:
+        """Serialize a RoundState to a msgpack checkpoint
+        (``repro.checkpoint.io``): params + fleet arrays as leaves, the
+        host-side remainder (round counter, rng bit-generator state,
+        RoundRecord history, adaptive anchor plan) as metadata.  A driver
+        built from the same config restores it with ``load_state`` and
+        continues bit-identically (``tests/test_faults.py``)."""
+        from repro.checkpoint import io as ckpt_io
+        tree = {"client": state.client_params,
+                "fleet": {"positions": np.asarray(state.fleet.positions),
+                          "cpu_hz": np.asarray(state.fleet.cpu_hz),
+                          "data_sizes": np.asarray(state.fleet.data_sizes)}}
+        if state.server_params is not None:
+            tree["server"] = state.server_params
+        meta = {
+            "version": 1,
+            "algorithm": self.rc.algorithm,
+            "seed": self.rc.seed,
+            "n": self.n,
+            "batches_per_round": self.rc.batches_per_round,
+            "round": int(state.round),
+            "sim_time_s": float(state.sim_time_s),
+            # json round-trip: the PCG64 state dict carries 128-bit ints
+            # msgpack cannot represent
+            "rng": json.dumps(state.rng.bit_generator.state),
+            "history": [dataclasses.asdict(r) for r in state.history],
+            "plan": (None if state.plan is None
+                     else dataclasses.asdict(state.plan)),
+        }
+        ckpt_io.save_checkpoint(path, tree, meta)
+
+    def load_state(self, path: str, fast_forward: bool = True
+                   ) -> RoundState:
+        """Restore a ``save_state`` checkpoint into a fresh driver.
+
+        The driver must be configured compatibly (same algorithm, client
+        count, seed and batches_per_round — validated, since the resume
+        contract replays the SAME cohort/channel/batch streams).  With
+        ``fast_forward`` (default) the driver's batch stream is advanced
+        ``round x batches_per_round`` calls so round k consumes the same
+        batches the uninterrupted run gave it — every round outcome
+        (trained, degraded, skipped, empty) consumes exactly
+        ``batches_per_round`` calls, which is what makes this product
+        exact."""
+        from repro.checkpoint import io as ckpt_io
+        meta = ckpt_io.load_checkpoint_meta(path)
+        if int(meta.get("version", -1)) != 1:
+            raise ValueError(f"unsupported checkpoint version "
+                             f"{meta.get('version')!r} in {path}")
+        for key, mine in (("algorithm", self.rc.algorithm),
+                          ("n", self.n), ("seed", self.rc.seed),
+                          ("batches_per_round",
+                           self.rc.batches_per_round)):
+            if meta.get(key) != mine:
+                raise ValueError(
+                    f"checkpoint {path} was written with {key}="
+                    f"{meta.get(key)!r}; this driver has {key}={mine!r} "
+                    f"— resume replays the checkpointed run's streams "
+                    f"and needs a matching config")
+        g = self._gparams
+        if self.rc.algorithm == "sl":
+            client_like, server_like = g, g
+        elif self.rc.algorithm == "splitfed":
+            client_like, server_like = fedpair.replicate(g, self.n), g
+        else:
+            client_like, server_like = fedpair.replicate(g, self.n), None
+        like = {"client": client_like,
+                "fleet": {"positions": self.fleet0.positions,
+                          "cpu_hz": self.fleet0.cpu_hz,
+                          "data_sizes": self.fleet0.data_sizes}}
+        if server_like is not None:
+            like["server"] = server_like
+        tree = ckpt_io.load_checkpoint(path, like)
+        # jnp conversion copies (frombuffer leaves are read-only; the
+        # donate=True engines need owned device buffers)
+        client = jax.tree_util.tree_map(jnp.asarray, tree["client"])
+        server = (jax.tree_util.tree_map(jnp.asarray, tree["server"])
+                  if "server" in tree else None)
+        f = tree["fleet"]
+        fleet = ClientFleet(positions=np.array(f["positions"]),
+                            cpu_hz=np.array(f["cpu_hz"]),
+                            data_sizes=np.array(f["data_sizes"]))
+        rng = np.random.default_rng(self.rc.seed)
+        rng.bit_generator.state = json.loads(meta["rng"])
+        history = [_record_from_dict(d) for d in meta["history"]]
+        plan = (None if meta["plan"] is None
+                else _plan_from_dict(meta["plan"]))
+        if fast_forward:
+            for _ in range(int(meta["round"]) * self.rc.batches_per_round):
+                self.batch_fn()
+        return RoundState(round=int(meta["round"]), fleet=fleet,
+                          client_params=client, server_params=server,
+                          rng=rng,
+                          sim_time_s=float(meta["sim_time_s"]),
+                          history=history, plan=plan)
+
     # -- one round --------------------------------------------------------
 
     def run_round(self, state: RoundState) -> RoundState:
@@ -394,10 +541,15 @@ class RoundDriver:
         pair_seed = int(rng.integers(2 ** 31))
         active = np.zeros(self.n, bool)
         active[cohort] = True
-        run = {"fedpairing": self._fedpairing_round, "fl": self._fl_round,
-               "sl": self._sl_round, "splitfed": self._splitfed_round}
-        record, client, server, plan = run[rc.algorithm](
-            state, fleet, cohort, active, pair_seed)
+        if cohort.size == 0:
+            record, client, server, plan = self._empty_round(state, fleet,
+                                                             cohort)
+        else:
+            run = {"fedpairing": self._fedpairing_round,
+                   "fl": self._fl_round, "sl": self._sl_round,
+                   "splitfed": self._splitfed_round}
+            record, client, server, plan = run[rc.algorithm](
+                state, fleet, cohort, active, pair_seed)
         return dataclasses.replace(
             state, round=state.round + 1, fleet=fleet, client_params=client,
             server_params=server, rng=rng, sim_time_s=record.sim_total_s,
@@ -405,7 +557,8 @@ class RoundDriver:
 
     def _record(self, state, cohort, pairs, lengths, mean_loss, round_s,
                 cached, objective=None, replanned=True,
-                cut_cache="n/a") -> RoundRecord:
+                cut_cache="n/a", status="ok", failed=(),
+                retries=0) -> RoundRecord:
         return RoundRecord(
             round=state.round, cohort=tuple(int(c) for c in cohort),
             pairs=pairs, lengths=tuple(int(l) for l in lengths),
@@ -413,7 +566,24 @@ class RoundDriver:
             sim_total_s=float(state.sim_time_s + round_s),
             cached_steps=cached,
             objective=None if objective is None else float(objective),
-            replanned=bool(replanned), cut_cache=str(cut_cache))
+            replanned=bool(replanned), cut_cache=str(cut_cache),
+            status=str(status), failed=tuple(int(c) for c in failed),
+            retries=int(retries))
+
+    def _empty_round(self, state, fleet, cohort):
+        """A participation fraction that rounds to zero clients: a defined
+        no-op round (``status == "empty"``) — params untouched, zero
+        simulated seconds, mean_loss = nan.  The data stream is still
+        advanced ``batches_per_round`` calls so round k always consumes
+        the same batches regardless of cohort sizes (the checkpoint/resume
+        fast-forward contract)."""
+        for _ in range(self.rc.batches_per_round):
+            self.batch_fn()
+        cached = self._engine.cached_steps if self._engine is not None else 1
+        rec = self._record(state, cohort, (),
+                           (self.cfg.num_layers,) * self.n, float("nan"),
+                           0.0, cached, replanned=False, status="empty")
+        return rec, state.client_params, state.server_params, state.plan
 
     def round_plan(self, fleet: ClientFleet, partner: np.ndarray,
                    active: np.ndarray, num_layers: Optional[int] = None
@@ -425,7 +595,8 @@ class RoundDriver:
             fleet, self.chan, partner,
             self.cfg.num_layers if num_layers is None else num_layers,
             policy=rc.split_policy, workload=self.workload, active=active,
-            granularity=rc.bucket_granularity, server_cut=rc.server_cut)
+            granularity=rc.bucket_granularity, server_cut=rc.server_cut,
+            fail=self._fail)
 
     def _latency_plan(self, fleet: ClientFleet, partner: np.ndarray,
                       active: np.ndarray, plan: RoundPlan) -> RoundPlan:
@@ -455,7 +626,7 @@ class RoundDriver:
                 split_policy=rc.split_policy, workload=self.workload,
                 active=active, granularity=rc.bucket_granularity,
                 server_cut=rc.server_cut, seed=pair_seed,
-                cache=self.plan_cache)
+                cache=self.plan_cache, fail=self._fail)
         ctx = pairing.PairingContext(
             num_layers=self.cfg.num_layers, workload=self.workload,
             split_policy=rc.split_policy, seed=pair_seed)
@@ -479,7 +650,8 @@ class RoundDriver:
         if (rc.replan_threshold > 0 and prev is not None
                 and prev.active == tuple(bool(a) for a in active)):
             new_obj = planning.plan_objective(prev, fleet, self.chan,
-                                              self.workload)
+                                              self.workload,
+                                              fail=self._fail)
             if abs(new_obj - prev.objective) \
                     <= rc.replan_threshold * abs(prev.objective):
                 kept = dataclasses.replace(prev, objective=new_obj)
@@ -487,10 +659,20 @@ class RoundDriver:
         plan = self._build_plan(fleet, cohort, active, pair_seed)
         return plan, plan, True
 
+    def _cut_cache_status(self, replanned: bool) -> str:
+        if self.plan_cache is None:      # weight policy / cache disabled
+            return "n/a"
+        if not replanned:
+            return "kept"
+        return self.plan_cache.last_status
+
     def _fedpairing_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
         plan, anchor, replanned = self._adaptive_plan(state, fleet, cohort,
                                                       active, pair_seed)
+        if self.fault_model.enabled:
+            return self._fedpairing_faulted(state, fleet, cohort, active,
+                                            plan, anchor, replanned)
         partner = plan.partner_array()
         agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
         params = state.client_params
@@ -499,7 +681,8 @@ class RoundDriver:
             params, l = self._engine.step(params, self.batch_fn(), plan,
                                           agg_w)
             losses.append(np.asarray(l))
-        mean_loss = _mean_active_loss(losses, active)
+        mean_loss = _mean_active_loss(losses, active,
+                                      round_idx=state.round)
         g = aggregation.aggregate(params,
                                   jnp.asarray(fleet.data_sizes, jnp.float32),
                                   rc.aggregation,
@@ -508,16 +691,79 @@ class RoundDriver:
         round_s = latency.round_time_plan(
             self._latency_plan(fleet, partner, active, plan), fleet,
             self.chan, self.workload)
-        if self.plan_cache is None:      # weight policy / cache disabled
-            cut_cache = "n/a"
-        elif not replanned:
-            cut_cache = "kept"
-        else:
-            cut_cache = self.plan_cache.last_status
         rec = self._record(state, cohort, plan.pairs, plan.lengths,
                            mean_loss, round_s, self._engine.cached_steps,
                            objective=plan.objective, replanned=replanned,
-                           cut_cache=cut_cache)
+                           cut_cache=self._cut_cache_status(replanned))
+        return rec, params, None, anchor
+
+    def _fedpairing_faulted(self, state, fleet, cohort, active, plan,
+                            anchor, replanned):
+        """The fedpairing round under fault injection (DESIGN.md §9).
+
+        Realize the round's faults (stateless per-round rng), apply the
+        degradation ladder (dropouts leave, orphans re-pair or go solo),
+        evaluate the faulted Eq. (3) clock with its deadline, train the
+        degraded plan, and aggregate over the survivors only — or skip /
+        abort the round cleanly with the pre-round global model restored
+        (``status`` records which).  The data stream always advances
+        ``batches_per_round`` calls, trained or not, so round k consumes
+        the same batches on every outcome (the resume contract).
+        """
+        rc = self.rc
+        fcfg = self.fault_cfg
+        rf = self.fault_model.realize(state.round, active, plan.pairs)
+        # pre-round global snapshot (row 0; all rows equal after the
+        # previous broadcast): with donate=True the engines consume the
+        # input buffers, but a skipped/aborted round must hand back the
+        # pre-round model untouched
+        g_prev = jax.tree_util.tree_map(lambda a: jnp.array(a[0]),
+                                        state.client_params)
+        exec_plan, exec_active = plan, np.asarray(active, bool)
+        if fcfg.mode == "graceful" and rf.dropped:
+            partner2, exec_active = faults.degrade_partner(
+                plan.partner_array(), exec_active, rf, fcfg.orphan)
+            exec_plan = self.round_plan(fleet, partner2, exec_active)
+        partner = exec_plan.partner_array()
+        clock = faults.faulted_clock(
+            self._latency_plan(fleet, partner, exec_active, exec_plan),
+            fleet, self.chan, self.workload, rf, fcfg)
+        excluded = sorted(set(rf.dropped) | set(clock.late)
+                          | set(clock.link_failed))
+        final_active = exec_active.copy()
+        final_active[[c for c in excluded if c < self.n]] = False
+        if not clock.completed:
+            # graceful with no survivor -> skipped; abort with any
+            # failure -> aborted.  Params roll back to the pre-round
+            # global; the batch stream still advances.
+            for _ in range(rc.batches_per_round):
+                self.batch_fn()
+            params = aggregation.broadcast(g_prev, self.n)
+            status = "aborted" if fcfg.mode == "abort" else "skipped"
+            mean_loss = float("nan")
+        else:
+            agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
+            params = state.client_params
+            losses = []
+            for _ in range(rc.batches_per_round):
+                params, l = self._engine.step(params, self.batch_fn(),
+                                              exec_plan, agg_w)
+                losses.append(np.asarray(l))
+            mean_loss = _mean_active_loss(losses, final_active,
+                                          round_idx=state.round)
+            g = aggregation.aggregate(
+                params, jnp.asarray(fleet.data_sizes, jnp.float32),
+                rc.aggregation, active=jnp.asarray(final_active))
+            params = aggregation.broadcast(g, self.n)
+            status = "degraded" if excluded else "ok"
+        rec = self._record(state, cohort, exec_plan.pairs,
+                           exec_plan.lengths, mean_loss, clock.round_s,
+                           self._engine.cached_steps,
+                           objective=exec_plan.objective,
+                           replanned=replanned,
+                           cut_cache=self._cut_cache_status(replanned),
+                           status=status, failed=excluded,
+                           retries=rf.retry_total(fcfg.retries))
         return rec, params, None, anchor
 
     def _fl_round(self, state, fleet, cohort, active, pair_seed):
@@ -541,7 +787,9 @@ class RoundDriver:
         sub = latency.subfleet(fleet, cohort)
         round_s = latency.round_time_vanilla_fl(sub, self.chan, self.workload)
         rec = self._record(state, cohort, (), plan.lengths,
-                           _mean_active_loss(losses, active), round_s, 1)
+                           _mean_active_loss(losses, active,
+                                             round_idx=state.round),
+                           round_s, 1)
         return rec, params, None, state.plan
 
     def _sl_round(self, state, fleet, cohort, active, pair_seed):
@@ -565,8 +813,11 @@ class RoundDriver:
         round_s = latency.round_time_vanilla_sl(sub, self.chan, self.workload,
                                                 client_layers=cut,
                                                 sequential=True)
+        mean_loss = float(np.mean(losses))
+        if not np.isfinite(mean_loss):
+            raise NonFiniteLossError(state.round)
         rec = self._record(state, cohort, (), plan.lengths,
-                           float(np.mean(losses)), round_s, 1)
+                           mean_loss, round_s, 1)
         return rec, client, server, state.plan
 
     def _splitfed_round(self, state, fleet, cohort, active, pair_seed):
@@ -595,14 +846,72 @@ class RoundDriver:
         sub = latency.subfleet(fleet, cohort)
         round_s = latency.round_time_splitfed(sub, self.chan, self.workload,
                                               client_layers=cut)
+        per_client = np.stack([np.asarray(l, np.float64) for l in losses])
+        bad = ~np.isfinite(per_client).all(axis=0)
+        if bad.any():
+            raise NonFiniteLossError(state.round, idx[bad])
         rec = self._record(state, cohort, (), plan.lengths,
-                           float(np.mean([l.mean() for l in losses])),
-                           round_s, 1)
+                           float(per_client.mean()), round_s, 1)
         return rec, client, server, state.plan
 
 
-def _mean_active_loss(losses: Sequence[np.ndarray],
-                      active: np.ndarray) -> float:
+def _record_from_dict(d: Dict) -> RoundRecord:
+    """RoundRecord from its msgpack round-trip (lists back to tuples)."""
+    return RoundRecord(
+        round=int(d["round"]),
+        cohort=tuple(int(c) for c in d["cohort"]),
+        pairs=tuple((int(a), int(b)) for a, b in d["pairs"]),
+        lengths=tuple(int(l) for l in d["lengths"]),
+        mean_loss=float(d["mean_loss"]),
+        sim_round_s=float(d["sim_round_s"]),
+        sim_total_s=float(d["sim_total_s"]),
+        cached_steps=int(d["cached_steps"]),
+        objective=(None if d["objective"] is None
+                   else float(d["objective"])),
+        replanned=bool(d["replanned"]), cut_cache=str(d["cut_cache"]),
+        status=str(d["status"]),
+        failed=tuple(int(c) for c in d["failed"]),
+        retries=int(d["retries"]))
+
+
+def _plan_from_dict(d: Dict) -> RoundPlan:
+    """RoundPlan from its msgpack round-trip (lists back to tuples)."""
+    return RoundPlan(
+        kind=str(d["kind"]), policy=str(d["policy"]),
+        num_layers=int(d["num_layers"]),
+        partner=tuple(int(p) for p in d["partner"]),
+        lengths=tuple(int(l) for l in d["lengths"]),
+        active=tuple(bool(a) for a in d["active"]),
+        pairs=tuple((int(a), int(b)) for a, b in d["pairs"]),
+        server_cut=int(d["server_cut"]),
+        granularity=int(d["granularity"]),
+        objective=(None if d["objective"] is None
+                   else float(d["objective"])),
+        pair_policy=str(d["pair_policy"]),
+        seq_objective=(None if d.get("seq_objective") is None
+                       else float(d["seq_objective"])))
+
+
+class NonFiniteLossError(RuntimeError):
+    """A training round produced NaN/inf losses (divergence, not a fault
+    the degradation ladder can mask) — raised with the round index and,
+    where per-client losses exist, the offending client ids, so the
+    failing round is nameable from the stack trace alone."""
+
+    def __init__(self, round_idx: int, clients: Sequence[int] = ()):
+        self.round = int(round_idx)
+        self.clients = tuple(int(c) for c in clients)
+        who = (f" from clients {list(self.clients)}" if self.clients
+               else "")
+        super().__init__(
+            f"non-finite training loss in round {self.round}{who} — the "
+            f"model diverged; lower the learning rate or inspect the "
+            f"round's batches (fault handling only masks availability "
+            f"failures, never numerical ones)")
+
+
+def _mean_active_loss(losses: Sequence[np.ndarray], active: np.ndarray,
+                      round_idx: Optional[int] = None) -> float:
     """Mean per-step loss over active positions.  The vmapped and bucketed
     engines disagree on which position holds which flow's loss (bucketed
     lands flow i at partner(i)), but the active set is closed under the
@@ -610,10 +919,22 @@ def _mean_active_loss(losses: Sequence[np.ndarray],
     one scalar per step — the a_i-pre-weighted total over ALL N flows
     (inactive self-flows included) — so its recorded mean_loss is on a
     different scale (~a_i x the cohort mean); compare losses across
-    engines on vmapped/bucketed only."""
+    engines on vmapped/bucketed only.
+
+    With ``round_idx`` given, non-finite losses over the active set raise
+    ``NonFiniteLossError`` naming the round and the offending clients
+    instead of silently poisoning the trace and (after aggregation) the
+    global params."""
     arr = np.stack([np.asarray(l, np.float64) for l in losses])
     if arr.ndim == 1:                    # dist: one scalar per step
+        if round_idx is not None and not np.isfinite(arr).all():
+            raise NonFiniteLossError(round_idx)
         return float(arr.mean())
+    if round_idx is not None:
+        bad = ~np.isfinite(arr[:, active]).all(axis=0)
+        if bad.any():
+            raise NonFiniteLossError(round_idx,
+                                     np.flatnonzero(active)[bad])
     return float(arr[:, active].mean())
 
 

@@ -35,6 +35,7 @@ import time
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core import latency, planning, rounds
 from repro.core.latency import ChannelModel
+from repro.launch import fault_cli
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -71,6 +72,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--aggregation", choices=["paper", "fedavg"],
                     default="paper")
     ap.add_argument("--seed", type=int, default=0)
+    fault_cli.add_fault_args(ap)
+    fault_cli.add_checkpoint_args(ap)
     return ap
 
 
@@ -95,7 +98,8 @@ def main() -> None:
         participation=args.participation, drift_sigma_m=args.drift,
         lr=args.lr, aggregation=args.aggregation,
         overlap_boost=not args.no_overlap_boost,
-        bucket_granularity=args.bucket_granularity, seed=args.seed)
+        bucket_granularity=args.bucket_granularity, seed=args.seed,
+        faults=fault_cli.fault_config(args))
     # round-0 plan preview on the initial channel realization: the joint
     # plan (pairing x cut together) vs the sequential pair-then-cut plan
     plan0 = planning.build_joint_plan(
@@ -114,20 +118,24 @@ def main() -> None:
         cfg, rc, fleet, chan=chan, workload=w,
         batch_fn=rounds.make_lm_batch_fn(cfg, n, args.batch, args.seq,
                                          args.seed))
-    state = driver.init_state()
-    for _ in range(args.rounds):
+    state = fault_cli.initial_state(driver, args)
+    for _ in range(max(0, args.rounds - state.round)):
         t0 = time.time()
         state = driver.run_round(state)
         r = state.history[-1]
         cache_note = "" if r.cut_cache == "n/a" \
             else f", cut cache {r.cut_cache}"
+        fault_note = "" if r.status == "ok" \
+            else f", {r.status} (failed {list(r.failed)})"
         print(f"  round {r.round}: pairs {list(r.pairs)} "
               f"lengths {list(r.lengths)} (W={cfg.num_layers}) "
               f"mean client loss {r.mean_loss:.4f} "
               f"sim {r.sim_round_s:.1f}s "
               f"({r.cached_steps} compiled steps, "
               f"{'replanned' if r.replanned else 'kept plan'}"
-              f"{cache_note}, {time.time() - t0:.1f}s wall)")
+              f"{cache_note}{fault_note}, {time.time() - t0:.1f}s wall)")
+        fault_cli.maybe_checkpoint(driver, state, args)
+    fault_cli.maybe_checkpoint(driver, state, args, final=True)
     print(f"[fed] total simulated wall-clock: {state.sim_time_s:.1f}s")
 
 

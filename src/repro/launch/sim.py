@@ -22,6 +22,7 @@ import time
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core import latency, rounds
 from repro.core.latency import ChannelModel
+from repro.launch import fault_cli
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -67,6 +68,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="", metavar="PATH",
                     help="dump the round trace as JSON")
+    fault_cli.add_fault_args(ap)
+    fault_cli.add_checkpoint_args(ap)
     return ap
 
 
@@ -83,7 +86,8 @@ def run_sim(args) -> rounds.RoundState:
         lr=args.lr, aggregation=args.aggregation,
         overlap_boost=not args.no_overlap_boost,
         bucket_granularity=args.bucket_granularity,
-        server_cut=args.server_cut, seed=args.seed)
+        server_cut=args.server_cut, seed=args.seed,
+        faults=fault_cli.fault_config(args))
     fleet = latency.make_fleet(n=args.clients, seed=args.seed)
     # latency accounting sees the REAL architecture's boundary payloads
     # (per-cut residual-stream bytes) — what the cost-driven pairing
@@ -98,19 +102,23 @@ def run_sim(args) -> rounds.RoundState:
     print(f"[sim] {args.algorithm}/{args.engine}: {args.clients} clients, "
           f"W={cfg.num_layers}, participation={args.participation}, "
           f"drift={args.drift}m, pair_policy={rc.resolved_pair_policy}")
-    state = driver.init_state()
-    for _ in range(args.rounds):
+    state = fault_cli.initial_state(driver, args)
+    for _ in range(max(0, args.rounds - state.round)):
         t0 = time.time()
         state = driver.run_round(state)
         r = state.history[-1]
         cache_note = "" if r.cut_cache == "n/a" \
             else f", cut cache {r.cut_cache}"
+        fault_note = "" if r.status == "ok" \
+            else f", {r.status} (failed {list(r.failed)})"
         print(f"  round {r.round}: cohort={list(r.cohort)} "
               f"pairs={list(r.pairs)} loss={r.mean_loss:.4f} "
               f"sim={r.sim_round_s:.1f}s (total {r.sim_total_s:.1f}s, "
               f"{r.cached_steps} compiled steps, "
               f"{'replanned' if r.replanned else 'kept plan'}"
-              f"{cache_note}, {time.time()-t0:.1f}s wall)")
+              f"{cache_note}{fault_note}, {time.time()-t0:.1f}s wall)")
+        fault_cli.maybe_checkpoint(driver, state, args)
+    fault_cli.maybe_checkpoint(driver, state, args, final=True)
     print(f"[sim] simulated wall-clock for {args.rounds} rounds: "
           f"{state.sim_time_s:.1f}s")
     if args.json:
