@@ -24,7 +24,15 @@ Three axes on the calibrated latency model, averaged over fleet draws:
   cached re-plan (``planning.PlannerCache`` hit: cuts re-priced, not
   re-searched), plus the end-to-end ``build_joint_plan`` time.  The
   headline cell, asserted in the full run, is the N=2000 vectorized
-  re-plan >= 10x faster than the loop baseline (DESIGN.md §8).
+  re-plan >= 10x faster than the loop baseline (DESIGN.md §8),
+* device classes (``device_classes``, DESIGN.md §10): the homogeneous-
+  vs-mixed-fleet matrix — joint (greedy-cost x latency-opt) vs the
+  sequential pair-then-cut reference under per-client
+  ``cycles_per_layer`` mixes of widening class spread (all-phone ->
+  phone+edge-server).  joint <= sequential is asserted per mix per fleet
+  (in-run and by bench_smoke); the recorded ratios show the joint
+  planner's advantage widening as class spread grows (compute balance
+  decouples from the f_i clock ratio the paper's rules key on).
 
 Writes machine-readable ``BENCH_pairing.json`` at the repo root
 (``tiny=True`` smoke runs write ``BENCH_pairing_tiny.json`` so CI never
@@ -43,7 +51,14 @@ schema and the expected range of every asserted ratio:
      "scaling": {"<N>": {"loop_ms": .., "vectorized_ms": ..,
                          "cached_ms": .., "replan_ms": ..,
                          "speedup": .., "cached_speedup": ..}, ...},
-     "scaling_speedup_top_n": <N=2000 loop/vectorized, >= 10 asserted>}
+     "scaling_speedup_top_n": <N=2000 loop/vectorized, >= 10 asserted>,
+     "device_classes": {"<mix>": {"classes": [..], "mix": [..],
+                                  "class_spread": ..,
+                                  "joint_objective": ..,
+                                  "sequential_objective": ..,
+                                  "joint_vs_sequential": <mean, <= 1.0>,
+                                  "max_ratio": <worst fleet, <= 1.0>}, ...},
+     "device_class_max_ratio": <worst fleet x mix, <= 1.0 asserted>}
 """
 from __future__ import annotations
 
@@ -69,6 +84,16 @@ PAPER = {"fedpairing": 1553.0, "random": 4063.0, "location": 7275.0,
 
 SCALING_NS = (20, 200, 2000)        # full planner-scaling fleet sizes
 TINY_SCALING_NS = (8, 20, 40)       # CI smoke (structure, not the 10x)
+
+# device-class mixes of widening spread (DESIGN.md §10): per-layer cycle
+# cost worst/best ratio 1x (all paper phones) -> 20x (phones sharing a
+# fleet with edge servers)
+DEVICE_MIXES = (
+    ("homogeneous", ("phone",), (1.0,)),
+    ("mild", ("phone", "laptop"), (0.5, 0.5)),
+    ("mixed", ("phone", "laptop", "edge-server"), (0.4, 0.4, 0.2)),
+    ("extreme", ("phone", "edge-server"), (0.5, 0.5)),
+)
 
 
 def _policies(num_layers: int):
@@ -147,6 +172,60 @@ def _scaling_suite(ns, num_layers: int, tiny: bool):
         assert top_speedup >= 10.0, \
             f"N={top} vectorized speedup {top_speedup} < 10x"
     return report, rows, float(top_speedup)
+
+
+def _device_class_suite(n_fleets: int, n_clients: int, num_layers: int):
+    """Homogeneous-vs-mixed-fleet matrix (per-client workloads, §10).
+
+    For every ``DEVICE_MIXES`` entry, builds the device-class workload
+    (``latency.workload_for_classes`` — per-client ``cycles_per_layer``
+    vector, seeded class shuffle) and runs the joint planner
+    (greedy-cost x latency-opt) against its own sequential pair-then-cut
+    reference over ``n_fleets`` fleet draws.  joint <= sequential is
+    asserted per fleet per mix; the recorded mean ratios show the
+    advantage widening as class spread grows.  Returns
+    (report, rows, worst ratio over all fleets x mixes).
+    """
+    chan = ChannelModel()
+    base = WorkloadModel(num_layers=num_layers)
+    report, rows = {}, []
+    worst = 0.0
+    for name, classes, mix in DEVICE_MIXES:
+        cyc = [latency.DEVICE_CLASSES[c] for c in classes]
+        spread = max(cyc) / min(cyc)
+        objs, seqs, ratios = [], [], []
+        t0 = time.perf_counter()
+        for seed in range(n_fleets):
+            fleet = latency.make_fleet(n=n_clients, seed=seed)
+            w = latency.workload_for_classes(classes, mix, n=n_clients,
+                                             base=base, seed=seed)
+            jp = planning.build_joint_plan(fleet, chan, num_layers,
+                                           pair_policy="greedy-cost",
+                                           split_policy="latency-opt",
+                                           workload=w)
+            assert jp.objective <= jp.seq_objective + 1e-9, \
+                f"joint > sequential under mix {name} (fleet seed {seed})"
+            objs.append(jp.objective)
+            seqs.append(jp.seq_objective)
+            ratios.append(jp.objective / jp.seq_objective)
+        us = (time.perf_counter() - t0) * 1e6 / n_fleets
+        mean_ratio = float(np.mean(ratios))
+        max_ratio = float(np.max(ratios))
+        worst = max(worst, max_ratio)
+        report[name] = {
+            "classes": list(classes), "mix": list(mix),
+            "class_spread": round(float(spread), 1),
+            "joint_objective": round(float(np.mean(objs)), 2),
+            "sequential_objective": round(float(np.mean(seqs)), 2),
+            "joint_vs_sequential": round(mean_ratio, 4),
+            "max_ratio": round(max_ratio, 4)}
+        rows.append({
+            "name": f"pairing/device_mix_{name}", "us_per_call": us,
+            "derived": f"spread={spread:.0f}x "
+                       f"joint_vs_seq={mean_ratio:.3f} "
+                       f"max_ratio={max_ratio:.3f} (<= 1.0 by construction)",
+        })
+    return report, rows, float(worst)
 
 
 def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
@@ -266,6 +345,9 @@ def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
     scaling_report, scaling_rows, top_speedup = _scaling_suite(
         scaling_ns, num_layers, tiny)
     rows += scaling_rows
+    device_report, device_rows, device_worst = _device_class_suite(
+        n_fleets, n_clients, num_layers)
+    rows += device_rows
     with open(json_path, "w") as f:
         json.dump({
             "tiny": tiny, "fleets": n_fleets, "clients": n_clients,
@@ -280,6 +362,8 @@ def run(n_fleets: int = 12, n_clients: int = 20, num_layers: int = 18,
             "max_joint_ratio": round(max_joint, 4),
             "scaling": scaling_report,
             "scaling_speedup_top_n": round(top_speedup, 1),
+            "device_classes": device_report,
+            "device_class_max_ratio": round(device_worst, 4),
         }, f, indent=2)
         f.write("\n")
     return rows

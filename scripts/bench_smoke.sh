@@ -49,12 +49,32 @@ for n, e in scaling.items():
         assert key in e, (n, key)
     assert e["vectorized_ms"] > 0 and e["cached_ms"] > 0, (n, e)
 assert d["scaling_speedup_top_n"] > 0, d["scaling_speedup_top_n"]
+# the device-class matrix (DESIGN.md §10): every mix present with the
+# per-client workload built and jointly planned, and joint <= sequential
+# on EVERY fleet of EVERY mix (the ratios themselves — the advantage
+# widening with class spread — are recorded, not asserted: tiny fleets
+# are noisy)
+mixes = d.get("device_classes", {})
+assert {"homogeneous", "mild", "mixed", "extreme"} <= set(mixes), \
+    mixes.keys()
+for name, e in mixes.items():
+    for key in ("classes", "mix", "class_spread", "joint_objective",
+                "sequential_objective", "joint_vs_sequential", "max_ratio"):
+        assert key in e, (name, key)
+    assert e["joint_objective"] > 0 and e["sequential_objective"] > 0, \
+        (name, e)
+    assert len(e["classes"]) == len(e["mix"]) >= 1, (name, e)
+    assert e["class_spread"] >= 1.0, (name, e)
+    assert e["max_ratio"] <= 1.0 + 1e-9, (name, e)
+assert d["device_class_max_ratio"] <= 1.0 + 1e-9, \
+    d["device_class_max_ratio"]
 print("bench_smoke: BENCH_pairing_tiny.json OK "
       f"(latency-opt/paper objective={d['latency_opt_vs_paper_objective']}, "
       f"worst fleet={d['max_objective_ratio']}; "
       f"joint/sequential={d['joint_vs_sequential_objective']}, "
       f"worst fleet={d['max_joint_ratio']}; "
-      f"planner scaling top-N speedup={d['scaling_speedup_top_n']}x)")
+      f"planner scaling top-N speedup={d['scaling_speedup_top_n']}x; "
+      f"device-class worst joint/seq={d['device_class_max_ratio']})")
 PY
 
 python - <<'PY'

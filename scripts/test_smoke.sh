@@ -50,6 +50,10 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m pairing
 # degradation, checkpoint/resume exactness
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m faults
 
+# heterogeneous-workload suite (DESIGN.md §10): device classes, the
+# all-equal-vector bit-identity contract, per-client shape validation
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m het
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 bash scripts/bench_smoke.sh

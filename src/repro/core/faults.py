@@ -329,7 +329,12 @@ def faulted_clock(plan, fleet, chan, workload, rf: RoundFaults,
     realized slowdowns, retry penalties and the deadline.
 
     * unit times: ``latency.unit_times_from_partner`` with per-client CPU
-      divided by the slowdown and the outage backoff added per unit;
+      divided by the slowdown and the outage backoff added per unit — a
+      per-client workload (``cycles_per_client``, DESIGN.md §10) composes
+      there with the slowdown exactly once each (the slowdown scales
+      cpu_hz, the cycles vector is gathered unscaled by client id), and
+      the reliability pricing the PLANNER applied (``fail`` expected-
+      attempts multiplier) never leaks into this realized clock;
     * deadline = ``deadline_factor`` x the plan's FAULT-FREE round time
       (the clock the scheduler promised), inf when the factor is 0;
     * graceful: dead-link pairs and units past the deadline are excluded;
@@ -346,7 +351,8 @@ def faulted_clock(plan, fleet, chan, workload, rf: RoundFaults,
     lengths = plan.lengths_array()
     slowdown = np.asarray(rf.slowdown, np.float64)
     if slowdown.shape != (n,):
-        raise ValueError(f"slowdown needs {n} entries, got {slowdown.shape}")
+        raise latency.PerClientShapeError(
+            f"slowdown needs {n} entries, got {slowdown.shape}")
     extra = rf.link_penalty(n, cfg)
     units, times = latency.unit_times_from_partner(
         partner, fleet, chan, workload, active=active, lengths=lengths,

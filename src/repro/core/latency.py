@@ -18,6 +18,10 @@ import numpy as np
 
 from repro.core import planning
 
+# re-export: the named error every per-client-vector consumer raises on a
+# client-axis mismatch (defined in planning to stay import-cycle-free)
+PerClientShapeError = planning.PerClientShapeError
+
 
 @dataclasses.dataclass(frozen=True)
 class ChannelModel:
@@ -139,11 +143,103 @@ class WorkloadModel:
     # compute balance against a narrower boundary tensor.
     feature_profile: Optional[Tuple[float, ...]] = None
     grad_profile: Optional[Tuple[float, ...]] = None
+    # optional PER-CLIENT cycles_per_layer vector (index = client id,
+    # length = fleet.n; DESIGN.md §10): device-class heterogeneity —
+    # a phone pays more CPU cycles per layer per mini-batch than an
+    # edge server, independently of its clock f_i.  None -> the
+    # fleet-global scalar above applies to every client.  Consumers
+    # gather it by client id (planning.client_cycles validates the
+    # length, PerClientShapeError on mismatch); cohort sub-problems
+    # must pass an explicitly subsetted slice.  Kept a tuple so the
+    # workload stays hashable (plan/cache keys hash it by value).
+    cycles_per_client: Optional[Tuple[float, ...]] = None
+
+
+# Device-class presets: CPU cycles / layer / mini-batch.  "phone" is the
+# paper's §IV calibration (F = 2e8, the WorkloadModel default); a laptop
+# retires the same layer in ~4x fewer cycles (wider SIMD, real caches),
+# an edge server in ~20x fewer (server-class vector units) — spreads in
+# line with the per-device compute profiles of arXiv 2411.13907 /
+# 2307.11532.  Class spread COMPOUNDS with the f ~ U[0.1, 2] GHz clock
+# spread: worst-vs-best per-layer seconds widen from 20x to ~400x.
+DEVICE_CLASSES: Dict[str, float] = {
+    "phone": 2e8,
+    "laptop": 5e7,
+    "edge-server": 1e7,
+}
+
+
+def assign_device_classes(n: int, classes: Sequence[str],
+                          mix: Sequence[float],
+                          seed: int = 0) -> Tuple[str, ...]:
+    """Deterministic per-client class assignment from a class menu + mix.
+
+    ``mix`` fractions (normalized here) are converted to integer counts
+    by largest remainder, then the concatenated class list is shuffled by
+    ``default_rng(seed)`` so class is not correlated with client id
+    (client ids index positions and cpu_hz draws elsewhere).  Returns a
+    length-``n`` tuple of class names.
+    """
+    mix = np.asarray(mix, np.float64)
+    if len(mix) != len(classes):
+        raise ValueError(f"--class-mix has {len(mix)} fractions for "
+                         f"{len(classes)} classes")
+    if np.any(mix < 0) or mix.sum() <= 0:
+        raise ValueError(f"class mix must be non-negative with a positive "
+                         f"sum, got {mix.tolist()}")
+    mix = mix / mix.sum()
+    counts = np.floor(mix * n).astype(np.int64)
+    remainder = mix * n - counts
+    short = int(n - counts.sum())
+    for k in np.argsort(-remainder, kind="stable")[:short]:
+        counts[k] += 1
+    names = [c for c, k in zip(classes, counts) for _ in range(int(k))]
+    order = np.random.default_rng(seed).permutation(n)
+    return tuple(names[p] for p in order)
+
+
+def workload_for_classes(classes: Sequence[str],
+                         mix: Optional[Sequence[float]] = None, *,
+                         n: Optional[int] = None,
+                         base: Optional[WorkloadModel] = None,
+                         num_layers: int = 18,
+                         seed: int = 0) -> WorkloadModel:
+    """WorkloadModel with a per-client ``cycles_per_layer`` vector built
+    from ``DEVICE_CLASSES`` presets (DESIGN.md §10).
+
+    Two calling forms: ``classes`` is either the per-client class-name
+    list itself (one entry per client, in client-id order), or — with
+    ``mix``/``n`` — a class MENU whose fractions are deterministically
+    assigned to ``n`` clients (``assign_device_classes``).  ``base``
+    grafts the vector onto an existing workload (e.g. the launchers'
+    ``workload_from_arch``) keeping its payload profiles and the scalar
+    ``cycles_per_layer`` (which still prices fleet-global consumers like
+    the SL/SplitFed *server* side); without it a default WorkloadModel
+    at ``num_layers`` is used.
+    """
+    if mix is not None:
+        if n is None:
+            raise ValueError("workload_for_classes(mix=...) needs n= "
+                             "(the fleet size the mix is assigned over)")
+        names = assign_device_classes(n, tuple(classes), mix, seed=seed)
+    else:
+        names = tuple(classes)
+        if n is not None and len(names) != int(n):
+            raise PerClientShapeError(
+                f"{len(names)} per-client device classes for a fleet of "
+                f"{int(n)} (pass mix= to assign a class menu by fraction)")
+    unknown = sorted({c for c in names if c not in DEVICE_CLASSES})
+    if unknown:
+        raise ValueError(f"unknown device class(es) {unknown}; known: "
+                         f"{sorted(DEVICE_CLASSES)}")
+    cyc = tuple(float(DEVICE_CLASSES[c]) for c in names)
+    w = base if base is not None else WorkloadModel(num_layers=num_layers)
+    return dataclasses.replace(w, cycles_per_client=cyc)
 
 
 def workload_from_arch(cfg, *, seq_len: int = 64, batch_size: int = 32,
                        batches_per_epoch: int = 78, local_epochs: int = 2,
-                       cycles_per_layer: float = 2e8) -> WorkloadModel:
+                       cycles_per_layer=2e8) -> WorkloadModel:
     """WorkloadModel calibrated to a REAL architecture config.
 
     The per-cut ``feature_profile``/``grad_profile`` come from
@@ -153,15 +249,23 @@ def workload_from_arch(cfg, *, seq_len: int = 64, batch_size: int = 32,
     ``model_bytes`` is the architecture's true fp32 parameter footprint —
     so joint pairing x split costs price what the engines would really
     ship.  ``cycles_per_layer`` keeps the paper's §IV CPU calibration by
-    default (the fleets are simulated phones, not the training host).
+    default (the fleets are simulated phones, not the training host); a
+    SEQUENCE instead of a scalar becomes the per-client
+    ``cycles_per_client`` vector (one entry per client, DESIGN.md §10)
+    with the scalar field left at the paper default for fleet-global
+    consumers.
     """
     from repro.models import registry
 
+    per_client = None
+    if np.ndim(cycles_per_layer) > 0:
+        per_client = tuple(float(c) for c in cycles_per_layer)
+        cycles_per_layer = 2e8
     feat, grad = registry.boundary_profile(cfg, seq_len)
     mid = cfg.num_layers // 2
     return WorkloadModel(
         num_layers=cfg.num_layers,
-        cycles_per_layer=cycles_per_layer,
+        cycles_per_layer=float(cycles_per_layer),
         feature_bytes=feat[max(mid - 1, 0)],
         grad_bytes=grad[max(mid - 1, 0)],
         model_bytes=4.0 * registry.count_params_analytical(cfg),
@@ -169,23 +273,30 @@ def workload_from_arch(cfg, *, seq_len: int = 64, batch_size: int = 32,
         batches_per_epoch=batches_per_epoch,
         local_epochs=local_epochs,
         feature_profile=feat,
-        grad_profile=grad)
+        grad_profile=grad,
+        cycles_per_client=per_client)
 
 
-def split_lengths(f_i: float, f_j: float, num_layers: int) -> Tuple[int, int]:
+def split_lengths(f_i: float, f_j: float, num_layers: int,
+                  cyc_i: Optional[float] = None,
+                  cyc_j: Optional[float] = None) -> Tuple[int, int]:
     """Paper: L_i = floor(f_i/(f_i+f_j) * W), L_j = W - L_i; L_i >= 1 kept.
 
     Thin scalar wrapper over the ONE implementation of the rule
     (``planning.paper_cut``); ``f_i`` is the pair's canonical
     (lower-index) member, matching ``splitting.propagation_lengths``.
+    ``cyc_*`` are the members' per-layer cycle costs under a per-client
+    workload (the throughput-balanced generalization).
     """
-    li = planning.paper_cut(f_i, f_j, num_layers)
+    li = planning.paper_cut(f_i, f_j, num_layers, cyc_i, cyc_j)
     return li, num_layers - li
 
 
 def pair_round_time(f_i: float, f_j: float, rate_bps: float,
                     w: WorkloadModel, d_i: float = 1.0, d_j: float = 1.0,
-                    lengths: Optional[Tuple[int, int]] = None) -> float:
+                    lengths: Optional[Tuple[int, int]] = None,
+                    cyc_i: Optional[float] = None,
+                    cyc_j: Optional[float] = None) -> float:
     """Wall time for one pair to finish a communication round.
 
     Per batch, both flows run in parallel; phases are balanced by the split
@@ -200,9 +311,9 @@ def pair_round_time(f_i: float, f_j: float, rate_bps: float,
     in ``planning.pair_cost`` (alpha = beta = 1).
     """
     li, lj = lengths if lengths is not None \
-        else split_lengths(f_i, f_j, w.num_layers)
+        else split_lengths(f_i, f_j, w.num_layers, cyc_i, cyc_j)
     return planning.pair_cost(f_i, f_j, rate_bps, w, li, lj,
-                              d_i=d_i, d_j=d_j)
+                              d_i=d_i, d_j=d_j, cyc_i=cyc_i, cyc_j=cyc_j)
 
 
 def objective_value(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
@@ -225,43 +336,62 @@ def objective_value(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
 
 def _pair_times_batch(i: np.ndarray, j: np.ndarray, fleet: ClientFleet,
                       rates: np.ndarray, w: WorkloadModel,
-                      lengths: Optional[np.ndarray]) -> np.ndarray:
+                      lengths: Optional[np.ndarray],
+                      cycles: Optional[np.ndarray] = None) -> np.ndarray:
     """Eq. (3) wall times (seconds) for an array of pairs at once — the
     batched workload terms behind the round-time simulation (same
     float64 arithmetic as the scalar ``pair_round_time``, via
     ``planning.pair_cost_batch``).  ``i`` must be the canonical
     (lower-index) member of every pair; default split is the paper rule.
+    ``cycles`` is the validated per-client cycles vector (defaults to
+    the workload's own, length-checked against ``fleet.n``); both the
+    cut rule and the cost gather it by the raw client ids.
     """
     f = np.asarray(fleet.cpu_hz, np.float64)
+    cyc = planning.client_cycles(w, fleet.n) if cycles is None else cycles
+    cy_i = cyc[i] if cyc is not None else None
+    cy_j = cyc[j] if cyc is not None else None
     if lengths is None:
-        li = planning.paper_cut_batch(f[i], f[j], w.num_layers)
+        li = planning.paper_cut_batch(f[i], f[j], w.num_layers, cy_i, cy_j)
         lj = w.num_layers - li
     else:
         lengths = np.asarray(lengths, np.int64)
         li, lj = lengths[i], lengths[j]
-    return planning.pair_cost_batch(f[i], f[j], rates[i, j], w, li, lj)
+    return planning.pair_cost_batch(f[i], f[j], rates[i, j], w, li, lj,
+                                    cyc_i=cy_i, cyc_j=cy_j)
 
 
 def round_time_fedpairing(pairs: Sequence[Tuple[int, int]], fleet: ClientFleet,
                           chan: ChannelModel, w: WorkloadModel,
                           server_rate_bps: Optional[np.ndarray] = None,
                           lengths: Optional[np.ndarray] = None) -> float:
-    """Round (seconds) = slowest pair (parallel pairs) + model uploads.
-    ``lengths`` overrides the per-client split (a RoundPlan's lengths
-    under any policy); default is the paper rule.  Batched over pairs."""
-    rates = fleet.rates(chan)
-    idx = np.asarray([(min(i, j), max(i, j)) for i, j in pairs],
-                     np.int64).reshape(-1, 2)
-    per_pair = _pair_times_batch(idx[:, 0], idx[:, 1], fleet, rates, w,
-                                 lengths)
-    upload = _upload_time(fleet, chan, w, server_rate_bps)
-    return float(np.max(per_pair)) + upload
+    """Round (seconds) = slowest unit (parallel pairs AND unpaired solo
+    clients training the full stack) + model uploads.  ``lengths``
+    overrides the per-client split (a RoundPlan's lengths under any
+    policy); default is the paper rule.
+
+    Delegates to the one unit decomposition
+    (``unit_times_from_partner`` via ``round_time_from_partner``) so the
+    pairs-list and partner-involution accounting paths cannot diverge:
+    historically this path took max over the PAIRS only, silently
+    dropping self-paired members of an odd cohort from the round max —
+    on perfect matchings (every benchmark fleet) the two were identical,
+    on odd fleets this underestimated the round.
+    """
+    partner = planning.partner_from_pairs(pairs, fleet.n)
+    return round_time_from_partner(partner, fleet, chan, w,
+                                   server_rate_bps=server_rate_bps,
+                                   lengths=lengths)
 
 
-def local_full_stack_time(cpu_hz, w: WorkloadModel):
+def local_full_stack_time(cpu_hz, w: WorkloadModel, cycles=None):
     """Per-client wall time to train all W layers locally (fwd+bwd) — the
-    vanilla-FL cost, also paid by self-paired cohort members."""
-    return (w.num_layers * w.cycles_per_layer / np.asarray(cpu_hz)
+    vanilla-FL cost, also paid by self-paired cohort members.  ``cycles``
+    overrides the fleet-global ``w.cycles_per_layer`` with the clients'
+    own per-layer costs (already gathered to match ``cpu_hz``)."""
+    cyc = w.cycles_per_layer if cycles is None else np.asarray(cycles,
+                                                              np.float64)
+    return (w.num_layers * cyc / np.asarray(cpu_hz)
             * 2.0 * w.batches_per_epoch * w.local_epochs)
 
 
@@ -289,21 +419,42 @@ def unit_times_from_partner(partner: np.ndarray, fleet: ClientFleet,
     unit — a pair pays the max over its members, so a shared link's
     retry backoff is not double-counted.  Both default to no-ops with
     bit-exact arithmetic (``round_time_from_partner`` delegates here).
+    Both are validated against ``fleet.n`` up front
+    (``PerClientShapeError``) — they are indexed by raw client id, so a
+    short vector would otherwise fail late with an opaque IndexError (or
+    worse, silently misprice).  A per-client workload composes with
+    ``cpu_scale`` exactly once each: the slowdown divides ``cpu_hz``
+    here (the ONE place it is applied) while ``cycles_per_client`` is
+    gathered by raw client id from the unscaled workload — a straggler
+    pays ``L * cycles[i] * scale[i] / cpu_hz[i]``, never ``scale**2``.
     """
     n = fleet.n
     act = np.ones(n, bool) if active is None else np.asarray(active, bool)
     partner = np.asarray(partner, np.int64)
     idx = np.arange(n)
+    cyc = planning.client_cycles(w, n)
     eff = fleet
     if cpu_scale is not None:
         scale = np.asarray(cpu_scale, np.float64)
+        if scale.shape != (n,):
+            raise PerClientShapeError(
+                f"cpu_scale must have one entry per client ({n}), got "
+                f"shape {scale.shape}")
         eff = dataclasses.replace(
             fleet, cpu_hz=np.asarray(fleet.cpu_hz, np.float64) / scale)
+    if extra_s is not None:
+        ex = np.asarray(extra_s, np.float64)
+        if ex.shape != (n,):
+            raise PerClientShapeError(
+                f"extra_s must have one entry per client ({n}), got "
+                f"shape {ex.shape}")
     units: List[Tuple[int, ...]] = []
     times: List[float] = []
     selfp = act & (partner == idx)
     if selfp.any():
-        solo = np.atleast_1d(local_full_stack_time(eff.cpu_hz[selfp], w))
+        solo = np.atleast_1d(local_full_stack_time(
+            eff.cpu_hz[selfp], w,
+            cycles=cyc[selfp] if cyc is not None else None))
         for i, t in zip(np.flatnonzero(selfp), solo):
             units.append((int(i),))
             times.append(float(t))
@@ -311,12 +462,11 @@ def unit_times_from_partner(partner: np.ndarray, fleet: ClientFleet,
     if ci.size:
         rates = fleet.rates(chan)
         per_pair = _pair_times_batch(ci, partner[ci], eff, rates, w,
-                                     lengths)
+                                     lengths, cycles=cyc)
         for i, t in zip(ci, per_pair):
             units.append((int(i), int(partner[i])))
             times.append(float(t))
     if extra_s is not None:
-        ex = np.asarray(extra_s, np.float64)
         times = [t + float(np.max(ex[list(u)]))
                  for u, t in zip(units, times)]
     return tuple(units), np.asarray(times, np.float64)
@@ -365,12 +515,30 @@ def round_time_plan(plan: "planning.RoundPlan", fleet: ClientFleet,
                                    lengths=plan.lengths_array())
 
 
+def _fleet_cycles(fleet: ClientFleet, w: WorkloadModel,
+                  cycles: Optional[np.ndarray]) -> Optional[np.ndarray]:
+    """The per-client cycles vector a baseline round prices: an explicit
+    ``cycles`` override (already subsetted by a subfleet caller, shape-
+    checked here) or the workload's own, validated against ``fleet.n``."""
+    if cycles is None:
+        return planning.client_cycles(w, fleet.n)
+    cyc = np.asarray(cycles, np.float64)
+    if cyc.shape != (fleet.n,):
+        raise PerClientShapeError(
+            f"cycles override must have one entry per client ({fleet.n}), "
+            f"got shape {cyc.shape}")
+    return cyc
+
+
 def round_time_vanilla_fl(fleet: ClientFleet, chan: ChannelModel,
                           w: WorkloadModel,
-                          server_rate_bps: Optional[np.ndarray] = None
-                          ) -> float:
-    """Every client trains all W layers locally; straggler bounds the round."""
-    per_client = local_full_stack_time(fleet.cpu_hz, w)
+                          server_rate_bps: Optional[np.ndarray] = None,
+                          cycles: Optional[np.ndarray] = None) -> float:
+    """Every client trains all W layers locally; straggler bounds the round.
+    ``cycles`` overrides the per-client cycles vector for subfleet callers
+    (the workload's own vector is indexed by FULL-fleet client id)."""
+    per_client = local_full_stack_time(fleet.cpu_hz, w,
+                                       cycles=_fleet_cycles(fleet, w, cycles))
     return float(np.max(per_client)) + _upload_time(fleet, chan, w,
                                                     server_rate_bps)
 
@@ -378,8 +546,8 @@ def round_time_vanilla_fl(fleet: ClientFleet, chan: ChannelModel,
 def round_time_vanilla_sl(fleet: ClientFleet, chan: ChannelModel,
                           w: WorkloadModel, client_layers: int = 1,
                           server_hz: float = 50e9, sequential: bool = False,
-                          server_rate_bps: Optional[np.ndarray] = None
-                          ) -> float:
+                          server_rate_bps: Optional[np.ndarray] = None,
+                          cycles: Optional[np.ndarray] = None) -> float:
     """Vanilla split learning: clients hold the (cheap, shallow)
     ``client_layers`` stem; the high-compute server runs the rest.
 
@@ -390,10 +558,15 @@ def round_time_vanilla_sl(fleet: ClientFleet, chan: ChannelModel,
     bounded by max(slowest client stream, total server work).
     ``sequential=True`` gives the classic relay, which is also what the
     convergence baseline simulates (its order-sensitivity is what breaks
-    SL under Non-IID).
+    SL under Non-IID).  A per-client workload (or ``cycles`` override for
+    subfleet callers) prices each CLIENT stem at its own per-layer cost;
+    the server side stays on the fleet-global scalar (the server is not a
+    fleet device).
     """
     rates = _server_rates(fleet, chan, server_rate_bps)
-    comp_c = client_layers * w.cycles_per_layer / fleet.cpu_hz * 2
+    cyc = _fleet_cycles(fleet, w, cycles)
+    c_client = w.cycles_per_layer if cyc is None else cyc
+    comp_c = client_layers * c_client / fleet.cpu_hz * 2
     comp_s = (w.num_layers - client_layers) * w.cycles_per_layer / server_hz * 2
     comm = w.batch_size * (w.feature_bytes + w.grad_bytes) / rates
     per_client = (comp_c + comp_s + comm) * w.batches_per_epoch * w.local_epochs
@@ -406,17 +579,21 @@ def round_time_vanilla_sl(fleet: ClientFleet, chan: ChannelModel,
 def round_time_splitfed(fleet: ClientFleet, chan: ChannelModel,
                         w: WorkloadModel, client_layers: int = 3,
                         server_hz: float = 50e9,
-                        server_rate_bps: Optional[np.ndarray] = None
-                        ) -> float:
+                        server_rate_bps: Optional[np.ndarray] = None,
+                        cycles: Optional[np.ndarray] = None) -> float:
     """SplitFed: clients run bottoms in PARALLEL; the server runs the tops
     for every client each batch behind a per-batch BARRIER (synchronized
     fed-server aggregation), so the straggler and the serial server work
     add per batch — that is what puts SplitFed above FedPairing in Table II
     despite the server's compute advantage.  SplitFed keeps a deeper
     client-side subnetwork than vanilla SL (its design goal is reducing
-    server load), hence the larger default ``client_layers``."""
+    server load), hence the larger default ``client_layers``.  Per-client
+    cycles price the client bottoms only (see ``round_time_vanilla_sl``).
+    """
     rates = _server_rates(fleet, chan, server_rate_bps)
-    per_client = (client_layers * w.cycles_per_layer / fleet.cpu_hz * 2
+    cyc = _fleet_cycles(fleet, w, cycles)
+    c_client = w.cycles_per_layer if cyc is None else cyc
+    per_client = (client_layers * c_client / fleet.cpu_hz * 2
                   + w.batch_size * (w.feature_bytes + w.grad_bytes) / rates)
     server = (w.num_layers - client_layers) * w.cycles_per_layer / server_hz \
         * 2 * fleet.n

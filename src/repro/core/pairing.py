@@ -156,7 +156,8 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
                      rates: Optional[np.ndarray] = None,
                      rel_data: Optional[np.ndarray] = None,
                      cache: Optional[planning.PlannerCache] = None,
-                     fail: Optional[np.ndarray] = None
+                     fail: Optional[np.ndarray] = None,
+                     cycles: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """(N, N) symmetric edge-cost matrix for joint pairing x split search.
 
@@ -183,7 +184,13 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
     (DESIGN.md §8).  ``fail`` ((N,) per-client failure probabilities)
     prices every edge with the expected-latency reliability multiplier
     (``planning.pair_cost``) — cut-independent, so the cut matrix is
-    unchanged; part of the cache's problem key.
+    unchanged; part of the cache's problem key.  ``cycles`` overrides the
+    workload's per-client ``cycles_per_layer`` vector with a cohort-local
+    slice (sub-problems index the subfleet, not the full fleet); default
+    is the workload's own vector validated against ``fleet.n`` — either
+    way the vector prices each edge's two flows at their own per-layer
+    costs and is hashed into the cache key (device-class changes can
+    never reuse stale cuts).
     """
     if workload is None:
         raise ValueError("pair_cost_matrix needs a workload model "
@@ -191,10 +198,20 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
     n = fleet.n
     f, rates, rel_data = _matrix_inputs(fleet, chan, rates, rel_data)
     pol = planning.get_policy(split_policy)
+    if cycles is None:
+        cyc = planning.client_cycles(workload, n)
+    else:
+        cyc = np.asarray(cycles, np.float64)
+        if cyc.shape != (n,):
+            raise planning.PerClientShapeError(
+                f"cycles override must have one entry per client ({n}), "
+                f"got shape {cyc.shape}")
     iu, ju = np.triu_indices(n, k=1)
     f_i, f_j = f[iu], f[ju]
     r = rates[iu, ju]
     d_i, d_j = rel_data[iu], rel_data[ju]
+    cy_i = cyc[iu] if cyc is not None else None
+    cy_j = cyc[ju] if cyc is not None else None
     if fail is None:
         fl_i = fl_j = 0.0
     else:
@@ -204,17 +221,17 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
     def search():
         return planning.policy_cut_costs(pol, f_i, f_j, r, d_i, d_j,
                                          workload, num_layers, alpha, beta,
-                                         fl_i, fl_j)
+                                         fl_i, fl_j, cy_i, cy_j)
 
     if cache is not None:
         key = planning.PlannerCache.problem_key(f, rel_data, workload, pol,
                                                 num_layers, alpha, beta,
-                                                fail=fail)
+                                                fail=fail, cycles=cyc)
         found = cache.consult(
             key, pol.rate_aware,
             lambda cuts: planning.price_cuts(cuts, f_i, f_j, r, d_i, d_j,
                                              workload, num_layers, alpha,
-                                             beta, fl_i, fl_j))
+                                             beta, fl_i, fl_j, cy_i, cy_j))
         if found is None:
             found = search()
             if found is not None:
@@ -225,7 +242,7 @@ def pair_cost_matrix(fleet: ClientFleet, chan: Optional[ChannelModel],
         return pair_cost_matrix_reference(
             fleet, chan, num_layers, workload, split_policy=pol,
             alpha=alpha, beta=beta, rates=rates, rel_data=rel_data,
-            fail=fail)
+            fail=fail, cycles=cyc)
     cvec, costv = found
     cost = np.full((n, n), np.inf)
     cuts = np.zeros((n, n), np.int64)
@@ -241,7 +258,8 @@ def pair_cost_matrix_reference(fleet: ClientFleet,
                                beta: float = 1.0,
                                rates: Optional[np.ndarray] = None,
                                rel_data: Optional[np.ndarray] = None,
-                               fail: Optional[np.ndarray] = None
+                               fail: Optional[np.ndarray] = None,
+                               cycles: Optional[np.ndarray] = None
                                ) -> Tuple[np.ndarray, np.ndarray]:
     """Scalar reference for ``pair_cost_matrix``: the pure-Python
     O(N^2 W) per-pair loop over ``SplitPolicy.pair_cut_cost``.
@@ -259,6 +277,8 @@ def pair_cost_matrix_reference(fleet: ClientFleet,
     f, rates, rel_data = _matrix_inputs(fleet, chan, rates, rel_data)
     pol = planning.get_policy(split_policy)
     fl = None if fail is None else np.asarray(fail, np.float64)
+    cyc = planning.client_cycles(workload, n) if cycles is None \
+        else np.asarray(cycles, np.float64)
     cost = np.full((n, n), np.inf)
     cuts = np.zeros((n, n), np.int64)
     for i in range(n):
@@ -269,7 +289,9 @@ def pair_cost_matrix_reference(fleet: ClientFleet,
                 d_j=float(rel_data[j]), workload=workload,
                 alpha=alpha, beta=beta,
                 fail_i=float(fl[i]) if fl is not None else 0.0,
-                fail_j=float(fl[j]) if fl is not None else 0.0)
+                fail_j=float(fl[j]) if fl is not None else 0.0,
+                cyc_i=float(cyc[i]) if cyc is not None else None,
+                cyc_j=float(cyc[j]) if cyc is not None else None)
             li, c = pol.pair_cut_cost(ctx)
             cost[i, j] = cost[j, i] = c
             cuts[i, j] = cuts[j, i] = int(li)
@@ -474,6 +496,10 @@ class PairingContext:
     # per-client failure probabilities (cohort-local, like rates/rel_data)
     # for reliability-aware edge pricing; None -> no reliability term
     fail: Optional[np.ndarray] = None
+    # per-client cycles_per_layer (cohort-local, like rates/rel_data) for
+    # device-class edge pricing; None -> the workload's own vector (full
+    # fleet) or its fleet-global scalar
+    cycles: Optional[np.ndarray] = None
 
 
 class PairingPolicy:
@@ -540,7 +566,7 @@ class _CostPairing(PairingPolicy):
             fleet, chan, ctx.num_layers, ctx.workload,
             split_policy=ctx.split_policy, alpha=ctx.alpha, beta=ctx.beta,
             rates=ctx.rates, rel_data=ctx.rel_data, cache=ctx.cache,
-            fail=ctx.fail)
+            fail=ctx.fail, cycles=ctx.cycles)
         return self._select(cost)
 
 

@@ -41,11 +41,50 @@ import numpy as np
 POLICY_SPECS = ("paper", "latency-opt", "fixed:K")
 
 
+class PerClientShapeError(ValueError):
+    """A per-client vector (``cycles_per_client``, ``cpu_scale``,
+    ``extra_s``, ``fail``) does not match the fleet's client axis.
+
+    Raised up front by the consumers that index such vectors by client
+    id, so a short vector fails with its producer named instead of an
+    opaque IndexError deep inside the batched arithmetic."""
+
+
+def client_cycles(workload, n: Optional[int] = None
+                  ) -> Optional[np.ndarray]:
+    """The per-client ``cycles_per_layer`` vector of a workload, or None
+    for fleet-global workloads (the scalar ``cycles_per_layer`` applies
+    to every client).
+
+    With ``n`` given the vector is validated against the fleet's client
+    axis (``PerClientShapeError`` on mismatch) — every consumer that
+    gathers cycles by client id calls this first, so a workload built
+    for one fleet cannot silently misprice another (or a subfleet, whose
+    callers must pass an explicitly subsetted vector)."""
+    cyc = getattr(workload, "cycles_per_client", None) \
+        if workload is not None else None
+    if cyc is None:
+        return None
+    cyc = np.asarray(cyc, np.float64)
+    if cyc.ndim != 1:
+        raise PerClientShapeError(
+            f"cycles_per_client must be a flat per-client vector, got "
+            f"shape {cyc.shape}")
+    if n is not None and len(cyc) != int(n):
+        raise PerClientShapeError(
+            f"cycles_per_client has {len(cyc)} entries but the fleet has "
+            f"{int(n)} clients — per-client workloads are indexed by "
+            f"client id (subset the vector when pricing a subfleet)")
+    return cyc
+
+
 # ---------------------------------------------------------------------------
 # the paper's split rule — the ONE implementation
 # ---------------------------------------------------------------------------
 
-def paper_cut(f_i: float, f_j: float, num_layers: int) -> int:
+def paper_cut(f_i: float, f_j: float, num_layers: int,
+              cyc_i: Optional[float] = None,
+              cyc_j: Optional[float] = None) -> int:
     """Eq. (6): L_i = floor(f_i/(f_i+f_j) W), clamped to [1, W-1].
 
     ``f_i`` is the *canonical* (lower-index) member of the pair; its
@@ -53,34 +92,65 @@ def paper_cut(f_i: float, f_j: float, num_layers: int) -> int:
     its batched twin ``paper_cut_batch``) is the single implementation
     of the rule — the scalar ``latency.split_lengths`` and vectorized
     ``splitting.propagation_lengths`` are thin wrappers.
+
+    ``cyc_i``/``cyc_j`` generalize the rule to per-client per-layer
+    costs (device classes): the ratio balances per-layer *throughput*
+    ``tau = f / cycles`` instead of raw frequency, so the member that
+    finishes a layer faster owns more of the stack.  Equal cycles
+    cancel exactly — the historical expression is evaluated verbatim in
+    that case, keeping fleet-global workloads bit-identical.
     """
-    li = int(np.floor(f_i / (f_i + f_j) * num_layers))
+    if cyc_i is not None and cyc_i != cyc_j:
+        tau_i, tau_j = f_i / cyc_i, f_j / cyc_j
+        li = int(np.floor(tau_i / (tau_i + tau_j) * num_layers))
+    else:
+        li = int(np.floor(f_i / (f_i + f_j) * num_layers))
     return min(max(li, 1), num_layers - 1)
 
 
-def paper_cut_batch(f_i, f_j, num_layers: int) -> np.ndarray:
+def paper_cut_batch(f_i, f_j, num_layers: int, cyc_i=None,
+                    cyc_j=None) -> np.ndarray:
     """Vectorized ``paper_cut`` over arrays of canonical-member pairs —
     the ONE batched form of the Eq. (6) rule (``paper_lengths``, the
     ``policy_cut_costs`` paper branch and the latency accounting's
-    default split all delegate here)."""
+    default split all delegate here).  ``cyc_*`` are optional per-member
+    ``cycles_per_layer`` arrays (the throughput-balanced generalization;
+    pairs with equal cycles take the historical expression exactly)."""
     f_i = np.asarray(f_i, np.float64)
     f_j = np.asarray(f_j, np.float64)
-    base = np.floor(f_i / (f_i + f_j) * num_layers).astype(np.int64)
+    if cyc_i is None:
+        ratio = f_i / (f_i + f_j)
+    else:
+        cyc_i = np.asarray(cyc_i, np.float64)
+        cyc_j = np.asarray(cyc_j, np.float64)
+        tau_i, tau_j = f_i / cyc_i, f_j / cyc_j
+        # equal-cycles pairs keep the cycle-free expression bit-exactly
+        # (the ratio cancels mathematically; np.where makes it literal)
+        ratio = np.where(cyc_i == cyc_j, f_i / (f_i + f_j),
+                         tau_i / (tau_i + tau_j))
+    base = np.floor(ratio * num_layers).astype(np.int64)
     return np.clip(base, 1, num_layers - 1)
 
 
 def paper_lengths(f: np.ndarray, partner: np.ndarray,
-                  num_layers: int) -> np.ndarray:
+                  num_layers: int,
+                  cycles: Optional[np.ndarray] = None) -> np.ndarray:
     """Vectorized paper rule over a partner involution.
 
     The lower-indexed member of each pair is canonical (`paper_cut`); its
     partner gets the complement, so lengths sum to W exactly.  Self-paired
-    clients get the full stack (L_i = W).
+    clients get the full stack (L_i = W).  ``cycles`` is the optional
+    (N,) per-client ``cycles_per_layer`` vector (``client_cycles``).
     """
     f = np.asarray(f, np.float64)
     partner = np.asarray(partner, np.int64)
     idx = np.arange(len(f))
-    base = paper_cut_batch(f, f[partner], num_layers)
+    if cycles is None:
+        base = paper_cut_batch(f, f[partner], num_layers)
+    else:
+        cycles = np.asarray(cycles, np.float64)
+        base = paper_cut_batch(f, f[partner], num_layers,
+                               cycles, cycles[partner])
     li = np.where(idx <= partner, base, num_layers - base[partner])
     return np.where(partner == idx, num_layers, li)
 
@@ -135,7 +205,8 @@ def boundary_bytes_batch(w, cuts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
 def pair_cost(f_i: float, f_j: float, rate_bps: float, w, li: int, lj: int,
               d_i: float = 1.0, d_j: float = 1.0, alpha: float = 1.0,
               beta: float = 1.0, fail_i: float = 0.0,
-              fail_j: float = 0.0) -> float:
+              fail_j: float = 0.0, cyc_i: Optional[float] = None,
+              cyc_j: Optional[float] = None) -> float:
     """Eq. (3) wall time (**seconds**) of one pair's round at split
     (li, lj), weighted by the Problem-1 alpha/beta trade-off (Eq. 4's
     per-pair term).  ``f_*`` are CPU frequencies in Hz, ``rate_bps`` the
@@ -158,8 +229,15 @@ def pair_cost(f_i: float, f_j: float, rate_bps: float, w, li: int, lj: int,
     it never changes a pair's optimal cut — only which pairs a joint
     matching builds its critical path through.  At the 0.0 default the
     divisor is exactly 1.0, so fault-free costs stay bit-identical.
+
+    ``cyc_*`` override the workload's fleet-global ``cycles_per_layer``
+    with the members' own per-layer costs (device classes, DESIGN.md
+    §10); passing the same value as the scalar evaluates the identical
+    expression, so all-equal per-client vectors stay bit-identical.
     """
-    phase = max(li * w.cycles_per_layer / f_i, lj * w.cycles_per_layer / f_j)
+    c_i = w.cycles_per_layer if cyc_i is None else cyc_i
+    c_j = w.cycles_per_layer if cyc_j is None else cyc_j
+    phase = max(li * c_i / f_i, lj * c_j / f_j)
     compute = 2.0 * 2.0 * phase
     # direction i->j carries flow i's boundary features (cut li) plus flow
     # j's boundary gradients (cut lj), and vice versa — each flow's payload
@@ -176,7 +254,8 @@ def pair_cost(f_i: float, f_j: float, rate_bps: float, w, li: int, lj: int,
 
 def pair_cost_batch(f_i, f_j, rate_bps, w, li, lj, d_i=1.0, d_j=1.0,
                     alpha: float = 1.0, beta: float = 1.0,
-                    fail_i=0.0, fail_j=0.0) -> np.ndarray:
+                    fail_i=0.0, fail_j=0.0, cyc_i=None,
+                    cyc_j=None) -> np.ndarray:
     """Vectorized ``pair_cost``: Eq. (3) **seconds** over arrays of pairs.
 
     Elementwise over broadcastable arrays (``f_*`` in Hz, ``rate_bps`` in
@@ -195,8 +274,9 @@ def pair_cost_batch(f_i, f_j, rate_bps, w, li, lj, d_i=1.0, d_j=1.0,
     f_j = np.asarray(f_j, np.float64)
     li = np.asarray(li, np.int64)
     lj = np.asarray(lj, np.int64)
-    phase = np.maximum(li * w.cycles_per_layer / f_i,
-                       lj * w.cycles_per_layer / f_j)
+    c_i = w.cycles_per_layer if cyc_i is None else np.asarray(cyc_i, np.float64)
+    c_j = w.cycles_per_layer if cyc_j is None else np.asarray(cyc_j, np.float64)
+    phase = np.maximum(li * c_i / f_i, lj * c_j / f_j)
     compute = 2.0 * 2.0 * phase
     feat_i, grad_i = boundary_bytes_batch(w, li)
     feat_j, grad_j = boundary_bytes_batch(w, lj)
@@ -219,7 +299,10 @@ class PairContext:
     comm term; ``workload`` may be None for compute-only policies;
     ``fail_*`` are per-member failure probabilities (the expected-latency
     reliability multiplier of ``pair_cost`` — cut-independent, so it
-    scales a policy's costs without moving its chosen cut)."""
+    scales a policy's costs without moving its chosen cut); ``cyc_*``
+    are the members' own per-layer cycle costs when the workload is
+    per-client (device classes — None falls back to the workload's
+    fleet-global scalar)."""
 
     f_i: float
     f_j: float
@@ -232,6 +315,8 @@ class PairContext:
     beta: float = 1.0
     fail_i: float = 0.0
     fail_j: float = 0.0
+    cyc_i: Optional[float] = None
+    cyc_j: Optional[float] = None
 
 
 class SplitPolicy:
@@ -258,16 +343,19 @@ class SplitPolicy:
         li = self.pair_cut(ctx)
         return li, pair_cost(ctx.f_i, ctx.f_j, ctx.rate_bps, ctx.workload,
                              li, ctx.num_layers - li, ctx.d_i, ctx.d_j,
-                             ctx.alpha, ctx.beta, ctx.fail_i, ctx.fail_j)
+                             ctx.alpha, ctx.beta, ctx.fail_i, ctx.fail_j,
+                             ctx.cyc_i, ctx.cyc_j)
 
 
 class PaperSplitPolicy(SplitPolicy):
-    """The paper's compute-ratio rule (Eq. 6)."""
+    """The paper's compute-ratio rule (Eq. 6; throughput-balanced under
+    per-client cycle costs — see ``paper_cut``)."""
 
     spec = "paper"
 
     def pair_cut(self, ctx: PairContext) -> int:
-        return paper_cut(ctx.f_i, ctx.f_j, ctx.num_layers)
+        return paper_cut(ctx.f_i, ctx.f_j, ctx.num_layers,
+                         ctx.cyc_i, ctx.cyc_j)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -304,7 +392,8 @@ class LatencyOptSplitPolicy(SplitPolicy):
         W = ctx.num_layers
         costs = [pair_cost(ctx.f_i, ctx.f_j, ctx.rate_bps, ctx.workload,
                            cut, W - cut, ctx.d_i, ctx.d_j, ctx.alpha,
-                           ctx.beta, ctx.fail_i, ctx.fail_j)
+                           ctx.beta, ctx.fail_i, ctx.fail_j,
+                           ctx.cyc_i, ctx.cyc_j)
                  for cut in range(1, W)]
         k = int(np.argmin(costs))
         return 1 + k, costs[k]
@@ -334,7 +423,7 @@ def get_policy(spec) -> SplitPolicy:
 
 def policy_cut_costs(policy, f_i, f_j, rates, d_i, d_j, workload,
                      num_layers: int, alpha: float = 1.0, beta: float = 1.0,
-                     fail_i=0.0, fail_j=0.0
+                     fail_i=0.0, fail_j=0.0, cyc_i=None, cyc_j=None
                      ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
     """Vectorized ``SplitPolicy.pair_cut_cost`` over candidate-pair arrays.
 
@@ -363,10 +452,10 @@ def policy_cut_costs(policy, f_i, f_j, rates, d_i, d_j, workload,
             return cuts, None
         return cuts, pair_cost_batch(f_i, f_j, rates, workload, cuts,
                                      W - cuts, d_i, d_j, alpha, beta,
-                                     fail_i, fail_j)
+                                     fail_i, fail_j, cyc_i, cyc_j)
 
     if isinstance(policy, PaperSplitPolicy):
-        return priced(paper_cut_batch(f_i, f_j, W))
+        return priced(paper_cut_batch(f_i, f_j, W, cyc_i, cyc_j))
     if isinstance(policy, FixedSplitPolicy):
         k = min(max(policy.k, 1), W - 1)
         return priced(np.full(f_i.shape, k, np.int64))
@@ -387,7 +476,7 @@ def policy_cut_costs(policy, f_i, f_j, rates, d_i, d_j, workload,
 
 def price_cuts(cuts, f_i, f_j, rates, d_i, d_j, workload, num_layers: int,
                alpha: float = 1.0, beta: float = 1.0,
-               fail_i=0.0, fail_j=0.0) -> np.ndarray:
+               fail_i=0.0, fail_j=0.0, cyc_i=None, cyc_j=None) -> np.ndarray:
     """Re-price GIVEN per-candidate cuts on a (possibly drifted) channel:
     the O(P) half of a re-plan, with no O(P·W) cut re-search — what a
     ``PlannerCache`` hit executes (DESIGN.md §8)."""
@@ -395,7 +484,7 @@ def price_cuts(cuts, f_i, f_j, rates, d_i, d_j, workload, num_layers: int,
     return pair_cost_batch(np.asarray(f_i, np.float64),
                            np.asarray(f_j, np.float64), rates, workload,
                            cuts, int(num_layers) - cuts, d_i, d_j,
-                           alpha, beta, fail_i, fail_j)
+                           alpha, beta, fail_i, fail_j, cyc_i, cyc_j)
 
 
 # ---------------------------------------------------------------------------
@@ -460,11 +549,18 @@ class PlannerCache:
     @staticmethod
     def problem_key(fleet_cpu_hz, rel_data, workload, policy,
                     num_layers: int, alpha: float, beta: float,
-                    fail=None) -> Tuple:
+                    fail=None, cycles=None) -> Tuple:
         """The drift-invariant identity of one cut-search problem.
         ``fail`` (per-client failure probabilities, the reliability
         pricing term) is part of the identity: the same cohort priced
-        with and without reliability is a different problem."""
+        with and without reliability is a different problem.  So is
+        ``cycles`` — the per-client ``cycles_per_layer`` vector actually
+        used to price the candidates (cohort-local; defaults to the
+        workload's own): hashed by VALUE (raw float64 bytes), so a
+        device-class change can never reuse another class mix's cuts
+        even for duck-typed workloads keyed by ``id()``, while pure
+        channel-rate drift leaves the key (and any rate-independent
+        entry) untouched."""
         pol = get_policy(policy)
         try:
             hash(workload)
@@ -473,10 +569,14 @@ class PlannerCache:
             wkey = id(workload)
         fkey = None if fail is None \
             else np.asarray(fail, np.float64).tobytes()
+        if cycles is None:
+            cycles = client_cycles(workload)
+        ckey = None if cycles is None \
+            else np.asarray(cycles, np.float64).tobytes()
         return (np.asarray(fleet_cpu_hz, np.float64).tobytes(),
                 np.asarray(rel_data, np.float64).tobytes(),
                 wkey, pol.spec, int(num_layers), float(alpha), float(beta),
-                fkey)
+                fkey, ckey)
 
     def consult(self, key: Tuple, rate_aware: bool,
                 reprice: Callable[[np.ndarray], np.ndarray]
@@ -527,12 +627,16 @@ def policy_lengths(f: np.ndarray, partner: np.ndarray, num_layers: int,
     clients always get the full stack.  Built-in policies take the
     vectorized path (``policy_cut_costs`` over the canonical pairs);
     custom SplitPolicy subclasses fall back to the scalar per-pair loop.
+    A per-client workload (``cycles_per_client``, validated against
+    ``len(f)``) makes every cut flow-asymmetric: each member's side of
+    the search is priced at its own per-layer cost.
     """
     policy = get_policy(policy)
     f = np.asarray(f, np.float64)
     partner = np.asarray(partner, np.int64)
+    cyc = client_cycles(workload, len(f))
     if isinstance(policy, PaperSplitPolicy):      # fully closed-form
-        return paper_lengths(f, partner, num_layers)
+        return paper_lengths(f, partner, num_layers, cycles=cyc)
     lengths = np.full(len(f), num_layers, np.int64)
     ci = np.flatnonzero(np.arange(len(f)) < partner)   # canonical members
     if ci.size == 0:
@@ -543,7 +647,9 @@ def policy_lengths(f: np.ndarray, partner: np.ndarray, num_layers: int,
         rates[ci, cj] if rates is not None else float("inf"),
         rel_data[ci] if rel_data is not None else 1.0,
         rel_data[cj] if rel_data is not None else 1.0,
-        workload, num_layers, alpha, beta)
+        workload, num_layers, alpha, beta,
+        cyc_i=cyc[ci] if cyc is not None else None,
+        cyc_j=cyc[cj] if cyc is not None else None)
     if batched is not None:
         cuts, _ = batched
         lengths[ci] = cuts
@@ -556,7 +662,9 @@ def policy_lengths(f: np.ndarray, partner: np.ndarray, num_layers: int,
                       else float("inf")),
             d_i=float(rel_data[i]) if rel_data is not None else 1.0,
             d_j=float(rel_data[j]) if rel_data is not None else 1.0,
-            workload=workload, alpha=alpha, beta=beta)
+            workload=workload, alpha=alpha, beta=beta,
+            cyc_i=float(cyc[i]) if cyc is not None else None,
+            cyc_j=float(cyc[j]) if cyc is not None else None)
         li = int(policy.pair_cut(ctx))
         if not 1 <= li <= num_layers - 1:
             raise ValueError(f"policy {policy.spec!r} cut {li} outside "
@@ -633,6 +741,11 @@ class RoundPlan:
     # against — neither is part of cache_key (same schedule, same compile).
     pair_policy: str = "paper-weight"
     seq_objective: Optional[float] = None
+    # the per-client cycles_per_layer vector the plan was priced under
+    # (None for fleet-global workloads).  Part of cache_key: a kept plan
+    # must never serve a fleet whose device classes changed, even when
+    # the schedule (partner/lengths) happens to coincide.
+    cycles: Optional[Tuple[float, ...]] = None
 
     @property
     def n(self) -> int:
@@ -662,7 +775,8 @@ class RoundPlan:
 
     def cache_key(self) -> Tuple:
         """What a pairing-specialized compiled step depends on."""
-        return (self.kind, self.partner, self.lengths, self.granularity)
+        return (self.kind, self.partner, self.lengths, self.granularity,
+                self.cycles)
 
     def validate(self) -> "RoundPlan":
         """Check the plan invariants; returns self (chainable)."""
@@ -720,9 +834,12 @@ def _pairs_objective(pairs, lengths, cpu_hz, rates, rel, workload,
     else:
         fail = np.asarray(fail, np.float64)
         fi, fj = fail[i], fail[j]
+    cyc = client_cycles(workload, len(cpu))
     return float(np.sum(pair_cost_batch(
         cpu[i], cpu[j], rate, workload, lengths[i], lengths[j],
-        rel[i], rel[j], alpha, beta, fi, fj)))
+        rel[i], rel[j], alpha, beta, fi, fj,
+        cyc_i=cyc[i] if cyc is not None else None,
+        cyc_j=cyc[j] if cyc is not None else None)))
 
 
 def plan_objective(plan: "RoundPlan", fleet, chan, workload,
@@ -779,6 +896,7 @@ def build_round_plan(fleet, chan, partner, num_layers: int, *,
     if workload is not None:
         objective = _pairs_objective(pairs, lengths, fleet.cpu_hz, rates,
                                      rel, workload, alpha, beta, fail)
+    cyc = client_cycles(workload, n)
     return RoundPlan(
         kind="paired", policy=pol.spec, num_layers=num_layers,
         partner=tuple(int(p) for p in partner),
@@ -786,7 +904,9 @@ def build_round_plan(fleet, chan, partner, num_layers: int, *,
         active=tuple(bool(a) for a in act), pairs=pairs,
         server_cut=resolve_server_cut(server_cut, num_layers),
         granularity=max(1, int(granularity)),
-        objective=objective).validate()
+        objective=objective,
+        cycles=None if cyc is None else tuple(float(c) for c in cyc)
+        ).validate()
 
 
 def build_joint_plan(fleet, chan, num_layers: int, *,
@@ -840,13 +960,15 @@ def build_joint_plan(fleet, chan, num_layers: int, *,
     rel = rel / rel.sum()
     sub = latency_mod.subfleet(fleet, cohort)
     pol = pairing_mod.get_pairing_policy(pair_policy)
+    cyc = client_cycles(workload, n)
     ctx = pairing_mod.PairingContext(
         num_layers=num_layers, workload=workload, split_policy=split_policy,
         alpha=alpha, beta=beta, seed=seed, cache=cache,
         rates=(rates[np.ix_(cohort, cohort)] if rates is not None else None),
         rel_data=rel[cohort],
         fail=(np.asarray(fail, np.float64)[cohort] if fail is not None
-              else None))
+              else None),
+        cycles=cyc[cohort] if cyc is not None else None)
 
     def plan_for(sub_pairs):
         partner = np.arange(n)

@@ -353,6 +353,11 @@ class RoundDriver:
         self.workload = workload or WorkloadModel(
             num_layers=cfg.num_layers,
             batches_per_epoch=rc.batches_per_round, local_epochs=1)
+        # per-client cycles vector (device classes, DESIGN.md §10) —
+        # validated against the fleet ONCE at construction so a workload
+        # built for another fleet fails here, not rounds later inside the
+        # accounting; None for fleet-global workloads
+        self._cycles = planning.client_cycles(self.workload, self.n)
         if (loss_fn or init_fn) and rc.algorithm == "fedpairing" \
                 and rc.engine != "vmapped":
             # the bucketed/dist steps hard-code the LM flow from cfg; a
@@ -785,7 +790,9 @@ class RoundDriver:
                                       server_cut=rc.server_cut,
                                       full_stack=True)
         sub = latency.subfleet(fleet, cohort)
-        round_s = latency.round_time_vanilla_fl(sub, self.chan, self.workload)
+        round_s = latency.round_time_vanilla_fl(
+            sub, self.chan, self.workload,
+            cycles=self._cycles[cohort] if self._cycles is not None else None)
         rec = self._record(state, cohort, (), plan.lengths,
                            _mean_active_loss(losses, active,
                                              round_idx=state.round),
@@ -810,9 +817,10 @@ class RoundDriver:
                 client, server, l = self._baseline_step(client, server, mine)
                 losses.append(float(l))
         sub = latency.subfleet(fleet, cohort)
-        round_s = latency.round_time_vanilla_sl(sub, self.chan, self.workload,
-                                                client_layers=cut,
-                                                sequential=True)
+        round_s = latency.round_time_vanilla_sl(
+            sub, self.chan, self.workload, client_layers=cut,
+            sequential=True,
+            cycles=self._cycles[cohort] if self._cycles is not None else None)
         mean_loss = float(np.mean(losses))
         if not np.isfinite(mean_loss):
             raise NonFiniteLossError(state.round)
@@ -844,8 +852,9 @@ class RoundDriver:
         g = aggregation.aggregate(sub_params, sub_w, "fedavg")
         client = aggregation.broadcast(g, self.n)
         sub = latency.subfleet(fleet, cohort)
-        round_s = latency.round_time_splitfed(sub, self.chan, self.workload,
-                                              client_layers=cut)
+        round_s = latency.round_time_splitfed(
+            sub, self.chan, self.workload, client_layers=cut,
+            cycles=self._cycles[cohort] if self._cycles is not None else None)
         per_client = np.stack([np.asarray(l, np.float64) for l in losses])
         bad = ~np.isfinite(per_client).all(axis=0)
         if bad.any():
@@ -889,7 +898,9 @@ def _plan_from_dict(d: Dict) -> RoundPlan:
                    else float(d["objective"])),
         pair_policy=str(d["pair_policy"]),
         seq_objective=(None if d.get("seq_objective") is None
-                       else float(d["seq_objective"])))
+                       else float(d["seq_objective"])),
+        cycles=(None if d.get("cycles") is None
+                else tuple(float(c) for c in d["cycles"])))
 
 
 class NonFiniteLossError(RuntimeError):

@@ -35,7 +35,7 @@ import time
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core import latency, planning, rounds
 from repro.core.latency import ChannelModel
-from repro.launch import fault_cli
+from repro.launch import fault_cli, fleet_cli
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -72,6 +72,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--aggregation", choices=["paper", "fedavg"],
                     default="paper")
     ap.add_argument("--seed", type=int, default=0)
+    fleet_cli.add_fleet_args(ap)
     fault_cli.add_fault_args(ap)
     fault_cli.add_checkpoint_args(ap)
     return ap
@@ -90,6 +91,9 @@ def main() -> None:
                                    batch_size=args.batch,
                                    batches_per_epoch=args.batches_per_round,
                                    local_epochs=1)
+    # --device-classes grafts a per-client cycles_per_layer vector on top
+    # (device heterogeneity beyond the clock spread, DESIGN.md §10)
+    w = fleet_cli.apply_device_classes(w, args, n)
     rc = rounds.RoundConfig(
         algorithm="fedpairing", engine=args.engine, rounds=args.rounds,
         pair_policy=args.pair_policy, split_policy=args.split_policy,

@@ -1,0 +1,48 @@
+"""Shared CLI surface for device-class fleets (per-client workloads).
+
+Both launchers (``fed_train``, ``sim``) expose the same
+``--device-classes``/``--class-mix`` flags over
+``core.latency.workload_for_classes`` (DESIGN.md §10) — defined once here
+so the two parsers (and the README flag table the docs gate checks)
+cannot drift apart.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import latency
+
+
+def add_fleet_args(ap: argparse.ArgumentParser) -> None:
+    classes = " | ".join(sorted(latency.DEVICE_CLASSES))
+    g = ap.add_argument_group(
+        "device classes (per-client workload, DESIGN.md §10)")
+    g.add_argument("--device-classes", default="", metavar="LIST",
+                   help=f"comma-separated device classes ({classes}): "
+                        f"either one per client (client-id order), or a "
+                        f"class menu assigned by --class-mix fractions; "
+                        f"empty = fleet-global workload")
+    g.add_argument("--class-mix", default="", metavar="FRACTIONS",
+                   help="comma-separated fractions, one per entry of "
+                        "--device-classes (normalized; largest-remainder "
+                        "counts, seeded shuffle over client ids)")
+
+
+def apply_device_classes(workload, args: argparse.Namespace, n: int):
+    """Graft the flags' per-client cycles vector onto ``workload``.
+
+    Returns the workload unchanged when ``--device-classes`` is empty;
+    raises (via ``workload_for_classes``) on unknown class names or a
+    per-client list whose length is not the fleet size ``n``.
+    """
+    if not args.device_classes:
+        if args.class_mix:
+            raise ValueError("--class-mix needs --device-classes (the "
+                             "class menu the fractions apply to)")
+        return workload
+    classes = [c.strip() for c in args.device_classes.split(",") if c.strip()]
+    mix = None
+    if args.class_mix:
+        mix = [float(x) for x in args.class_mix.split(",") if x.strip()]
+    return latency.workload_for_classes(classes, mix, n=n, base=workload,
+                                        seed=args.seed)

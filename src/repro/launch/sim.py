@@ -22,7 +22,7 @@ import time
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core import latency, rounds
 from repro.core.latency import ChannelModel
-from repro.launch import fault_cli
+from repro.launch import fault_cli, fleet_cli
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -68,6 +68,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="", metavar="PATH",
                     help="dump the round trace as JSON")
+    fleet_cli.add_fleet_args(ap)
     fault_cli.add_fault_args(ap)
     fault_cli.add_checkpoint_args(ap)
     return ap
@@ -95,6 +96,9 @@ def run_sim(args) -> rounds.RoundState:
     workload = latency.workload_from_arch(
         cfg, seq_len=args.seq, batch_size=args.batch,
         batches_per_epoch=args.batches_per_round, local_epochs=1)
+    # --device-classes grafts a per-client cycles_per_layer vector on top
+    # (device heterogeneity beyond the clock spread, DESIGN.md §10)
+    workload = fleet_cli.apply_device_classes(workload, args, args.clients)
     driver = rounds.RoundDriver(
         cfg, rc, fleet, chan=ChannelModel(), workload=workload,
         batch_fn=rounds.make_lm_batch_fn(cfg, args.clients, args.batch,

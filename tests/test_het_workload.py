@@ -1,0 +1,372 @@
+"""Per-client heterogeneous workloads (device classes) — DESIGN.md §10.
+
+The three contracts this suite pins down:
+
+* bit-identity: an all-equal ``cycles_per_client`` vector (every entry ==
+  the fleet-global ``cycles_per_layer`` scalar) is bit-identical to the
+  scalar path at EVERY layer — ``pair_cost_batch``, all three split
+  policies, ``build_round_plan``/``build_joint_plan``, and the full
+  ``RoundDriver`` trace.  Device classes are a generalization, not a
+  fork: homogeneous fleets take the historical float64 expressions
+  verbatim,
+* asymmetry: unequal cycles make the Eq. (6) rule throughput-balanced
+  (tau = f / cycles) and every cut search flow-asymmetric; latency-opt
+  stays <= paper under mixed cycles,
+* validation: per-client vectors are shape-checked against the fleet up
+  front (``PerClientShapeError``, a ValueError), the planner cache keys
+  the cycles vector by VALUE, and straggler slowdown composes with
+  per-client cycles exactly once each.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import latency, pairing, planning, rounds
+from repro.core.latency import ChannelModel, WorkloadModel
+from repro.hypothesis_compat import given, settings, strategies as st
+
+pytestmark = pytest.mark.het
+
+CHAN = ChannelModel()
+W = 18
+POLICIES = ("paper", "fixed:6", "latency-opt")
+
+
+def _allequal(w: WorkloadModel, n: int) -> WorkloadModel:
+    """The all-equal per-client vector: same number, now per client."""
+    return dataclasses.replace(w, cycles_per_client=(w.cycles_per_layer,) * n)
+
+
+def _mixed_workload(n: int, seed: int = 0) -> WorkloadModel:
+    return latency.workload_for_classes(
+        ("phone", "laptop", "edge-server"), (0.4, 0.4, 0.2), n=n,
+        base=WorkloadModel(num_layers=W), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: all-equal vector == fleet-global scalar, everywhere
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 200), m=st.integers(1, 30))
+@settings(max_examples=25, deadline=None)
+def test_pair_cost_batch_bit_identical_with_all_equal_cycles(seed, m):
+    rng = np.random.default_rng(seed)
+    w = WorkloadModel(num_layers=W)
+    f_i = rng.uniform(0.1e9, 1e9, m)
+    f_j = rng.uniform(0.1e9, 1e9, m)
+    rate = rng.uniform(1e5, 1e7, m)
+    li = rng.integers(1, W, m)
+    scalar = planning.pair_cost_batch(f_i, f_j, rate, w, li, W - li)
+    cyc = np.full(m, w.cycles_per_layer)
+    vector = planning.pair_cost_batch(f_i, f_j, rate, w, li, W - li,
+                                      cyc_i=cyc, cyc_j=cyc)
+    np.testing.assert_array_equal(vector, scalar)
+
+
+@given(seed=st.integers(0, 100), n=st.integers(2, 16))
+@settings(max_examples=20, deadline=None)
+def test_policy_lengths_bit_identical_with_all_equal_cycles(seed, n):
+    """All three split policies: the all-equal vector picks the same cuts."""
+    fleet = latency.make_fleet(n=n, seed=seed)
+    rates = fleet.rates(CHAN)
+    pairs = pairing.fedpairing_pairing(fleet, CHAN)
+    partner = planning.partner_from_pairs(pairs, n)
+    w = WorkloadModel(num_layers=W)
+    for pol in POLICIES:
+        scalar = planning.policy_lengths(fleet.cpu_hz, partner, W,
+                                         policy=pol, rates=rates, workload=w)
+        vector = planning.policy_lengths(fleet.cpu_hz, partner, W,
+                                         policy=pol, rates=rates,
+                                         workload=_allequal(w, n))
+        np.testing.assert_array_equal(vector, scalar, err_msg=pol)
+
+
+@given(seed=st.integers(0, 60))
+@settings(max_examples=12, deadline=None)
+def test_plans_bit_identical_with_all_equal_cycles(seed):
+    """build_round_plan AND build_joint_plan: same cuts, same float64
+    objective — the plan only gains the recorded ``cycles`` tuple."""
+    n = 8
+    fleet = latency.make_fleet(n=n, seed=seed)
+    w = WorkloadModel(num_layers=W)
+    we = _allequal(w, n)
+    partner = planning.partner_from_pairs(
+        pairing.fedpairing_pairing(fleet, CHAN), n)
+    for pol in POLICIES:
+        a = planning.build_round_plan(fleet, CHAN, partner, W, policy=pol,
+                                      workload=w)
+        b = planning.build_round_plan(fleet, CHAN, partner, W, policy=pol,
+                                      workload=we)
+        assert b.lengths == a.lengths
+        assert b.objective == a.objective           # bit-exact, not approx
+        assert a.cycles is None
+        assert b.cycles == (w.cycles_per_layer,) * n
+    ja = planning.build_joint_plan(fleet, CHAN, W, workload=w)
+    jb = planning.build_joint_plan(fleet, CHAN, W, workload=we)
+    assert jb.pairs == ja.pairs and jb.lengths == ja.lengths
+    assert jb.objective == ja.objective
+    assert jb.seq_objective == ja.seq_objective
+
+
+def test_round_driver_trace_bit_identical_with_all_equal_cycles():
+    """Full multi-round driver: identical history (pairs, lengths, losses,
+    simulated clock) under the all-equal vector."""
+    cfg = get_smoke_config("tinyllama-1.1b").with_overrides(num_layers=4)
+    fleet = latency.make_fleet(n=4, seed=0)
+    w = WorkloadModel(num_layers=W, batches_per_epoch=2, local_epochs=1)
+    rc = rounds.RoundConfig(rounds=2, batches_per_round=2,
+                            participation=0.75, drift_sigma_m=2.0,
+                            donate=False, seed=0)
+    s_a = rounds.RoundDriver(cfg, rc, fleet, workload=w).run()
+    s_b = rounds.RoundDriver(cfg, rc, fleet,
+                             workload=_allequal(w, 4)).run()
+    assert len(s_a.history) == len(s_b.history) == 2
+    for r_a, r_b in zip(s_a.history, s_b.history):
+        assert r_a == r_b
+    assert s_a.sim_time_s == s_b.sim_time_s
+
+
+def test_unit_times_bit_identical_with_all_equal_cycles():
+    n = 5                               # odd -> a solo unit is in play
+    fleet = latency.make_fleet(n=n, seed=3)
+    partner = planning.partner_from_pairs(
+        pairing.fedpairing_pairing(fleet, CHAN), n)
+    w = WorkloadModel(num_layers=W)
+    units_a, times_a = latency.unit_times_from_partner(partner, fleet,
+                                                       CHAN, w)
+    units_b, times_b = latency.unit_times_from_partner(partner, fleet,
+                                                       CHAN,
+                                                       _allequal(w, n))
+    assert units_a == units_b
+    np.testing.assert_array_equal(times_a, times_b)
+
+
+# ---------------------------------------------------------------------------
+# asymmetry: unequal cycles change the answer the right way
+# ---------------------------------------------------------------------------
+
+def test_paper_cut_balances_throughput_not_frequency():
+    """Equal clocks, 4x per-layer cost on member i: tau_i/(tau_i+tau_j) =
+    0.2 -> L_i = floor(0.2 W), far below the frequency-only W/2."""
+    f = 1e9
+    cyc = 2e8
+    assert planning.paper_cut(f, f, W) == W // 2
+    li = planning.paper_cut(f, f, W, cyc_i=4 * cyc, cyc_j=cyc)
+    assert li == int(np.floor(0.2 * W)) == 3
+    # batched twin agrees, and the equal-cycles lane stays historical
+    batch = planning.paper_cut_batch(
+        np.array([f, f]), np.array([f, f]), W,
+        cyc_i=np.array([4 * cyc, cyc]), cyc_j=np.array([cyc, cyc]))
+    np.testing.assert_array_equal(batch, [3, W // 2])
+
+
+def test_latency_opt_not_worse_than_paper_under_mixed_cycles():
+    for seed in range(4):
+        n = 10
+        fleet = latency.make_fleet(n=n, seed=seed)
+        w = _mixed_workload(n, seed=seed)
+        partner = planning.partner_from_pairs(
+            pairing.fedpairing_pairing(fleet, CHAN), n)
+        objs = {}
+        for pol in ("paper", "latency-opt"):
+            objs[pol] = planning.build_round_plan(
+                fleet, CHAN, partner, W, policy=pol, workload=w).objective
+        assert objs["latency-opt"] <= objs["paper"] + 1e-9
+
+
+def test_joint_not_worse_than_sequential_under_mixed_cycles():
+    for seed in range(4):
+        fleet = latency.make_fleet(n=10, seed=seed)
+        jp = planning.build_joint_plan(fleet, CHAN, W,
+                                       workload=_mixed_workload(10, seed))
+        assert jp.objective <= jp.seq_objective + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# device-class construction
+# ---------------------------------------------------------------------------
+
+def test_device_class_presets():
+    assert set(latency.DEVICE_CLASSES) == {"phone", "laptop", "edge-server"}
+    # the phone preset IS the paper's §IV calibration scalar
+    assert latency.DEVICE_CLASSES["phone"] \
+        == WorkloadModel(num_layers=W).cycles_per_layer
+
+
+def test_workload_for_classes_explicit_list():
+    w = latency.workload_for_classes(("phone", "edge-server", "laptop"))
+    assert w.cycles_per_client == (2e8, 1e7, 5e7)
+    assert w.cycles_per_layer == 2e8        # scalar untouched (server side)
+
+
+def test_workload_for_classes_mix_counts_and_determinism():
+    w = latency.workload_for_classes(("phone", "laptop", "edge-server"),
+                                     (0.5, 0.3, 0.2), n=10, seed=1)
+    counts = {c: w.cycles_per_client.count(latency.DEVICE_CLASSES[c])
+              for c in ("phone", "laptop", "edge-server")}
+    assert counts == {"phone": 5, "laptop": 3, "edge-server": 2}
+    again = latency.workload_for_classes(("phone", "laptop", "edge-server"),
+                                         (0.5, 0.3, 0.2), n=10, seed=1)
+    assert again.cycles_per_client == w.cycles_per_client    # seeded shuffle
+
+
+def test_workload_for_classes_largest_remainder():
+    """Fractions that don't divide n: remainders round the biggest first."""
+    w = latency.workload_for_classes(("phone", "laptop"), (0.55, 0.45), n=9)
+    counts = {c: w.cycles_per_client.count(latency.DEVICE_CLASSES[c])
+              for c in ("phone", "laptop")}
+    assert counts == {"phone": 5, "laptop": 4}
+    assert len(w.cycles_per_client) == 9
+
+
+def test_workload_for_classes_base_grafting():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    base = latency.workload_from_arch(cfg, seq_len=32, batch_size=2)
+    w = latency.workload_for_classes(("phone", "laptop"), (0.5, 0.5), n=6,
+                                     base=base)
+    assert len(w.cycles_per_client) == 6
+    # everything but the vector survives: payload profile, batch geometry
+    assert w.num_layers == base.num_layers
+    assert w.batch_size == base.batch_size
+    assert w.cycles_per_layer == base.cycles_per_layer
+
+
+def test_workload_for_classes_errors():
+    with pytest.raises(ValueError, match="unknown device class"):
+        latency.workload_for_classes(("phone", "mainframe"))
+    with pytest.raises(latency.PerClientShapeError):
+        latency.workload_for_classes(("phone", "laptop"), n=5)   # 2 != 5
+    with pytest.raises(ValueError, match="needs n="):
+        latency.workload_for_classes(("phone",), (1.0,))
+
+
+def test_workload_from_arch_accepts_per_client_vector():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    vec = [1e8, 2e8, 3e8]
+    w = latency.workload_from_arch(cfg, cycles_per_layer=vec)
+    assert w.cycles_per_client == (1e8, 2e8, 3e8)
+    assert np.ndim(w.cycles_per_layer) == 0     # scalar field stays scalar
+
+
+# ---------------------------------------------------------------------------
+# planner-cache identity: cycles keyed by value
+# ---------------------------------------------------------------------------
+
+def test_cache_device_class_change_invalidates_rate_drift_does_not():
+    n = 8
+    fleet = latency.make_fleet(n=n, seed=0)
+    base = WorkloadModel(num_layers=W)
+    w_a = latency.workload_for_classes(("phone", "laptop"), (0.5, 0.5),
+                                       n=n, base=base, seed=0)
+    w_b = latency.workload_for_classes(("phone", "edge-server"), (0.5, 0.5),
+                                       n=n, base=base, seed=0)
+    cache = planning.PlannerCache(tolerance=0.5)
+    kw = dict(split_policy="latency-opt", cache=cache)
+    pairing.pair_cost_matrix(fleet, CHAN, W, w_a, **kw)
+    assert cache.last_status == "miss"
+    # pure channel-rate drift (positions move, cpu/cycles unchanged): hit
+    drifted = latency.drift_fleet(fleet, np.random.default_rng(0),
+                                  sigma_m=0.5)
+    pairing.pair_cost_matrix(drifted, CHAN, W, w_a, **kw)
+    assert cache.last_status == "hit"
+    # a different class mix is a different problem: never reuses the cuts
+    pairing.pair_cost_matrix(drifted, CHAN, W, w_b, **kw)
+    assert cache.last_status == "miss"
+
+
+def test_cache_keys_cycles_by_value_for_id_keyed_workloads():
+    """Unhashable duck-typed workloads fall back to id() for the workload
+    key — the cycles bytes in the key must still catch an in-place
+    device-class change on the SAME object."""
+    base = WorkloadModel(num_layers=W)
+
+    class Duck:
+        __hash__ = None                      # forces the id() fallback
+
+        def __getattr__(self, name):
+            return getattr(base, name)
+
+    duck = Duck()
+    duck.cycles_per_client = (2e8,) * 8
+    n = 8
+    fleet = latency.make_fleet(n=n, seed=0)
+    cache = planning.PlannerCache(tolerance=0.5)
+    kw = dict(split_policy="latency-opt", cache=cache)
+    pairing.pair_cost_matrix(fleet, CHAN, W, duck, **kw)
+    assert cache.last_status == "miss"
+    pairing.pair_cost_matrix(fleet, CHAN, W, duck, **kw)
+    assert cache.last_status == "hit"
+    duck.cycles_per_client = (2e8,) * 4 + (1e7,) * 4   # same object, new mix
+    pairing.pair_cost_matrix(fleet, CHAN, W, duck, **kw)
+    assert cache.last_status == "miss"
+
+
+# ---------------------------------------------------------------------------
+# validation + straggler composition (the bugfix sweep)
+# ---------------------------------------------------------------------------
+
+def test_unit_times_validates_cpu_scale_and_extra_s_shapes():
+    n = 4
+    fleet = latency.make_fleet(n=n, seed=0)
+    partner = np.arange(n)
+    w = WorkloadModel(num_layers=W)
+    with pytest.raises(latency.PerClientShapeError, match="cpu_scale"):
+        latency.unit_times_from_partner(partner, fleet, CHAN, w,
+                                        cpu_scale=np.ones(n - 1))
+    with pytest.raises(latency.PerClientShapeError, match="extra_s"):
+        latency.unit_times_from_partner(partner, fleet, CHAN, w,
+                                        extra_s=np.zeros(n + 2))
+    # the named error is still a ValueError (pre-existing callers)
+    assert issubclass(latency.PerClientShapeError, ValueError)
+
+
+def test_short_cycles_vector_fails_loudly_everywhere():
+    n = 6
+    fleet = latency.make_fleet(n=n, seed=0)
+    w_bad = dataclasses.replace(WorkloadModel(num_layers=W),
+                                cycles_per_client=(2e8,) * (n - 1))
+    with pytest.raises(planning.PerClientShapeError):
+        latency.unit_times_from_partner(np.arange(n), fleet, CHAN, w_bad)
+    with pytest.raises(planning.PerClientShapeError):
+        planning.policy_lengths(fleet.cpu_hz, np.arange(n), W,
+                                workload=w_bad)
+    with pytest.raises(planning.PerClientShapeError):
+        latency.round_time_vanilla_fl(fleet, CHAN, w_bad)
+    with pytest.raises(planning.PerClientShapeError):
+        latency.round_time_vanilla_fl(fleet, CHAN,
+                                      WorkloadModel(num_layers=W),
+                                      cycles=np.ones(n + 1))
+
+
+def test_straggler_slowdown_composes_with_cycles_exactly_once():
+    """Manual arithmetic: a solo straggler with per-client cycles pays
+    W * cycles[i] * scale[i] / cpu_hz[i] (x2 backward x batches x epochs)
+    — slowdown divides the clock once, never scale**2."""
+    n = 3
+    fleet = latency.make_fleet(n=n, seed=0)
+    cyc = (1e8, 2e8, 4e8)
+    w = dataclasses.replace(WorkloadModel(num_layers=W, batches_per_epoch=2,
+                                          local_epochs=1),
+                            cycles_per_client=cyc)
+    scale = np.array([1.0, 3.0, 1.0])
+    units, times = latency.unit_times_from_partner(
+        np.arange(n), fleet, CHAN, w, cpu_scale=scale)
+    assert units == ((0,), (1,), (2,))
+    expected = (W * np.asarray(cyc) * scale / fleet.cpu_hz
+                * 2.0 * w.batches_per_epoch * w.local_epochs)
+    np.testing.assert_allclose(times, expected, rtol=1e-12)
+
+
+def test_baseline_rounds_price_per_client_cycles():
+    """SL/SplitFed/FL baselines: a fleet of edge servers is strictly
+    faster than the same fleet of phones (client-side terms re-priced;
+    server-side stays on the fleet-global scalar)."""
+    n = 6
+    fleet = latency.make_fleet(n=n, seed=0)
+    base = WorkloadModel(num_layers=W)
+    fast = dataclasses.replace(base, cycles_per_client=(1e7,) * n)
+    for fn in (latency.round_time_vanilla_fl, latency.round_time_vanilla_sl,
+               latency.round_time_splitfed):
+        assert fn(fleet, CHAN, fast) < fn(fleet, CHAN, base)

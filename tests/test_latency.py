@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import latency, pairing
+from repro.core import latency, pairing, planning
 from repro.core.latency import ChannelModel, WorkloadModel
 
 
@@ -66,6 +66,52 @@ def test_pairing_mechanism_ordering_table1():
     assert np.mean(tj) <= np.mean(tc) * 1.01   # joint matches/beats compute
     assert np.mean(tj) < np.mean(tr) * 0.8     # far better than random
     assert np.mean(tj) < np.mean(tl) * 0.8     # far better than location
+
+
+def test_fedpairing_round_counts_solo_members():
+    """Regression: an odd cohort leaves one self-paired client; the round
+    max must include its full-stack solo time.  ``round_time_fedpairing``
+    historically iterated the pairs list only, silently dropping the solo
+    member — it now delegates to ``round_time_from_partner`` (one
+    accounting path), so the two are exactly equal by construction."""
+    chan = ChannelModel()
+    w = WorkloadModel(num_layers=18)
+    fleet = latency.make_fleet(n=5, seed=1)
+    pairs = pairing.fedpairing_pairing(fleet, chan)
+    assert sum(len(p) for p in pairs) == 4      # one client left solo
+    t = latency.round_time_fedpairing(pairs, fleet, chan, w)
+    partner = planning.partner_from_pairs(pairs, fleet.n)
+    assert t == latency.round_time_from_partner(partner, fleet, chan, w)
+    # the buggy pairs-only max: strictly below whenever the solo client's
+    # full-stack time is the straggler
+    units, times = latency.unit_times_from_partner(partner, fleet, chan, w)
+    pair_only = max(tt for u, tt in zip(units, times) if len(u) == 2)
+    solo = max(tt for u, tt in zip(units, times) if len(u) == 1)
+    upload = t - max(times)
+    if solo > pair_only:
+        assert t > pair_only + upload
+
+
+def test_fedpairing_round_unchanged_on_even_fleets():
+    """The delegation is bit-identical to the historical accounting when
+    the matching is perfect (no solo members)."""
+    chan = ChannelModel()
+    w = WorkloadModel(num_layers=18)
+    fleet = latency.make_fleet(n=8, seed=0)
+    pairs = pairing.fedpairing_pairing(fleet, chan)
+    assert sum(len(p) for p in pairs) == 8
+    rates = fleet.rates(chan)
+    t_pairs = max(latency.pair_round_time(
+        fleet.cpu_hz[min(i, j)], fleet.cpu_hz[max(i, j)],
+        rates[i, j], w) for i, j in pairs)
+    t = latency.round_time_fedpairing(pairs, fleet, chan, w)
+    partner = planning.partner_from_pairs(pairs, fleet.n)
+    assert t == latency.round_time_from_partner(partner, fleet, chan, w)
+    # the unit decomposition reproduces the historical per-pair times
+    units, times = latency.unit_times_from_partner(partner, fleet, chan, w)
+    assert all(len(u) == 2 for u in units)
+    assert max(times) == t_pairs
+    assert t > t_pairs                          # + the model-upload term
 
 
 def test_objective_value_prefers_greedy_over_random():
