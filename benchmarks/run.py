@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * faults/*  — graceful degradation vs naive abort across fault rates
                 (DESIGN.md §9); writes machine-readable
                 ``BENCH_faults.json``.
+  * shard/*   — fleet-axis sharding: device-count scaling of the client
+                dimension on fabricated host devices (DESIGN.md §11);
+                writes machine-readable ``BENCH_shard.json``.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
        [--tiny]   (shrunken workloads — CI smoke via scripts/bench_smoke.sh)
@@ -28,7 +31,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: pairing,roundtime,convergence,kernels,"
-                         "fedstep,faults")
+                         "fedstep,faults,shard")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink workloads (smoke/CI; applies to "
                          "pairing/fedstep/roundtime)")
@@ -58,6 +61,9 @@ def main() -> None:
     if only is None or "faults" in only:
         from benchmarks import bench_faults
         suites.append(functools.partial(bench_faults.run, tiny=args.tiny))
+    if only is None or "shard" in only:
+        from benchmarks import bench_shard
+        suites.append(functools.partial(bench_shard.run, tiny=args.tiny))
 
     print("name,us_per_call,derived")
     for run in suites:

@@ -1,12 +1,12 @@
 #!/usr/bin/env bash
 # Benchmark bit-rot guard (tier-1 flow): tiny-config pairing + fedstep +
-# roundtime + faults suites must exit 0 and emit valid machine-readable
-# JSON.
+# roundtime + faults + shard suites must exit 0 and emit valid
+# machine-readable JSON.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only pairing,fedstep,roundtime,faults --tiny
+    python -m benchmarks.run --only pairing,fedstep,roundtime,faults,shard --tiny
 
 python - <<'PY'
 import json
@@ -125,6 +125,39 @@ print("bench_smoke: BENCH_faults_tiny.json OK "
       f"(rates={sorted(rates)}, "
       f"zero_fault_identical={d['zero_fault_identical']}, "
       f"graceful_never_worse={d['graceful_never_worse']})")
+PY
+
+python - <<'PY'
+import json
+with open("BENCH_shard_tiny.json") as f:
+    d = json.load(f)
+fixed = d.get("fixed_n", {})
+devices = fixed.get("devices", {})
+# the tiny device axis (1 and 2 fabricated devices) must both be present
+# with measured steady-state rounds and the 1-dev-relative overhead
+assert {"1", "2"} <= set(devices), devices.keys()
+for dev, e in devices.items():
+    for key in ("mean_round_wall_s", "round_wall_s", "compile_round_s",
+                "overhead_vs_1dev"):
+        assert key in e, (dev, key)
+    assert e["mean_round_wall_s"] > 0 and e["overhead_vs_1dev"] > 0, (dev, e)
+sweep = d.get("n_sweep", {})
+assert len(sweep) >= 2, sweep.keys()
+for n, per_dev in sweep.items():
+    for dev in ("1", "2"):
+        e = per_dev.get(dev)
+        assert e is not None, (n, dev)
+        for key in ("arg_bytes_per_device", "temp_bytes_per_device",
+                    "out_bytes_per_device", "flops"):
+            assert key in e, (n, dev, key)
+        assert e["arg_bytes_per_device"] > 0, (n, dev, e)
+    # the tentpole's resource claim: sharding the client axis over D
+    # devices shrinks each device's resident argument bytes ~D-fold
+    assert per_dev["arg_shrink_2dev"] > 1.5, (n, per_dev["arg_shrink_2dev"])
+assert d.get("host_cores", 0) >= 1, d.get("host_cores")
+print("bench_smoke: BENCH_shard_tiny.json OK "
+      f"(devices={sorted(devices)}, "
+      f"arg_shrink={[per['arg_shrink_2dev'] for per in sweep.values()]})")
 PY
 
 python - <<'PY'

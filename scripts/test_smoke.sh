@@ -54,6 +54,48 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m faults
 # all-equal-vector bit-identity contract, per-client shape validation
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m het
 
+# fleet-axis sharding suite (DESIGN.md §11): placement rules, mesh
+# validation, the 1-device bit-identity contract, compat-shim dispatch
+# (the slow fabricated-device property sweeps run in the full suite)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "sharding and not slow"
+
+# fabricated-8-device smoke: one sharded fedpairing round on an 8-way
+# client-axis mesh must reproduce the unsharded single-device trace
+# (structural fields exact, loss within the DESIGN.md §11 float32
+# reassociation tolerance) — the whole tentpole in one round
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import os, subprocess, sys
+
+CODE = r"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, jax
+from repro.configs import get_smoke_config
+from repro.core import latency, rounds
+from repro.core.latency import ChannelModel
+from repro.sharding.fleet import make_fleet_sharding
+
+assert jax.device_count() == 8
+cfg = get_smoke_config("tinyllama-1.1b")
+def one_round(sharding):
+    rc = rounds.RoundConfig(rounds=1, batches_per_round=1, seed=3)
+    fleet = latency.make_fleet(n=8, seed=3)
+    return rounds.RoundDriver(cfg, rc, fleet, chan=ChannelModel(),
+                              sharding=sharding).run().history[0]
+ref = dataclasses.asdict(one_round(None))
+got = dataclasses.asdict(one_round(make_fleet_sharding()))
+la, lb = ref.pop("mean_loss"), got.pop("mean_loss")
+assert ref == got, (ref, got)
+assert abs(la - lb) <= 1e-4 * max(1.0, abs(la)), (la, lb)
+print("sharded-8dev smoke: trace OK (loss delta %.2e)" % abs(la - lb))
+"""
+env = dict(os.environ, PYTHONPATH="src",
+           XLA_FLAGS="")  # the child sets its own device fabrication
+res = subprocess.run([sys.executable, "-c", CODE], env=env)
+sys.exit(res.returncode)
+PY
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 bash scripts/bench_smoke.sh

@@ -6,6 +6,16 @@ Two modes (see DESIGN.md §3 — the paper is internally inconsistent):
                ``ω_g = (1/N) Σ ω_i``.
 * ``fedavg`` — classic McMahan weighting at the server:
                ``ω_g = Σ a_i ω_i`` (local updates unweighted).
+
+Mesh-awareness (DESIGN.md §11): both reductions run over the leading
+client axis, so when the replicas arrive sharded over the fleet mesh
+(``sharding.fleet.FleetSharding``) XLA lowers the mean / tensordot into
+per-shard partial sums plus the cross-device psum-style combine — no
+separate collective code path, and the zero-weight hard-mask below is
+applied per shard BEFORE the combine, so an excluded replica's values are
+never read on any device.  ``broadcast`` accepts the fleet sharding so
+the post-round global model lands back on the client placement directly
+(device-to-device; fleet state lives sharded across rounds).
 """
 from __future__ import annotations
 
@@ -61,6 +71,11 @@ def aggregate(client_params: Dict, agg_w: jnp.ndarray,
     return jax.tree_util.tree_map(wmean, client_params)
 
 
-def broadcast(global_params: Dict, n: int) -> Dict:
-    return jax.tree_util.tree_map(
+def broadcast(global_params: Dict, n: int, sharding=None) -> Dict:
+    """Global params -> N stacked client replicas.  With a
+    ``FleetSharding`` the replicas are placed straight onto the client
+    placement (leading dim over the mesh's fleet axis) instead of
+    materializing an unsharded (N, ...) tree first."""
+    out = jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), global_params)
+    return out if sharding is None else sharding.place(out)

@@ -70,10 +70,13 @@ class FedPairingConfig:
     donate: bool = True                 # in-place client-param update
 
 
-def replicate(params: Dict, n: int) -> Dict:
-    """Broadcast a global model to N client replicas (leading client axis)."""
-    return jax.tree_util.tree_map(
+def replicate(params: Dict, n: int, sharding=None) -> Dict:
+    """Broadcast a global model to N client replicas (leading client axis).
+    With a ``sharding.fleet.FleetSharding`` the replicas are placed with
+    the client dim sharded over the fleet mesh axis."""
+    out = jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), params)
+    return out if sharding is None else sharding.place(out)
 
 
 def make_fed_step(loss_fn: LossFn, plan: Dict, num_layers: int,

@@ -67,6 +67,7 @@ from repro.core import aggregation, baselines, fedpair, latency, pairing
 from repro.core import faults, participation, planning, splitting
 from repro.core.latency import ChannelModel, ClientFleet, WorkloadModel
 from repro.core.planning import RoundPlan
+from repro.sharding.fleet import FleetSharding
 
 ALGORITHMS = ("fedpairing", "fl", "sl", "splitfed")
 ENGINES = ("vmapped", "bucketed", "dist")
@@ -336,6 +337,17 @@ class RoundDriver:
     algorithms and engines.  ``loss_fn``/``init_fn`` default to the LM
     registry but accept any (params, batch) -> scalar pair (the vision
     example drives a conv net through the same loop).
+
+    ``sharding`` (a ``sharding.fleet.FleetSharding``) shards the CLIENT
+    axis of all fleet state — parameter replicas, batches, aggregation
+    buffers — over the mesh's fleet axis (DESIGN.md §11): state is
+    placed at init/load, the engines' donated steps keep it sharded in
+    place across rounds, aggregation reduces mesh-wide, and the
+    broadcast re-places device-to-device (the fault path's degraded /
+    orphan-repaired rounds re-place without host round-trips).  Only the
+    stacked-replica algorithms support it (fedpairing on the vmapped /
+    bucketed engines, fl); the dist engine owns its own mesh and the
+    sl/splitfed relays train single trees.
     """
 
     def __init__(self, cfg, rc: RoundConfig, fleet: ClientFleet,
@@ -343,12 +355,27 @@ class RoundDriver:
                  workload: Optional[WorkloadModel] = None,
                  batch_fn: Optional[Callable[[], Dict]] = None,
                  loss_fn: Optional[Callable] = None,
-                 init_fn: Optional[Callable] = None):
+                 init_fn: Optional[Callable] = None,
+                 sharding: Optional[FleetSharding] = None):
         from repro.models import registry
         self.cfg = cfg
         self.rc = rc
         self.fleet0 = fleet
         self.n = fleet.n
+        self.sharding = sharding
+        if sharding is not None:
+            if rc.algorithm not in ("fedpairing", "fl"):
+                raise ValueError(
+                    f"fleet-axis sharding covers the stacked-replica "
+                    f"algorithms (fedpairing, fl); {rc.algorithm!r} "
+                    f"trains a single shared tree through a sequential "
+                    f"relay — nothing to shard over clients")
+            if rc.algorithm == "fedpairing" and rc.engine == "dist":
+                raise ValueError(
+                    "the dist engine owns its own one-client-per-device "
+                    "mesh (shard_map + ppermute); FleetSharding applies "
+                    "to the vmapped and bucketed engines")
+            sharding.validate(self.n)
         self.chan = chan or ChannelModel()
         self.workload = workload or WorkloadModel(
             num_layers=cfg.num_layers,
@@ -369,6 +396,12 @@ class RoundDriver:
         self.init_fn = init_fn or (lambda key: registry.init_params(cfg, key))
         self.batch_fn = batch_fn or make_lm_batch_fn(cfg, self.n,
                                                      seed=rc.seed)
+        if sharding is not None:
+            # batches are fleet state too: place every drawn batch with
+            # its client dim over the fleet axis (host-to-device, once
+            # per draw — the engines then never re-lay it out)
+            raw_batch_fn = self.batch_fn
+            self.batch_fn = lambda: sharding.place(raw_batch_fn())
         self._gparams = self.init_fn(jax.random.key(rc.seed))
         self._engine = None
         self._baseline_step = None
@@ -405,7 +438,8 @@ class RoundDriver:
         elif self.rc.algorithm == "splitfed":
             client, server = fedpair.replicate(g, self.n), g
         else:
-            client, server = fedpair.replicate(g, self.n), None
+            client = fedpair.replicate(g, self.n, self.sharding)
+            server = None
         return RoundState(round=0, fleet=self.fleet0, client_params=client,
                           server_params=server,
                           rng=np.random.default_rng(self.rc.seed),
@@ -502,8 +536,12 @@ class RoundDriver:
             like["server"] = server_like
         tree = ckpt_io.load_checkpoint(path, like)
         # jnp conversion copies (frombuffer leaves are read-only; the
-        # donate=True engines need owned device buffers)
+        # donate=True engines need owned device buffers); a sharded
+        # driver restores the checkpoint straight onto the fleet
+        # placement, so resume keeps the sharded-across-rounds lifecycle
         client = jax.tree_util.tree_map(jnp.asarray, tree["client"])
+        if self.sharding is not None:
+            client = self.sharding.place(client)
         server = (jax.tree_util.tree_map(jnp.asarray, tree["server"])
                   if "server" in tree else None)
         f = tree["fleet"]
@@ -692,7 +730,7 @@ class RoundDriver:
                                   jnp.asarray(fleet.data_sizes, jnp.float32),
                                   rc.aggregation,
                                   active=jnp.asarray(active))
-        params = aggregation.broadcast(g, self.n)
+        params = aggregation.broadcast(g, self.n, sharding=self.sharding)
         round_s = latency.round_time_plan(
             self._latency_plan(fleet, partner, active, plan), fleet,
             self.chan, self.workload)
@@ -743,7 +781,8 @@ class RoundDriver:
             # global; the batch stream still advances.
             for _ in range(rc.batches_per_round):
                 self.batch_fn()
-            params = aggregation.broadcast(g_prev, self.n)
+            params = aggregation.broadcast(g_prev, self.n,
+                                           sharding=self.sharding)
             status = "aborted" if fcfg.mode == "abort" else "skipped"
             mean_loss = float("nan")
         else:
@@ -759,7 +798,8 @@ class RoundDriver:
             g = aggregation.aggregate(
                 params, jnp.asarray(fleet.data_sizes, jnp.float32),
                 rc.aggregation, active=jnp.asarray(final_active))
-            params = aggregation.broadcast(g, self.n)
+            params = aggregation.broadcast(g, self.n,
+                                           sharding=self.sharding)
             status = "degraded" if excluded else "ok"
         rec = self._record(state, cohort, exec_plan.pairs,
                            exec_plan.lengths, mean_loss, clock.round_s,
@@ -784,7 +824,7 @@ class RoundDriver:
         g = aggregation.aggregate(params,
                                   jnp.asarray(fleet.data_sizes, jnp.float32),
                                   "fedavg", active=jnp.asarray(active))
-        params = aggregation.broadcast(g, self.n)
+        params = aggregation.broadcast(g, self.n, sharding=self.sharding)
         plan = planning.baseline_plan(self.n, self.cfg.num_layers,
                                       active=active,
                                       server_cut=rc.server_cut,

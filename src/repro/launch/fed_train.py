@@ -73,6 +73,7 @@ def build_parser() -> argparse.ArgumentParser:
                     default="paper")
     ap.add_argument("--seed", type=int, default=0)
     fleet_cli.add_fleet_args(ap)
+    fleet_cli.add_mesh_args(ap)
     fault_cli.add_fault_args(ap)
     fault_cli.add_checkpoint_args(ap)
     return ap
@@ -118,10 +119,15 @@ def main() -> None:
           f"{latency.round_time_plan(plan0, fleet, chan, w):.1f}s "
           f"(vanilla FL {latency.round_time_vanilla_fl(fleet, chan, w):.1f}s)")
 
+    sharding = fleet_cli.fleet_sharding_from_args(args)
+    if sharding is not None:
+        print(f"[fed] fleet axis sharded over {sharding.num_shards} "
+              f"device(s)")
     driver = rounds.RoundDriver(
         cfg, rc, fleet, chan=chan, workload=w,
         batch_fn=rounds.make_lm_batch_fn(cfg, n, args.batch, args.seq,
-                                         args.seed))
+                                         args.seed),
+        sharding=sharding)
     state = fault_cli.initial_state(driver, args)
     for _ in range(max(0, args.rounds - state.round)):
         t0 = time.time()

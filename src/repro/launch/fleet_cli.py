@@ -1,9 +1,12 @@
-"""Shared CLI surface for device-class fleets (per-client workloads).
+"""Shared CLI surface for device-class fleets (per-client workloads) and
+fleet-axis sharding.
 
 Both launchers (``fed_train``, ``sim``) expose the same
 ``--device-classes``/``--class-mix`` flags over
-``core.latency.workload_for_classes`` (DESIGN.md §10) — defined once here
-so the two parsers (and the README flag table the docs gate checks)
+``core.latency.workload_for_classes`` (DESIGN.md §10) and the same
+``--fleet-sharding``/``--mesh-shape`` flags over
+``sharding.fleet.make_fleet_sharding`` (DESIGN.md §11) — defined once
+here so the two parsers (and the README flag table the docs gate checks)
 cannot drift apart.
 """
 from __future__ import annotations
@@ -46,3 +49,33 @@ def apply_device_classes(workload, args: argparse.Namespace, n: int):
         mix = [float(x) for x in args.class_mix.split(",") if x.strip()]
     return latency.workload_for_classes(classes, mix, n=n, base=workload,
                                         seed=args.seed)
+
+
+def add_mesh_args(ap: argparse.ArgumentParser) -> None:
+    g = ap.add_argument_group(
+        "fleet-axis sharding (client dimension over the mesh, "
+        "DESIGN.md §11)")
+    g.add_argument("--fleet-sharding", action="store_true",
+                   help="shard the client axis of all fleet state "
+                        "(params, batches, aggregation) over the local "
+                        "devices' 'data' mesh axis — vmapped/bucketed "
+                        "engines and fl; the client count must divide "
+                        "the device count")
+    g.add_argument("--mesh-shape", type=int, default=0, metavar="D",
+                   help="size of the fleet 'data' mesh axis (devices the "
+                        "client dim is split over); 0 = every visible "
+                        "device.  Fabricate host devices with XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=D before "
+                        "launching.  Implies --fleet-sharding when > 0")
+
+
+def fleet_sharding_from_args(args: argparse.Namespace):
+    """The launchers' ``FleetSharding`` (or None when the flags are off).
+
+    Built lazily so launchers that never ask for sharding keep their
+    import-time promise of not touching jax device state.
+    """
+    if not (args.fleet_sharding or args.mesh_shape):
+        return None
+    from repro.sharding.fleet import make_fleet_sharding
+    return make_fleet_sharding(args.mesh_shape or None)

@@ -6,7 +6,27 @@ init to fabricate 512 host devices; everything else must see 1 CPU).
 """
 from __future__ import annotations
 
+import math
+from typing import Optional, Sequence
+
+import jax
+
 from repro import compat
+
+
+def validate_mesh_shape(shape: Sequence[int], axes: Sequence[str]) -> None:
+    """Check a requested mesh shape against the visible devices and raise
+    a nameable error on a shortfall (jax's own failure surfaces deep in
+    device-assignment code with an opaque message)."""
+    need = math.prod(shape)
+    have = jax.device_count()
+    if need > have:
+        detail = " x ".join(f"{a}={s}" for a, s in zip(axes, shape))
+        raise ValueError(
+            f"mesh shape ({detail}) needs {need} devices but only {have} "
+            f"are visible — short {need - have}; fabricate host devices "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"(set BEFORE the first jax import) or request a smaller mesh")
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,12 +34,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    validate_mesh_shape(shape, axes)
     return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever local devices exist (tests / examples)."""
+    validate_mesh_shape((data, model), ("data", "model"))
     return compat.make_mesh((data, model), ("data", "model"))
+
+
+def make_fleet_mesh(num_devices: Optional[int] = None):
+    """1-D ("data",) mesh for fleet-axis (client-dimension) sharding —
+    the canonical mesh ``sharding.fleet.FleetSharding`` places over.
+    ``num_devices`` None/0 -> every visible local device."""
+    d = jax.device_count() if not num_devices else int(num_devices)
+    if d < 1:
+        raise ValueError(f"fleet mesh needs >= 1 device, got {d}")
+    validate_mesh_shape((d,), ("data",))
+    return compat.make_mesh((d,), ("data",))
 
 
 def batch_axes(mesh) -> tuple:

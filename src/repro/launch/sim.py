@@ -69,6 +69,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--json", default="", metavar="PATH",
                     help="dump the round trace as JSON")
     fleet_cli.add_fleet_args(ap)
+    fleet_cli.add_mesh_args(ap)
     fault_cli.add_fault_args(ap)
     fault_cli.add_checkpoint_args(ap)
     return ap
@@ -99,13 +100,18 @@ def run_sim(args) -> rounds.RoundState:
     # --device-classes grafts a per-client cycles_per_layer vector on top
     # (device heterogeneity beyond the clock spread, DESIGN.md §10)
     workload = fleet_cli.apply_device_classes(workload, args, args.clients)
+    sharding = fleet_cli.fleet_sharding_from_args(args)
     driver = rounds.RoundDriver(
         cfg, rc, fleet, chan=ChannelModel(), workload=workload,
         batch_fn=rounds.make_lm_batch_fn(cfg, args.clients, args.batch,
-                                         args.seq, args.seed))
+                                         args.seq, args.seed),
+        sharding=sharding)
+    shard_note = "" if sharding is None \
+        else f", fleet axis over {sharding.num_shards} device(s)"
     print(f"[sim] {args.algorithm}/{args.engine}: {args.clients} clients, "
           f"W={cfg.num_layers}, participation={args.participation}, "
-          f"drift={args.drift}m, pair_policy={rc.resolved_pair_policy}")
+          f"drift={args.drift}m, pair_policy={rc.resolved_pair_policy}"
+          f"{shard_note}")
     state = fault_cli.initial_state(driver, args)
     for _ in range(max(0, args.rounds - state.round)):
         t0 = time.time()

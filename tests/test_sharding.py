@@ -1,0 +1,272 @@
+"""Fleet-axis sharding (DESIGN.md §11): placement rules, the 1-device
+bit-identity contract, driver wiring, and — in a fabricated-8-device
+subprocess — the multi-device tolerance contract across a faulted,
+re-planning multi-round driver run on both stacked engines.
+
+The subprocess pattern follows ``test_dryrun_small``: XLA_FLAGS must be
+set before the first jax import, so the main test process stays at 1
+device and the multi-device properties run in a child interpreter.
+"""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs import get_smoke_config
+from repro.core import aggregation, faults, latency, rounds
+from repro.core.latency import ChannelModel
+from repro.launch import mesh as mesh_lib
+from repro.sharding.fleet import FleetSharding, make_fleet_sharding
+
+pytestmark = pytest.mark.sharding
+
+
+# ---------------------------------------------------------------------------
+# placement rules / validation (1 device, in process)
+# ---------------------------------------------------------------------------
+
+class TestFleetShardingRules:
+    def test_axis_must_exist(self):
+        mesh = compat.make_mesh((1,), ("data",))
+        with pytest.raises(ValueError, match="not an axis"):
+            FleetSharding(mesh=mesh, axis="model")
+
+    def test_divisibility_contract(self):
+        # 1 shard divides everything; the >1-shard refusal (clients not
+        # a multiple of the device count) is covered in the fabricated
+        # 8-device subprocess suite below
+        sh = FleetSharding(mesh=compat.make_mesh((1,), ("data",)))
+        assert sh.num_shards == 1
+        sh.validate(4)
+        sh.validate(7)
+
+    def test_client_spec_leading_dim(self):
+        sh = make_fleet_sharding()
+        spec = sh.client_spec(jnp.zeros((4, 3, 2)))
+        assert tuple(spec) == ("data",)
+        # scalars (optimizer step counters) stay replicated
+        assert tuple(sh.client_spec(jnp.zeros(()))) == ()
+
+    def test_place_tree(self):
+        sh = make_fleet_sharding()
+        tree = {"w": jnp.ones((4, 3)), "step": jnp.zeros(())}
+        placed = sh.place(tree)
+        assert placed["w"].sharding.is_equivalent_to(
+            sh.client_sharding(tree["w"]), 2)
+        assert float(jnp.sum(placed["w"])) == 12.0
+
+    def test_broadcast_places(self):
+        sh = make_fleet_sharding()
+        out = aggregation.broadcast({"w": jnp.ones((3,))}, 4, sharding=sh)
+        assert out["w"].shape == (4, 3)
+        assert out["w"].sharding.is_equivalent_to(
+            sh.client_sharding(out["w"]), 2)
+
+
+class TestMeshValidation:
+    """Satellite: mesh factories raise nameable errors on a shortfall
+    instead of failing deep inside jax device assignment."""
+
+    def test_production_mesh_names_shortfall(self):
+        if jax.device_count() >= 256:
+            pytest.skip("enough devices for the production mesh")
+        with pytest.raises(ValueError) as ei:
+            mesh_lib.make_production_mesh()
+        msg = str(ei.value)
+        assert "256" in msg and "short" in msg
+        assert "xla_force_host_platform_device_count" in msg
+
+    def test_multi_pod_mesh_names_shortfall(self):
+        if jax.device_count() >= 512:
+            pytest.skip("enough devices for the multi-pod mesh")
+        with pytest.raises(ValueError, match="pod=2"):
+            mesh_lib.make_production_mesh(multi_pod=True)
+
+    def test_host_mesh_validates(self):
+        with pytest.raises(ValueError, match="needs"):
+            mesh_lib.make_host_mesh(jax.device_count() + 1, 1)
+        mesh_lib.make_host_mesh(1, 1)        # fits: no raise
+
+    def test_fleet_mesh_validates(self):
+        with pytest.raises(ValueError, match="short"):
+            mesh_lib.make_fleet_mesh(jax.device_count() + 3)
+        mesh = mesh_lib.make_fleet_mesh()
+        assert mesh.axis_names == ("data",)
+        with pytest.raises(ValueError, match=">= 1"):
+            mesh_lib.make_fleet_mesh(-2)
+
+
+# ---------------------------------------------------------------------------
+# driver wiring (1 device, in process): sharded run == unsharded run,
+# bit for bit
+# ---------------------------------------------------------------------------
+
+def _driver(engine, sharding, algorithm="fedpairing", fault_cfg=None,
+            n=4, seed=0):
+    cfg = get_smoke_config("tinyllama-1.1b")
+    rc = rounds.RoundConfig(
+        algorithm=algorithm, engine=engine, rounds=2, batches_per_round=2,
+        drift_sigma_m=5.0, replan_threshold=0.05, seed=seed,
+        faults=fault_cfg)
+    fleet = latency.make_fleet(n=n, seed=seed)
+    return rounds.RoundDriver(cfg, rc, fleet, chan=ChannelModel(),
+                              sharding=sharding)
+
+
+class TestOneDeviceBitIdentity:
+    """On a 1-device mesh every placement is a no-op: the sharded driver
+    trace and final params must equal the unsharded ones EXACTLY."""
+
+    @pytest.mark.parametrize("engine", ["vmapped", "bucketed"])
+    def test_fedpairing_trace_bit_identical(self, engine):
+        ref = _driver(engine, None).run()
+        got = _driver(engine, make_fleet_sharding()).run()
+        assert got.history == ref.history
+        for a, b in zip(jax.tree_util.tree_leaves(got.client_params),
+                        jax.tree_util.tree_leaves(ref.client_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_faulted_trace_bit_identical(self):
+        fc = faults.FaultConfig(dropout=0.3, straggler=0.25,
+                                deadline_factor=3.0)
+        ref = _driver("vmapped", None, fault_cfg=fc, seed=5).run()
+        got = _driver("vmapped", make_fleet_sharding(), fault_cfg=fc,
+                      seed=5).run()
+        assert got.history == ref.history
+        assert any(r.status != "ok" for r in got.history), \
+            "fault rates chosen to actually exercise the degraded path"
+
+    def test_fl_supported(self):
+        ref = _driver("vmapped", None, algorithm="fl").run()
+        got = _driver("vmapped", make_fleet_sharding(),
+                      algorithm="fl").run()
+        assert got.history == ref.history
+
+
+class TestDriverValidation:
+    def test_dist_engine_rejected(self):
+        with pytest.raises(ValueError, match="dist engine"):
+            _driver("dist", make_fleet_sharding(), n=1)
+
+    @pytest.mark.parametrize("algorithm", ["sl", "splitfed"])
+    def test_relay_algorithms_rejected(self, algorithm):
+        with pytest.raises(ValueError, match="single shared tree"):
+            _driver("vmapped", make_fleet_sharding(), algorithm=algorithm)
+
+
+# ---------------------------------------------------------------------------
+# multi-device properties (fabricated 8-device subprocess)
+# ---------------------------------------------------------------------------
+
+MULTI_DEVICE_CODE = r"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax
+import numpy as np
+from repro.configs import get_smoke_config
+from repro.core import faults, latency, rounds
+from repro.core.latency import ChannelModel
+from repro.sharding.fleet import make_fleet_sharding
+
+assert jax.device_count() == 8
+
+cfg = get_smoke_config("tinyllama-1.1b")
+
+def run(engine, sharding, n, seed, fault_cfg):
+    rc = rounds.RoundConfig(rounds=3, engine=engine, batches_per_round=2,
+                            drift_sigma_m=8.0, replan_threshold=0.05,
+                            participation=0.9, seed=seed, faults=fault_cfg)
+    fleet = latency.make_fleet(n=n, seed=seed)
+    return rounds.RoundDriver(cfg, rc, fleet, chan=ChannelModel(),
+                              sharding=sharding).run()
+
+def compare(ref, got):
+    # the >1-device tolerance contract (DESIGN.md §11): every structural
+    # field exact; the floats that pass through the sharded cross-client
+    # aggregation within float32 reassociation tolerance
+    assert len(ref.history) == len(got.history)
+    for a, b in zip(ref.history, got.history):
+        sa, sb = dataclasses.asdict(a), dataclasses.asdict(b)
+        la, lb = sa.pop("mean_loss"), sb.pop("mean_loss")
+        assert sa == sb, (sa, sb)
+        ok = (la != la and lb != lb) or abs(la - lb) <= 1e-4 * max(
+            1.0, abs(la))
+        assert ok, (a.round, la, lb)
+    for x, y in zip(jax.tree_util.tree_leaves(ref.client_params),
+                    jax.tree_util.tree_leaves(got.client_params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-5, atol=2e-6)
+
+# property sweep: seeds x fault scenarios x engines, sharded-vs-unsharded
+scenarios = [None,
+             faults.FaultConfig(dropout=0.3, straggler=0.25,
+                                deadline_factor=3.0),
+             faults.FaultConfig(dropout=0.4, mode="abort")]
+for i, seed in enumerate([11, 23, 47]):
+    for engine in ("vmapped", "bucketed"):
+        fc = scenarios[i % len(scenarios)]
+        sh = make_fleet_sharding()
+        ref = run(engine, None, 8, seed, fc)
+        got = run(engine, sh, 8, seed, fc)
+        # the placement must actually split the client axis 8 ways
+        leaf = jax.tree_util.tree_leaves(got.client_params)[0]
+        assert len(leaf.sharding.device_set) == 8, leaf.sharding
+        compare(ref, got)
+        print(f"OK engine={engine} seed={seed} "
+              f"faults={'none' if fc is None else fc.mode}")
+
+# divisibility: 6 clients over 8 devices must be refused up front
+try:
+    run("vmapped", make_fleet_sharding(), 6, 0, None)
+    raise SystemExit("divisibility violation not caught")
+except ValueError as e:
+    assert "does not divide" in str(e), e
+
+# checkpoint/resume keeps the sharded lifecycle: save mid-run, restore
+# into a fresh sharded driver, finish, compare against the uninterrupted
+# sharded run
+import tempfile
+fc = faults.FaultConfig(dropout=0.3, deadline_factor=3.0)
+rc = rounds.RoundConfig(rounds=4, engine="vmapped", batches_per_round=2,
+                        drift_sigma_m=8.0, seed=7, faults=fc)
+fleet = latency.make_fleet(n=8, seed=7)
+full = rounds.RoundDriver(cfg, rc, fleet, chan=ChannelModel(),
+                          sharding=make_fleet_sharding()).run()
+d1 = rounds.RoundDriver(cfg, rc, fleet, chan=ChannelModel(),
+                        sharding=make_fleet_sharding())
+state = d1.run(rounds=2)
+with tempfile.TemporaryDirectory() as td:
+    path = os.path.join(td, "ck.msgpack")
+    d1.save_state(state, path)
+    d2 = rounds.RoundDriver(cfg, rc, fleet, chan=ChannelModel(),
+                            sharding=make_fleet_sharding())
+    resumed = d2.run(d2.load_state(path), rounds=2)
+leaf = jax.tree_util.tree_leaves(resumed.client_params)[0]
+assert len(leaf.sharding.device_set) == 8
+assert [r.status for r in resumed.history] == \
+    [r.status for r in full.history]
+for x, y in zip(jax.tree_util.tree_leaves(full.client_params),
+                jax.tree_util.tree_leaves(resumed.client_params)):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                               rtol=2e-5, atol=2e-6)
+print("RESUME_OK")
+print("MULTI_DEVICE_SHARDING_OK")
+"""
+
+
+@pytest.mark.slow
+def test_multi_device_sharding_properties():
+    res = subprocess.run(
+        [sys.executable, "-c", MULTI_DEVICE_CODE], capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd="/root/repo", timeout=1800)
+    assert "MULTI_DEVICE_SHARDING_OK" in res.stdout, \
+        res.stdout[-2000:] + res.stderr[-4000:]
+    assert "RESUME_OK" in res.stdout
