@@ -1,0 +1,233 @@
+"""Sync vs async round time — the event-driven clock's pipelining gain.
+
+Two layers, one claim (DESIGN.md §12: the bounded-staleness event clock
+is never slower than the synchronous barrier, and its gain widens with
+device heterogeneity):
+
+* analytical — the two clocks evaluated over the SAME planned rounds
+  (identical fleets, drift, cohorts and joint plans; only the clock
+  differs) for every PR-7 device-class mix of widening spread
+  (``DEVICE_MIXES``, shared with bench_pairing).  Per fleet draw the
+  simulation replays the driver's exact rng order (drift -> cohort ->
+  pair seed) so the analytic rounds are the rounds the driver would run,
+  then accumulates ``max(times) + upload`` (sync barrier) vs
+  ``latency.advance_event_clock`` at the staleness bound (async).
+  async <= sync holds per round per realization BY CONSTRUCTION (unit
+  leads are never positive) — the worst per-fleet ratio is recorded and
+  asserted by ``scripts/bench_smoke.sh``,
+* driver     — the REAL ``core.rounds.RoundDriver`` twice (sync vs
+  async + overlap planning, bucketed engine, greedy-cost x latency-opt)
+  on one heterogeneous fleet: guards the async driver path itself
+  (admission stream, staleness-weighted aggregation, overlap prebuild)
+  against bit-rot, and records ``predicted_adoptions`` so the overlap
+  planner demonstrably adopted its pre-built plans.
+
+Writes machine-readable ``BENCH_async.json`` at the repo root
+(``tiny=True`` smoke runs write ``BENCH_async_tiny.json``):
+
+    {"tiny": .., "staleness_bound": .., "rounds": .., "fleets": ..,
+     "clients": .., "participation": ..,
+     "mixes": {"<mix>": {"classes": [..], "mix": [..],
+                         "class_spread": ..,
+                         "sync_round_s": .., "async_round_s": ..,
+                         "ratio": <mean async/sync, <= 1.0>,
+                         "max_ratio": <worst fleet, <= 1.0 asserted>},
+               ...},
+     "max_mix_ratio": <worst fleet x mix, <= 1.0 asserted>,
+     "spread_gap_widens": <extreme-mix ratio <= homogeneous ratio>,
+     "driver": {"sync_total_s": .., "async_total_s": ..,
+                "ratio": <= 1.0 asserted, "predicted_adoptions": ..,
+                "final_loss_sync": .., "final_loss_async": ..}}
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import latency, participation, planning
+from repro.core.latency import ChannelModel, WorkloadModel
+
+from benchmarks.bench_pairing import DEVICE_MIXES
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_ROOT, "BENCH_async.json")
+TINY_JSON_PATH = os.path.join(_ROOT, "BENCH_async_tiny.json")
+
+STALENESS_BOUND = 2
+
+
+def _simulate_fleet(seed: int, n: int, rounds: int, frac: float,
+                    drift: float, bound: int, w: WorkloadModel,
+                    chan: ChannelModel, num_layers: int):
+    """(sync_total_s, async_total_s) over one fleet's round sequence.
+
+    Replays the driver's §5 rng order exactly — drift_fleet ->
+    sample_cohort -> pair-seed draw, one generator — then prices each
+    planned round under BOTH clocks, so sync and async compare the same
+    schedule and the ratio isolates the clock."""
+    rng = np.random.default_rng(seed)
+    fleet = latency.make_fleet(n=n, seed=seed)
+    clock = latency.initial_event_clock(n)
+    sync_total = async_total = 0.0
+    for _ in range(rounds):
+        fleet = latency.drift_fleet(fleet, rng, drift)
+        cohort = participation.sample_cohort(n, frac, rng)
+        pair_seed = int(rng.integers(2 ** 31))
+        if cohort.size == 0:
+            continue
+        active = np.zeros(n, bool)
+        active[cohort] = True
+        plan = planning.build_joint_plan(
+            fleet, chan, num_layers, pair_policy="greedy-cost",
+            split_policy="latency-opt", workload=w, active=active,
+            seed=pair_seed)
+        units, times, upload_s = latency.round_clock_plan(plan, fleet,
+                                                          chan, w)
+        sync_total += float(np.max(times)) + upload_s
+        floor = latency.event_clock_floor(clock, bound)
+        stream = participation.admission_stream(cohort, clock.avail, floor)
+        admit = participation.admission_times(n, stream)
+        clock, ac = latency.advance_event_clock(
+            clock, units, times, upload_s, bound, admit_s=admit)
+        async_total += ac.round_s
+    return sync_total, async_total
+
+
+def _mix_suite(n_fleets: int, n_clients: int, rounds: int, frac: float,
+               drift: float, num_layers: int):
+    """The sync-vs-async matrix over the PR-7 device-class mixes.
+
+    Returns (report, rows, worst per-fleet ratio over all mixes)."""
+    chan = ChannelModel()
+    base = WorkloadModel(num_layers=num_layers)
+    report, rows = {}, {}
+    worst = 0.0
+    out_rows: List[Dict] = []
+    for name, classes, mix in DEVICE_MIXES:
+        cyc = [latency.DEVICE_CLASSES[c] for c in classes]
+        spread = max(cyc) / min(cyc)
+        syncs, asyncs, ratios = [], [], []
+        t0 = time.perf_counter()
+        for seed in range(n_fleets):
+            w = latency.workload_for_classes(classes, mix, n=n_clients,
+                                             base=base, seed=seed)
+            s, a = _simulate_fleet(seed, n_clients, rounds, frac, drift,
+                                   STALENESS_BOUND, w, chan, num_layers)
+            assert a <= s + 1e-9, \
+                f"async > sync under mix {name} (fleet seed {seed})"
+            syncs.append(s)
+            asyncs.append(a)
+            ratios.append(a / s)
+        us = (time.perf_counter() - t0) * 1e6 / n_fleets
+        mean_ratio = float(np.mean(ratios))
+        max_ratio = float(np.max(ratios))
+        worst = max(worst, max_ratio)
+        report[name] = {
+            "classes": list(classes), "mix": list(mix),
+            "class_spread": round(float(spread), 1),
+            "sync_round_s": round(float(np.mean(syncs)) / rounds, 1),
+            "async_round_s": round(float(np.mean(asyncs)) / rounds, 1),
+            "ratio": round(mean_ratio, 4),
+            "max_ratio": round(max_ratio, 4)}
+        out_rows.append({
+            "name": f"async/mix_{name}", "us_per_call": us,
+            "derived": f"spread={spread:.0f}x async_vs_sync="
+                       f"{mean_ratio:.3f} max_ratio={max_ratio:.3f} "
+                       f"(<= 1.0 by construction)",
+        })
+    return report, out_rows, float(worst)
+
+
+def _driver_entry(tiny: bool):
+    """The same fleet through the REAL round loop, sync vs async+overlap."""
+    from repro.configs import get_smoke_config
+    from repro.core import rounds
+
+    n = 4 if tiny else 6
+    n_rounds = 3 if tiny else 4
+    bpr = 2
+    cfg = get_smoke_config("tinyllama-1.1b").with_overrides(num_layers=2)
+    fleet = latency.make_fleet(n=n, seed=0)
+    w = WorkloadModel(num_layers=18, batches_per_epoch=bpr, local_epochs=1)
+
+    def run_once(async_rounds: bool):
+        rc = rounds.RoundConfig(
+            algorithm="fedpairing", engine="bucketed", rounds=n_rounds,
+            pair_policy="greedy-cost", split_policy="latency-opt",
+            batches_per_round=bpr, participation=1.0, seed=0,
+            async_rounds=async_rounds,
+            staleness_bound=STALENESS_BOUND if async_rounds else 0,
+            overlap_planning=async_rounds)
+        driver = rounds.RoundDriver(
+            cfg, rc, fleet, chan=ChannelModel(), workload=w,
+            batch_fn=rounds.make_lm_batch_fn(cfg, n, batch=1, seq=32,
+                                             seed=0))
+        t0 = time.perf_counter()
+        state = driver.run()
+        return state, driver, time.perf_counter() - t0
+
+    s_state, _, s_wall = run_once(False)
+    a_state, a_driver, a_wall = run_once(True)
+    ratio = a_state.sim_time_s / s_state.sim_time_s
+    assert a_state.sim_time_s <= s_state.sim_time_s + 1e-9, \
+        "async driver slower than sync on the same fleet"
+    entry = {
+        "sync_total_s": round(s_state.sim_time_s, 1),
+        "async_total_s": round(a_state.sim_time_s, 1),
+        "ratio": round(float(ratio), 4),
+        "predicted_adoptions": a_driver.predicted_adoptions,
+        "final_loss_sync": round(s_state.history[-1].mean_loss, 4),
+        "final_loss_async": round(a_state.history[-1].mean_loss, 4),
+        "rounds": n_rounds,
+    }
+    row = {"name": "async/driver_sync_vs_async",
+           "us_per_call": (s_wall + a_wall) * 1e6 / (2 * n_rounds),
+           "derived": f"ratio={ratio:.3f} (<= 1.0) "
+                      f"adoptions={a_driver.predicted_adoptions} "
+                      f"loss_sync={entry['final_loss_sync']} "
+                      f"loss_async={entry['final_loss_async']}"}
+    return entry, row
+
+
+def run(n_fleets: int = 6, n_clients: int = 20, rounds: int = 20,
+        frac: float = 0.6, drift: float = 5.0, num_layers: int = 18,
+        tiny: bool = False, json_path: str = "") -> List[Dict]:
+    json_path = json_path or (TINY_JSON_PATH if tiny else JSON_PATH)
+    if tiny:
+        n_fleets, n_clients, rounds = 2, 8, 6
+    report, rows, worst = _mix_suite(n_fleets, n_clients, rounds, frac,
+                                     drift, num_layers)
+    # the §12 headline: the async gain (1 - ratio) widens with class
+    # spread — the extreme mix must pipeline at least as well as the
+    # homogeneous one (recorded always; asserted in the full run where
+    # the matrix is averaged over enough fleets to be stable)
+    gap_widens = bool(report["extreme"]["ratio"]
+                      <= report["homogeneous"]["ratio"] + 1e-9)
+    if not tiny:
+        assert gap_widens, (
+            f"async gain did not widen with class spread: extreme "
+            f"{report['extreme']['ratio']} vs homogeneous "
+            f"{report['homogeneous']['ratio']}")
+    rows.append({
+        "name": "async/spread_gap", "us_per_call": 0.0,
+        "derived": f"homogeneous={report['homogeneous']['ratio']:.3f} "
+                   f"extreme={report['extreme']['ratio']:.3f} "
+                   f"widens={gap_widens}"})
+    driver_report, driver_row = _driver_entry(tiny)
+    rows.append(driver_row)
+    with open(json_path, "w") as f:
+        json.dump({
+            "tiny": tiny, "staleness_bound": STALENESS_BOUND,
+            "rounds": rounds, "fleets": n_fleets, "clients": n_clients,
+            "participation": frac, "drift_sigma_m": drift,
+            "mixes": report,
+            "max_mix_ratio": round(worst, 4),
+            "spread_gap_widens": gap_widens,
+            "driver": driver_report,
+        }, f, indent=2)
+        f.write("\n")
+    return rows

@@ -121,6 +121,17 @@ def _driver(tiny: bool):
         state = driver.run()
         wall = time.perf_counter() - t0
         mean_round = float(np.mean([r.sim_round_s for r in state.history]))
+        # barrier idle headline: fraction of the round span's client-
+        # seconds spent waiting on the straggler (RoundRecord.wait_s
+        # summed over rounds / units x round span; 0 for the sequential
+        # SL relay — no barrier, nothing idles)
+        total_wait = float(np.sum([r.wait_s for r in state.history]))
+        span = 0.0
+        for r in state.history:
+            units = (len(r.pairs) + (len(r.cohort) - 2 * len(r.pairs))
+                     if alg == "fedpairing" else len(r.cohort))
+            span += units * r.sim_round_s
+        idle_fraction = total_wait / span if span > 0 else 0.0
         entry = {
             "mean_round_s": round(mean_round, 1),
             "sim_total_s": round(state.sim_time_s, 1),
@@ -129,6 +140,8 @@ def _driver(tiny: bool):
             "engine": engine,
             "split_policy": rc.split_policy,
             "wall_s": round(wall, 2),
+            "wait_s": round(total_wait, 1),
+            "idle_fraction": round(idle_fraction, 4),
         }
         report[alg] = entry
         rows.append({
@@ -136,7 +149,8 @@ def _driver(tiny: bool):
             "us_per_call": wall * 1e6 / n_rounds,
             "derived": f"sim_round_s={mean_round:.0f} "
                        f"paper_s={PAPER[_ALG_NAMES[alg]]:.0f} "
-                       f"loss={entry['final_loss']}",
+                       f"loss={entry['final_loss']} "
+                       f"idle={idle_fraction:.0%}",
         })
     return rows, report
 

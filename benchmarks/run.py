@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * shard/*   — fleet-axis sharding: device-count scaling of the client
                 dimension on fabricated host devices (DESIGN.md §11);
                 writes machine-readable ``BENCH_shard.json``.
+  * async/*   — sync barrier vs event-driven async clock across the
+                device-class mixes + the real driver sync-vs-async
+                (DESIGN.md §12); writes machine-readable
+                ``BENCH_async.json``.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
        [--tiny]   (shrunken workloads — CI smoke via scripts/bench_smoke.sh)
@@ -31,7 +35,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: pairing,roundtime,convergence,kernels,"
-                         "fedstep,faults,shard")
+                         "fedstep,faults,shard,async")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink workloads (smoke/CI; applies to "
                          "pairing/fedstep/roundtime)")
@@ -64,6 +68,9 @@ def main() -> None:
     if only is None or "shard" in only:
         from benchmarks import bench_shard
         suites.append(functools.partial(bench_shard.run, tiny=args.tiny))
+    if only is None or "async" in only:
+        from benchmarks import bench_async
+        suites.append(functools.partial(bench_async.run, tiny=args.tiny))
 
     print("name,us_per_call,derived")
     for run in suites:

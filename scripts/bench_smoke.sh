@@ -1,12 +1,13 @@
 #!/usr/bin/env bash
 # Benchmark bit-rot guard (tier-1 flow): tiny-config pairing + fedstep +
-# roundtime + faults + shard suites must exit 0 and emit valid
+# roundtime + faults + shard + async suites must exit 0 and emit valid
 # machine-readable JSON.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only pairing,fedstep,roundtime,faults,shard --tiny
+    python -m benchmarks.run \
+    --only pairing,fedstep,roundtime,faults,shard,async --tiny
 
 python - <<'PY'
 import json
@@ -167,12 +168,48 @@ with open("BENCH_roundtime_tiny.json") as f:
 driver = d.get("driver", {})
 assert {"fedpairing", "fl", "sl", "splitfed"} <= set(driver), driver.keys()
 for name, e in driver.items():
-    for key in ("mean_round_s", "sim_total_s", "final_loss", "engine"):
+    for key in ("mean_round_s", "sim_total_s", "final_loss", "engine",
+                "wait_s", "idle_fraction"):
         assert key in e, (name, key)
     assert e["mean_round_s"] > 0, (name, e)
+    # barrier idle is a fraction of the round span's client-seconds
+    assert 0.0 <= e["idle_fraction"] < 1.0, (name, e)
+# the sequential SL relay has no barrier: nothing idles
+assert driver["sl"]["idle_fraction"] == 0.0, driver["sl"]
 # the paper's headline: FedPairing rounds beat vanilla FL on a
 # heterogeneous fleet (driver-measured, straggler-bounded)
 assert d["fedpairing_vs_fl"] < 1.0, d["fedpairing_vs_fl"]
 print("bench_smoke: BENCH_roundtime_tiny.json OK "
-      f"(fedpairing_vs_fl={d['fedpairing_vs_fl']})")
+      f"(fedpairing_vs_fl={d['fedpairing_vs_fl']}, idle_fractions="
+      f"{ {k: e['idle_fraction'] for k, e in driver.items()} })")
+PY
+
+python - <<'PY'
+import json
+with open("BENCH_async_tiny.json") as f:
+    d = json.load(f)
+mixes = d.get("mixes", {})
+assert {"homogeneous", "mild", "mixed", "extreme"} <= set(mixes), \
+    mixes.keys()
+for name, e in mixes.items():
+    for key in ("classes", "mix", "class_spread", "sync_round_s",
+                "async_round_s", "ratio", "max_ratio"):
+        assert key in e, (name, key)
+    assert e["sync_round_s"] > 0 and e["async_round_s"] > 0, (name, e)
+    # the event clock is never slower than the barrier, on EVERY fleet
+    # of EVERY mix (per-round monotonicity, DESIGN.md §12)
+    assert e["max_ratio"] <= 1.0 + 1e-9, (name, e)
+assert d["max_mix_ratio"] <= 1.0 + 1e-9, d["max_mix_ratio"]
+# the REAL driver, sync vs async on the same fleet: async <= sync, and
+# the overlap planner adopted at least one predicted plan
+driver = d.get("driver", {})
+for key in ("sync_total_s", "async_total_s", "ratio",
+            "predicted_adoptions"):
+    assert key in driver, key
+assert driver["ratio"] <= 1.0 + 1e-9, driver
+assert driver["predicted_adoptions"] >= 1, driver
+print("bench_smoke: BENCH_async_tiny.json OK "
+      f"(worst async/sync={d['max_mix_ratio']}, "
+      f"driver ratio={driver['ratio']}, "
+      f"adoptions={driver['predicted_adoptions']})")
 PY

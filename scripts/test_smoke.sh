@@ -54,6 +54,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m faults
 # all-equal-vector bit-identity contract, per-client shape validation
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m het
 
+# async pipelined-rounds suite (DESIGN.md §12): S=0 bit-identity to the
+# synchronous driver, event-clock monotonicity, bounded-staleness
+# aggregation, overlap planning, the batch_fn boundary contract
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m async
+
 # fleet-axis sharding suite (DESIGN.md §11): placement rules, mesh
 # validation, the 1-device bit-identity contract, compat-shim dispatch
 # (the slow fabricated-device property sweeps run in the full suite)

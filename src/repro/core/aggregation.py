@@ -27,7 +27,8 @@ import jax.numpy as jnp
 
 def aggregate(client_params: Dict, agg_w: jnp.ndarray,
               mode: str = "paper",
-              active: Optional[jnp.ndarray] = None) -> Dict:
+              active: Optional[jnp.ndarray] = None,
+              staleness: Optional[jnp.ndarray] = None) -> Dict:
     """client_params stacked (N, ...) -> global params.
 
     ``active`` (N,) bool restricts the aggregation to a participating
@@ -38,18 +39,35 @@ def aggregate(client_params: Dict, agg_w: jnp.ndarray,
     renormalizing by zero into NaN params — a round with no survivors
     must be SKIPPED by the caller (``rounds`` / ``faults``), never
     aggregated.
+
+    ``staleness`` (N,) int — bounded-staleness async rounds (DESIGN.md
+    §12): client ``i`` trained from a model ``staleness[i]`` merges
+    behind the current one, so its replica's weight is scaled by
+    ``1/(1+staleness[i])`` before renormalization — stale updates still
+    count, just less, the standard async-FL discount.  Composes with
+    ``active`` and the zero-weight hard-mask below; ``None`` (the
+    synchronous path) or an all-zero vector (async at staleness bound 0)
+    leaves every weight untouched, preserving the §12 bit-identity
+    contract.
     """
+    if staleness is not None and not bool(jnp.any(staleness)):
+        staleness = None        # all fresh: keep the synchronous jaxpr
     if mode == "paper":
-        if active is None:
+        if active is None and staleness is None:
             return jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0),
                                           client_params)
-        w = jnp.asarray(active, jnp.float32)
+        if active is None:
+            w = jnp.ones_like(jnp.asarray(staleness, jnp.float32))
+        else:
+            w = jnp.asarray(active, jnp.float32)
     elif mode == "fedavg":
         w = jnp.asarray(agg_w, jnp.float32)
         if active is not None:
             w = w * jnp.asarray(active, jnp.float32)
     else:
         raise ValueError(f"unknown aggregation mode {mode!r}")
+    if staleness is not None:
+        w = w / (1.0 + jnp.asarray(staleness, jnp.float32))
     total = jnp.sum(w)
     if float(total) <= 0.0:
         raise ValueError(

@@ -321,6 +321,14 @@ class FaultedClock:
     link_failed: Tuple[int, ...]         # clients excluded for dead links
     deadline_s: float                    # inf when no deadline configured
     completed: bool                      # any unit survived to aggregate
+    # surviving-unit decomposition of a COMPLETED round (empty otherwise):
+    # the on-time units, their realized times and the survivors' upload
+    # term — what the event-driven clock (latency.advance_event_clock)
+    # replays so the async accounting sees the same realization the
+    # synchronous round_s above was computed from (DESIGN.md §12)
+    units: Tuple[Tuple[int, ...], ...] = ()
+    times: Tuple[float, ...] = ()
+    upload_s: float = 0.0
 
 
 def faulted_clock(plan, fleet, chan, workload, rf: RoundFaults,
@@ -366,6 +374,7 @@ def faulted_clock(plan, fleet, chan, workload, rf: RoundFaults,
         dead.update((int(i), int(j)))
     late = set()
     on_time = []
+    on_time_units = []
     for unit, t in zip(units, times):
         if any(c in dead for c in unit):
             continue                 # failure detected at retry exhaustion
@@ -373,6 +382,7 @@ def faulted_clock(plan, fleet, chan, workload, rf: RoundFaults,
             late.update(int(c) for c in unit)
         else:
             on_time.append(float(t))
+            on_time_units.append(tuple(int(c) for c in unit))
     excluded = late | dead
     survivors = [int(c) for c in np.flatnonzero(active)
                  if int(c) not in excluded]
@@ -401,4 +411,6 @@ def faulted_clock(plan, fleet, chan, workload, rf: RoundFaults,
         total = min(total, deadline)
     return FaultedClock(round_s=total, late=tuple(sorted(late)),
                         link_failed=tuple(sorted(dead)),
-                        deadline_s=deadline, completed=True)
+                        deadline_s=deadline, completed=True,
+                        units=tuple(on_time_units),
+                        times=tuple(on_time), upload_s=upload)

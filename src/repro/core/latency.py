@@ -472,6 +472,37 @@ def unit_times_from_partner(partner: np.ndarray, fleet: ClientFleet,
     return tuple(units), np.asarray(times, np.float64)
 
 
+def round_clock_from_partner(partner: np.ndarray, fleet: ClientFleet,
+                             chan: ChannelModel, w: WorkloadModel,
+                             active: Optional[np.ndarray] = None,
+                             server_rate_bps: Optional[np.ndarray] = None,
+                             lengths: Optional[np.ndarray] = None
+                             ) -> Tuple[Tuple[Tuple[int, ...], ...],
+                                        np.ndarray, float]:
+    """The Eq. (3) round-time decomposition ``(units, times, upload_s)``
+    behind ``round_time_from_partner``: per-unit training wall times plus
+    the round's straggler-upload term (max model upload over the active
+    cohort).  Both clocks consume this — the synchronous barrier takes
+    ``max(times) + upload_s`` and the event-driven clock (DESIGN.md §12)
+    advances per-unit completion events against the same numbers, so the
+    two accountings cannot diverge.  An empty active cohort returns
+    ``((), zeros(0), 0.0)``."""
+    n = fleet.n
+    act = np.ones(n, bool) if active is None else np.asarray(active, bool)
+    if not act.any():
+        return (), np.zeros(0, np.float64), 0.0
+    units, times = unit_times_from_partner(partner, fleet, chan, w,
+                                           active=act, lengths=lengths)
+    if not units:
+        # an active cohort with no self-paired member and no canonical
+        # pair member means the active set isn't closed under the pairing
+        raise ValueError(f"active cohort {np.flatnonzero(act)} contains "
+                         f"no trainable flow under partner {partner}")
+    srates = _server_rates(fleet, chan, server_rate_bps)
+    upload = float(np.max(w.model_bytes / srates[act]))
+    return units, times, upload
+
+
 def round_time_from_partner(partner: np.ndarray, fleet: ClientFleet,
                             chan: ChannelModel, w: WorkloadModel,
                             active: Optional[np.ndarray] = None,
@@ -484,20 +515,28 @@ def round_time_from_partner(partner: np.ndarray, fleet: ClientFleet,
     ``lengths`` overrides the per-client split (any policy's plan).
     Batched over the cohort (``unit_times_from_partner``) — at fleet scale
     the per-round accounting must not cost more than the plan itself."""
-    n = fleet.n
-    act = np.ones(n, bool) if active is None else np.asarray(active, bool)
-    if not act.any():
-        return 0.0
-    units, times = unit_times_from_partner(partner, fleet, chan, w,
-                                           active=act, lengths=lengths)
+    units, times, upload = round_clock_from_partner(
+        partner, fleet, chan, w, active=active,
+        server_rate_bps=server_rate_bps, lengths=lengths)
     if not units:
-        # an active cohort with no self-paired member and no canonical
-        # pair member means the active set isn't closed under the pairing
-        raise ValueError(f"active cohort {np.flatnonzero(act)} contains "
-                         f"no trainable flow under partner {partner}")
-    srates = _server_rates(fleet, chan, server_rate_bps)
-    upload = float(np.max(w.model_bytes / srates[act]))
+        return 0.0
     return float(np.max(times)) + upload
+
+
+def round_clock_plan(plan: "planning.RoundPlan", fleet: ClientFleet,
+                     chan: ChannelModel, w: WorkloadModel,
+                     server_rate_bps: Optional[np.ndarray] = None
+                     ) -> Tuple[Tuple[Tuple[int, ...], ...],
+                                np.ndarray, float]:
+    """``round_clock_from_partner`` evaluated at a RoundPlan's schedule —
+    the decomposition both clocks consume for a planned round."""
+    if plan.kind != "paired":
+        raise ValueError(f"round_clock_plan wants a paired plan, got "
+                         f"{plan.kind!r} (use the baseline round_time_*)")
+    return round_clock_from_partner(plan.partner_array(), fleet, chan, w,
+                                    active=plan.active_array(),
+                                    server_rate_bps=server_rate_bps,
+                                    lengths=plan.lengths_array())
 
 
 def round_time_plan(plan: "planning.RoundPlan", fleet: ClientFleet,
@@ -513,6 +552,16 @@ def round_time_plan(plan: "planning.RoundPlan", fleet: ClientFleet,
                                    active=plan.active_array(),
                                    server_rate_bps=server_rate_bps,
                                    lengths=plan.lengths_array())
+
+
+def barrier_wait_s(times) -> float:
+    """Barrier idle seconds of a synchronous round: sum over units of
+    (round straggler max − own finish).  What the synchronous path wastes
+    and the event-driven clock recovers (``RoundRecord.wait_s``)."""
+    t = np.asarray(times, np.float64)
+    if t.size == 0:
+        return 0.0
+    return float(np.sum(np.max(t) - t))
 
 
 def _fleet_cycles(fleet: ClientFleet, w: WorkloadModel,
@@ -590,16 +639,178 @@ def round_time_splitfed(fleet: ClientFleet, chan: ChannelModel,
     server load), hence the larger default ``client_layers``.  Per-client
     cycles price the client bottoms only (see ``round_time_vanilla_sl``).
     """
-    rates = _server_rates(fleet, chan, server_rate_bps)
-    cyc = _fleet_cycles(fleet, w, cycles)
-    c_client = w.cycles_per_layer if cyc is None else cyc
-    per_client = (client_layers * c_client / fleet.cpu_hz * 2
-                  + w.batch_size * (w.feature_bytes + w.grad_bytes) / rates)
+    per_client = splitfed_client_times(fleet, chan, w,
+                                       client_layers=client_layers,
+                                       server_rate_bps=server_rate_bps,
+                                       cycles=cycles)
     server = (w.num_layers - client_layers) * w.cycles_per_layer / server_hz \
         * 2 * fleet.n
     per_batch = float(np.max(per_client)) + server
     return per_batch * w.batches_per_epoch * w.local_epochs \
         + _upload_time(fleet, chan, w, server_rate_bps)
+
+
+def splitfed_client_times(fleet: ClientFleet, chan: ChannelModel,
+                          w: WorkloadModel, client_layers: int = 3,
+                          server_rate_bps: Optional[np.ndarray] = None,
+                          cycles: Optional[np.ndarray] = None) -> np.ndarray:
+    """Per-client PER-BATCH wall times of the SplitFed client side (bottom
+    compute + boundary transfer) — the quantity the per-batch barrier
+    synchronizes on.  Shared by ``round_time_splitfed`` and the driver's
+    ``wait_s`` accounting: per-batch idle is ``barrier_wait_s`` of these,
+    paid once per batch of every local epoch."""
+    rates = _server_rates(fleet, chan, server_rate_bps)
+    cyc = _fleet_cycles(fleet, w, cycles)
+    c_client = w.cycles_per_layer if cyc is None else cyc
+    return (client_layers * c_client / fleet.cpu_hz * 2
+            + w.batch_size * (w.feature_bytes + w.grad_bytes) / rates)
+
+
+# ---------------------------------------------------------------------------
+# event-driven clock (async rounds, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EventClockState:
+    """The event-driven simulated clock (DESIGN.md §12): per-client
+    availability plus the publish times of the most recent merges, all in
+    absolute simulated seconds.
+
+    ``avail[i]`` is when client ``i`` finished its last unit (or resynced
+    to a merge); ``merges`` holds the publish instants of the last
+    ``staleness_bound + 1`` rounds, oldest first — ``merges[-1]`` is the
+    previous round's publish and ``merges[0]`` the staleness admission
+    floor (no unit may start from a model older than ``bound`` merges).
+    Value-semantics frozen so checkpointing round-trips it losslessly
+    (floats survive the meta serialization exactly)."""
+
+    avail: Tuple[float, ...]
+    merges: Tuple[float, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncRoundClock:
+    """One round's advance of the event clock: the round's simulated
+    duration (publish − previous publish), the barrier idle it recovered
+    relative to its own straggler (``wait_s``), the seconds of execution
+    overlapped with earlier rounds (``overlap_s`` — how far before the
+    previous publish the earliest unit started), and the per-client
+    staleness (merges published after the client's unit started — the
+    bounded-staleness aggregation weights, ≤ the bound by construction)."""
+
+    round_s: float
+    wait_s: float
+    overlap_s: float
+    staleness: Tuple[int, ...]
+
+
+def initial_event_clock(n: int) -> EventClockState:
+    """Clock at simulated t=0: everyone available, one virtual merge at
+    0.0 (the initial broadcast every client starts from)."""
+    return EventClockState(avail=(0.0,) * n, merges=(0.0,))
+
+
+def event_clock_floor(state: EventClockState, bound: int) -> float:
+    """The staleness admission floor: the publish of round ``r−1−bound``
+    (0.0 while fewer merges exist).  No unit of round ``r`` may start
+    before it — starting earlier would train from a model more than
+    ``bound`` merges old."""
+    if bound < 0:
+        raise ValueError(f"staleness bound must be >= 0, got {bound}")
+    return state.merges[-(bound + 1)] if len(state.merges) > bound else 0.0
+
+
+def advance_event_clock(state: EventClockState,
+                        units: Sequence[Tuple[int, ...]],
+                        times: np.ndarray, upload_s: float, bound: int,
+                        admit_s: Optional[np.ndarray] = None,
+                        cap_s: Optional[float] = None,
+                        resync: Sequence[int] = ()
+                        ) -> Tuple[EventClockState, AsyncRoundClock]:
+    """Advance the event clock by one round of per-unit completion events.
+
+    Each unit starts at the max of its members' admission times (default:
+    ``max(floor, avail[member])`` — ``participation.admission_stream``
+    computes the same numbers when the driver passes ``admit_s``) and
+    finishes ``times`` seconds later; the round publishes its merge at
+    ``prev_publish + round_s`` where
+
+        round_s = max(0.0, max_u((start_u − prev) + t_u)) + upload_s
+
+    i.e. relative-to-previous-publish completion plus the straggler
+    upload, optionally capped by ``cap_s`` (a fault deadline).  The
+    arithmetic is arranged so that when every start equals the previous
+    publish (staleness bound 0, or a fully-synchronized fleet) the
+    leads ``start_u − prev`` are exactly 0.0 and ``round_s`` reproduces
+    the synchronous ``max(times) + upload_s`` bit-for-bit — the §12
+    equality contract.  Because leads are never positive (a client's
+    availability cannot exceed the last publish), ``round_s`` is also
+    never above the synchronous barrier time: async ≤ sync per round,
+    per realization, independent of the staleness weighting.
+
+    ``resync`` lists clients whose availability snaps to this round's
+    publish (fault exclusions rejoining at the merge).  Members of
+    ``units`` have their availability set to their unit's finish; all
+    other clients are untouched.
+    """
+    n = len(state.avail)
+    prev = state.merges[-1]
+    floor = event_clock_floor(state, bound)
+    avail = np.asarray(state.avail, np.float64)
+    t = np.asarray(times, np.float64)
+    if len(units):
+        if admit_s is None:
+            admit = np.maximum(avail, floor)
+        else:
+            admit = np.asarray(admit_s, np.float64)
+            if admit.shape != (n,):
+                raise PerClientShapeError(
+                    f"admit_s must have one entry per client ({n}), got "
+                    f"shape {admit.shape}")
+        starts = np.asarray([float(np.max(admit[list(u)])) for u in units])
+        # relative completion: (start − prev) + t, NOT (start + t) − prev —
+        # the lead is exactly 0.0 whenever start == prev, so the bound-0
+        # round_s is bit-identical to the synchronous max(times) + upload
+        rel_done = (starts - prev) + t
+        round_s = max(0.0, float(np.max(rel_done))) + float(upload_s)
+        if cap_s is not None:
+            round_s = min(round_s, float(cap_s))
+        wait = float(np.sum(np.max(rel_done) - rel_done))
+        overlap = max(0.0, float(prev - np.min(starts)))
+    else:
+        starts = rel_done = np.zeros(0, np.float64)
+        round_s, wait, overlap = 0.0, 0.0, 0.0
+    publish = prev + round_s
+    new_avail = list(state.avail)
+    stale = [0] * n
+    for u, s, tt in zip(units, starts, t):
+        behind = sum(1 for m in state.merges if m > s)
+        done = float(s + tt)
+        for c in u:
+            new_avail[c] = done
+            stale[c] = behind
+    for c in resync:
+        new_avail[int(c)] = publish
+    merges = (state.merges + (publish,))[-(bound + 1):]
+    return (EventClockState(avail=tuple(new_avail), merges=merges),
+            AsyncRoundClock(round_s=round_s, wait_s=wait,
+                            overlap_s=overlap, staleness=tuple(stale)))
+
+
+def advance_event_clock_barrier(state: EventClockState, round_s: float,
+                                bound: int
+                                ) -> Tuple[EventClockState, AsyncRoundClock]:
+    """A forced global synchronization of the event clock: the round costs
+    ``round_s`` wall-clock for everyone and every client resyncs to the
+    publish.  The async driver charges skipped/aborted fault rounds this
+    way — a lost round is a barrier event, there is nothing to pipeline."""
+    prev = state.merges[-1]
+    publish = prev + float(round_s)
+    n = len(state.avail)
+    merges = (state.merges + (publish,))[-(bound + 1):]
+    return (EventClockState(avail=(publish,) * n, merges=merges),
+            AsyncRoundClock(round_s=float(round_s), wait_s=0.0,
+                            overlap_s=0.0, staleness=(0,) * n))
 
 
 def _server_rates(fleet: ClientFleet, chan: ChannelModel,

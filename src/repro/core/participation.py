@@ -83,6 +83,47 @@ def cohort_partner(fleet: ClientFleet, chan: ChannelModel,
     return partner, active
 
 
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """One continuous-admission event of an async round (DESIGN.md §12):
+    cohort member ``client`` becomes admissible at absolute simulated
+    second ``at_s`` — the later of when it finished its previous unit and
+    the staleness admission floor (the oldest merge it is allowed to
+    train from)."""
+
+    client: int
+    at_s: float
+
+
+def admission_stream(cohort: np.ndarray, avail_s, floor_s: float = 0.0
+                     ) -> Tuple[Admission, ...]:
+    """The round's admission stream: the sampled cohort ordered by when
+    each member can START under the event-driven clock, ties broken by
+    client id (deterministic).  The §5 rng contract is untouched — the
+    cohort itself is still drawn by ``sample_cohort`` in the fixed order;
+    this only schedules the draw's members continuously.  A unit (pair or
+    solo) starts at the max of its members' admission times, which is the
+    exact arithmetic ``latency.advance_event_clock`` applies: at
+    staleness bound 0 the floor is the previous publish, every admission
+    collapses to it, and the stream degenerates to the synchronous
+    barrier."""
+    avail = np.asarray(avail_s, np.float64)
+    events = [Admission(client=int(c),
+                        at_s=max(float(floor_s), float(avail[int(c)])))
+              for c in np.asarray(cohort, np.int64)]
+    return tuple(sorted(events, key=lambda e: (e.at_s, e.client)))
+
+
+def admission_times(n: int, stream: Tuple[Admission, ...]) -> np.ndarray:
+    """Scatter an admission stream back to a full-fleet (N,) vector of
+    admission instants (non-members keep ``0.0`` — they are never indexed
+    by the round's units)."""
+    admit = np.zeros(n, np.float64)
+    for e in stream:
+        admit[e.client] = e.at_s
+    return admit
+
+
 def cohort_pairing(fleet: ClientFleet, chan: ChannelModel,
                    cohort: np.ndarray, num_layers: int,
                    pair_fn: Optional[PairFn] = None

@@ -113,6 +113,16 @@ class RoundConfig:
     # path, untouched.  A FaultConfig with all rates zero behaves
     # identically (the zero-cost contract, DESIGN.md §9).
     faults: Optional[faults.FaultConfig] = None
+    # async pipelined rounds (DESIGN.md §12): event-driven clock instead
+    # of the round-max barrier.  At staleness_bound 0 with
+    # overlap_planning off the trace is bit-identical to the synchronous
+    # driver (the §12 equality contract); bound S > 0 lets a unit start
+    # from a model up to S merges old, discounted 1/(1+s) at aggregation.
+    async_rounds: bool = False
+    staleness_bound: int = 0
+    overlap_planning: bool = False      # pre-build the predicted next plan
+                                        # off the critical path (cost-
+                                        # driven pairing only)
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -152,6 +162,20 @@ class RoundConfig:
         if self.aggregation not in ("paper", "fedavg"):
             raise ValueError(f"aggregation must be 'paper' or 'fedavg', "
                              f"got {self.aggregation!r}")
+        if self.staleness_bound < 0:
+            raise ValueError(f"staleness_bound must be >= 0, got "
+                             f"{self.staleness_bound}")
+        if self.async_rounds and self.algorithm != "fedpairing":
+            raise ValueError(
+                f"async_rounds drives the fedpairing unit decomposition "
+                f"(per-pair completion events); algorithm "
+                f"{self.algorithm!r} has no units to pipeline")
+        if not self.async_rounds and (self.staleness_bound > 0
+                                      or self.overlap_planning):
+            raise ValueError(
+                "staleness_bound / overlap_planning modify the async "
+                "scheduler — set async_rounds=True (the synchronous path "
+                "has no staleness and nothing to overlap)")
 
     @property
     def resolved_pair_policy(self) -> str:
@@ -187,6 +211,13 @@ class RoundRecord:
                                          # empty (zero-client cohort)
     failed: Tuple[int, ...] = ()         # clients excluded by faults
     retries: int = 0                     # link retry attempts this round
+    wait_s: float = 0.0                  # barrier idle: sum over units of
+                                         # (straggler max - own finish) —
+                                         # what the sync path wastes and
+                                         # the async clock recovers
+    overlap_s: float = 0.0               # async only: seconds of this
+                                         # round's execution overlapped
+                                         # with earlier rounds
 
     def __eq__(self, other):
         # field-by-field with NaN-aware float compare: skipped/aborted
@@ -220,6 +251,11 @@ class RoundState:
                                          # at-adoption objective (the drift
                                          # reference replan_threshold
                                          # compares against)
+    clock: Optional[latency.EventClockState] = None
+                                         # async rounds only (DESIGN.md
+                                         # §12): per-client availability +
+                                         # recent merge publishes; None on
+                                         # the synchronous path
 
 
 # ---------------------------------------------------------------------------
@@ -245,6 +281,11 @@ class _VmappedEngine:
                             jnp.asarray(plan.lengths_array(), jnp.int32),
                             jnp.asarray(agg_w, jnp.float32))
         return new, m["loss"]
+
+    def prebuild(self, plan: RoundPlan, agg_w) -> bool:
+        """Overlap-planning hook: nothing to pre-build — the one traced
+        step already covers every plan."""
+        return False
 
 
 def _plan_key(plan: RoundPlan, agg_w) -> Tuple:
@@ -280,6 +321,19 @@ class _BucketedEngine:
             self._cache[key] = built
         new, m = built(params, batch)
         return new, m["loss"]
+
+    def prebuild(self, plan: RoundPlan, agg_w) -> bool:
+        """Overlap-planning hook: build (and memoize) the predicted
+        plan's specialized step off the critical path, so an adopted
+        prediction's first step is a cache hit.  Returns whether a new
+        step was actually built."""
+        key = _plan_key(plan, agg_w)
+        if key in self._cache:
+            return False
+        built, _bplan = self._make(self._cfg, plan.partner_array(),
+                                   plan.lengths_array(), agg_w, self._bcfg)
+        self._cache[key] = built
+        return True
 
 
 class _DistEngine:
@@ -318,6 +372,22 @@ class _DistEngine:
                 self._cache[key] = built
             new, loss = built(params, batch)
         return new, loss
+
+    def prebuild(self, plan: RoundPlan, agg_w) -> bool:
+        """Overlap-planning hook (see _BucketedEngine.prebuild)."""
+        key = _plan_key(plan, agg_w)
+        if key in self._cache:
+            return False
+        with compat.set_mesh(self.mesh):
+            dcfg = self._dist.FedDistConfig(
+                lr=self._rc.lr, overlap_boost=self._rc.overlap_boost,
+                split_ranges=plan.phase_envelope(),
+                donate=self._rc.donate)
+            self._cache[key] = self._dist.make_dist_fed_step(
+                self._cfg, self.mesh,
+                self._dist.pairs_to_ppermute(plan.partner_array()),
+                np.asarray(agg_w, np.float32), plan.masks(), dcfg)
+        return True
 
 
 _ENGINE_CLASSES = {"vmapped": _VmappedEngine, "bucketed": _BucketedEngine,
@@ -394,8 +464,8 @@ class RoundDriver:
                 f"(the {rc.engine} engine builds its loss from cfg)")
         self.loss_fn = loss_fn or (lambda p, b: registry.loss_fn(p, b, cfg)[0])
         self.init_fn = init_fn or (lambda key: registry.init_params(cfg, key))
-        self.batch_fn = batch_fn or make_lm_batch_fn(cfg, self.n,
-                                                     seed=rc.seed)
+        self.batch_fn = _validated_batch_fn(
+            batch_fn or make_lm_batch_fn(cfg, self.n, seed=rc.seed), self.n)
         if sharding is not None:
             # batches are fleet state too: place every drawn batch with
             # its client dim over the fleet axis (host-to-device, once
@@ -417,6 +487,14 @@ class RoundDriver:
             tolerance=rc.replan_threshold) \
             if (rc.cut_cache and rc.algorithm == "fedpairing"
                 and self._cost_driven) else None
+        # overlap planning (DESIGN.md §12): the predicted next-round plan
+        # pre-built off the critical path, adopted by _build_plan when the
+        # prediction's inputs (positions, active set) still hold.  Only
+        # meaningful for cost-driven policies (seed-free matchings);
+        # predicted_adoptions counts how often the prediction paid off.
+        self._predicted: Optional[Tuple[RoundPlan, np.ndarray,
+                                        np.ndarray]] = None
+        self.predicted_adoptions = 0
         # fault layer (DESIGN.md §9): stateless per-round realization —
         # NEVER consumes the driver rng — and the reliability-pricing
         # vector the planner sees (None when every probability is zero,
@@ -443,7 +521,9 @@ class RoundDriver:
         return RoundState(round=0, fleet=self.fleet0, client_params=client,
                           server_params=server,
                           rng=np.random.default_rng(self.rc.seed),
-                          sim_time_s=0.0, history=[])
+                          sim_time_s=0.0, history=[],
+                          clock=(latency.initial_event_clock(self.n)
+                                 if self.rc.async_rounds else None))
 
     def global_params(self, state: RoundState) -> Dict:
         """The post-broadcast global model.  For sl the single shared tree;
@@ -490,6 +570,15 @@ class RoundDriver:
             "history": [dataclasses.asdict(r) for r in state.history],
             "plan": (None if state.plan is None
                      else dataclasses.asdict(state.plan)),
+            # async event clock (DESIGN.md §12): plain float lists —
+            # the msgpack round-trip preserves float64 exactly, so a
+            # resumed async trace stays bit-identical
+            "async_rounds": bool(self.rc.async_rounds),
+            "staleness_bound": int(self.rc.staleness_bound),
+            "clock": (None if state.clock is None
+                      else {"avail": [float(a) for a in state.clock.avail],
+                            "merges": [float(m)
+                                       for m in state.clock.merges]}),
         }
         ckpt_io.save_checkpoint(path, tree, meta)
 
@@ -521,6 +610,17 @@ class RoundDriver:
                     f"{meta.get(key)!r}; this driver has {key}={mine!r} "
                     f"— resume replays the checkpointed run's streams "
                     f"and needs a matching config")
+        # normalized compare (missing on pre-async checkpoints == sync)
+        if (bool(meta.get("async_rounds", False)) != self.rc.async_rounds
+                or int(meta.get("staleness_bound", 0))
+                != self.rc.staleness_bound):
+            raise ValueError(
+                f"checkpoint {path} was written with async_rounds="
+                f"{bool(meta.get('async_rounds', False))!r} / "
+                f"staleness_bound={int(meta.get('staleness_bound', 0))}; "
+                f"this driver has async_rounds={self.rc.async_rounds!r} / "
+                f"staleness_bound={self.rc.staleness_bound} — the event "
+                f"clock is part of the resumed trace")
         g = self._gparams
         if self.rc.algorithm == "sl":
             client_like, server_like = g, g
@@ -553,6 +653,10 @@ class RoundDriver:
         history = [_record_from_dict(d) for d in meta["history"]]
         plan = (None if meta["plan"] is None
                 else _plan_from_dict(meta["plan"]))
+        clock_meta = meta.get("clock")
+        clock = (None if clock_meta is None else latency.EventClockState(
+            avail=tuple(float(a) for a in clock_meta["avail"]),
+            merges=tuple(float(m) for m in clock_meta["merges"])))
         if fast_forward:
             for _ in range(int(meta["round"]) * self.rc.batches_per_round):
                 self.batch_fn()
@@ -560,7 +664,7 @@ class RoundDriver:
                           client_params=client, server_params=server,
                           rng=rng,
                           sim_time_s=float(meta["sim_time_s"]),
-                          history=history, plan=plan)
+                          history=history, plan=plan, clock=clock)
 
     # -- one round --------------------------------------------------------
 
@@ -585,23 +689,23 @@ class RoundDriver:
         active = np.zeros(self.n, bool)
         active[cohort] = True
         if cohort.size == 0:
-            record, client, server, plan = self._empty_round(state, fleet,
-                                                             cohort)
+            record, client, server, plan, clock = self._empty_round(
+                state, fleet, cohort)
         else:
             run = {"fedpairing": self._fedpairing_round,
                    "fl": self._fl_round, "sl": self._sl_round,
                    "splitfed": self._splitfed_round}
-            record, client, server, plan = run[rc.algorithm](
+            record, client, server, plan, clock = run[rc.algorithm](
                 state, fleet, cohort, active, pair_seed)
         return dataclasses.replace(
             state, round=state.round + 1, fleet=fleet, client_params=client,
             server_params=server, rng=rng, sim_time_s=record.sim_total_s,
-            history=state.history + [record], plan=plan)
+            history=state.history + [record], plan=plan, clock=clock)
 
     def _record(self, state, cohort, pairs, lengths, mean_loss, round_s,
                 cached, objective=None, replanned=True,
                 cut_cache="n/a", status="ok", failed=(),
-                retries=0) -> RoundRecord:
+                retries=0, wait_s=0.0, overlap_s=0.0) -> RoundRecord:
         return RoundRecord(
             round=state.round, cohort=tuple(int(c) for c in cohort),
             pairs=pairs, lengths=tuple(int(l) for l in lengths),
@@ -611,7 +715,8 @@ class RoundDriver:
             objective=None if objective is None else float(objective),
             replanned=bool(replanned), cut_cache=str(cut_cache),
             status=str(status), failed=tuple(int(c) for c in failed),
-            retries=int(retries))
+            retries=int(retries), wait_s=float(wait_s),
+            overlap_s=float(overlap_s))
 
     def _empty_round(self, state, fleet, cohort):
         """A participation fraction that rounds to zero clients: a defined
@@ -626,7 +731,15 @@ class RoundDriver:
         rec = self._record(state, cohort, (),
                            (self.cfg.num_layers,) * self.n, float("nan"),
                            0.0, cached, replanned=False, status="empty")
-        return rec, state.client_params, state.server_params, state.plan
+        clock = state.clock
+        if clock is not None:
+            # zero-duration merge: the event clock still publishes so the
+            # staleness window slides the same way the sync round counter
+            # does (an empty round is a round)
+            clock, _ = latency.advance_event_clock(
+                clock, (), np.zeros(0), 0.0, self.rc.staleness_bound)
+        return (rec, state.client_params, state.server_params, state.plan,
+                clock)
 
     def round_plan(self, fleet: ClientFleet, partner: np.ndarray,
                    active: np.ndarray, num_layers: Optional[int] = None
@@ -662,6 +775,18 @@ class RoundDriver:
         keep the historical cohort_partner -> build_round_plan path
         bit-identically."""
         rc = self.rc
+        pred, self._predicted = self._predicted, None
+        if pred is not None:
+            pplan, ppos, pact = pred
+            if (np.array_equal(ppos, np.asarray(fleet.positions))
+                    and np.array_equal(pact, np.asarray(active, bool))):
+                # the overlap planner's prediction still holds (no drift
+                # moved the channel, same cohort): adopt the pre-built
+                # plan — identical to what the fresh matching below would
+                # produce (cost-driven matchings are seed-free), its
+                # engine step already compiled off the critical path
+                self.predicted_adoptions += 1
+                return pplan
         policy = pairing.get_pairing_policy(rc.resolved_pair_policy)
         if policy.cost_driven:
             return planning.build_joint_plan(
@@ -709,6 +834,64 @@ class RoundDriver:
             return "kept"
         return self.plan_cache.last_status
 
+    def _overlap_prebuild(self, fleet: ClientFleet, active) -> None:
+        """Overlap next-round planning with current execution (DESIGN.md
+        §12): predict the next round's plan under the CURRENT channel
+        realization and cohort (the best forecast available without a
+        channel model — ROADMAP's learned/forecast re-planning item plugs
+        in here), re-pricing the planner cache's cut search
+        (``planning.price_cuts`` inside ``build_joint_plan``) and
+        pre-building the predicted plan's engine step off the critical
+        path.  ``_build_plan`` adopts the prediction next round iff its
+        inputs still hold; the simulated clock charges NOTHING here —
+        planning happens during the round's simulated execution, which is
+        exactly the overlap being modeled (host wall-clock pays it, the
+        event clock does not; the records' ``overlap_s`` accounts the
+        execution-side overlap explicitly).  Cost-driven policies only:
+        weight/random matchings are pair-seed-dependent, so a prediction
+        could not be validated as identical to the fresh matching."""
+        if self.plan_cache is None:
+            return
+        rc = self.rc
+        plan = planning.build_joint_plan(
+            fleet, self.chan, self.cfg.num_layers,
+            pair_policy=pairing.get_pairing_policy(rc.resolved_pair_policy),
+            split_policy=rc.split_policy, workload=self.workload,
+            active=np.asarray(active, bool),
+            granularity=rc.bucket_granularity, server_cut=rc.server_cut,
+            seed=0, cache=self.plan_cache, fail=self._fail)
+        agg_w = fedpair.pair_weights(fleet.data_sizes, plan.partner_array())
+        self._engine.prebuild(plan, agg_w)
+        self._predicted = (plan, np.array(fleet.positions),
+                           np.asarray(active, bool).copy())
+
+    def _advance_clock(self, state, cohort, units, times, upload_s,
+                       cap_s=None, resync=()):
+        """Advance the async event clock by this round's surviving units:
+        the cohort's admission stream (``participation.admission_stream``)
+        feeds per-unit start times into ``latency.advance_event_clock``
+        (DESIGN.md §12)."""
+        floor = latency.event_clock_floor(state.clock,
+                                          self.rc.staleness_bound)
+        stream = participation.admission_stream(cohort, state.clock.avail,
+                                                floor)
+        admit = participation.admission_times(self.n, stream)
+        return latency.advance_event_clock(
+            state.clock, units, np.asarray(times, np.float64),
+            float(upload_s), self.rc.staleness_bound, admit_s=admit,
+            cap_s=cap_s, resync=resync)
+
+    @staticmethod
+    def _staleness_arg(ac: Optional[latency.AsyncRoundClock]):
+        """The aggregation ``staleness`` argument: None on the sync path
+        AND when every unit is fresh (staleness bound 0, or an async round
+        that happened to catch up) — keeps the aggregation jaxpr (and the
+        §12 bit-identity) unchanged whenever there is nothing to
+        discount."""
+        if ac is None or not any(ac.staleness):
+            return None
+        return jnp.asarray(ac.staleness, jnp.int32)
+
     def _fedpairing_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
         plan, anchor, replanned = self._adaptive_plan(state, fleet, cohort,
@@ -726,19 +909,31 @@ class RoundDriver:
             losses.append(np.asarray(l))
         mean_loss = _mean_active_loss(losses, active,
                                       round_idx=state.round)
+        units, times, upload_s = latency.round_clock_plan(
+            self._latency_plan(fleet, partner, active, plan), fleet,
+            self.chan, self.workload)
+        if rc.async_rounds:
+            clock, ac = self._advance_clock(state, cohort, units, times,
+                                            upload_s)
+            round_s, wait_s, overlap_s = ac.round_s, ac.wait_s, ac.overlap_s
+        else:
+            clock, ac = state.clock, None
+            round_s = float(np.max(times)) + upload_s
+            wait_s, overlap_s = latency.barrier_wait_s(times), 0.0
         g = aggregation.aggregate(params,
                                   jnp.asarray(fleet.data_sizes, jnp.float32),
                                   rc.aggregation,
-                                  active=jnp.asarray(active))
+                                  active=jnp.asarray(active),
+                                  staleness=self._staleness_arg(ac))
         params = aggregation.broadcast(g, self.n, sharding=self.sharding)
-        round_s = latency.round_time_plan(
-            self._latency_plan(fleet, partner, active, plan), fleet,
-            self.chan, self.workload)
         rec = self._record(state, cohort, plan.pairs, plan.lengths,
                            mean_loss, round_s, self._engine.cached_steps,
                            objective=plan.objective, replanned=replanned,
-                           cut_cache=self._cut_cache_status(replanned))
-        return rec, params, None, anchor
+                           cut_cache=self._cut_cache_status(replanned),
+                           wait_s=wait_s, overlap_s=overlap_s)
+        if rc.overlap_planning:
+            self._overlap_prebuild(fleet, active)
+        return rec, params, None, anchor, clock
 
     def _fedpairing_faulted(self, state, fleet, cohort, active, plan,
                             anchor, replanned):
@@ -775,6 +970,7 @@ class RoundDriver:
                           | set(clock.link_failed))
         final_active = exec_active.copy()
         final_active[[c for c in excluded if c < self.n]] = False
+        event_clock, ac = state.clock, None
         if not clock.completed:
             # graceful with no survivor -> skipped; abort with any
             # failure -> aborted.  Params roll back to the pre-round
@@ -785,6 +981,13 @@ class RoundDriver:
                                            sharding=self.sharding)
             status = "aborted" if fcfg.mode == "abort" else "skipped"
             mean_loss = float("nan")
+            round_s, wait_s, overlap_s = clock.round_s, 0.0, 0.0
+            if rc.async_rounds:
+                # a lost round is a barrier event: the faulted cost is
+                # global (the server waited out the deadline) and every
+                # client resyncs at the publish — nothing to pipeline
+                event_clock, _ = latency.advance_event_clock_barrier(
+                    event_clock, clock.round_s, rc.staleness_bound)
         else:
             agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
             params = state.client_params
@@ -795,21 +998,40 @@ class RoundDriver:
                 losses.append(np.asarray(l))
             mean_loss = _mean_active_loss(losses, final_active,
                                           round_idx=state.round)
+            if rc.async_rounds:
+                # replay the realized surviving units on the event clock,
+                # capped by the same deadline the sync accounting obeys;
+                # excluded clients resync to the merge (they rejoin fresh)
+                event_clock, ac = self._advance_clock(
+                    state, cohort, clock.units,
+                    np.asarray(clock.times, np.float64), clock.upload_s,
+                    cap_s=(clock.deadline_s
+                           if np.isfinite(clock.deadline_s) else None),
+                    resync=[c for c in excluded if c < self.n])
+                round_s, wait_s, overlap_s = (ac.round_s, ac.wait_s,
+                                              ac.overlap_s)
+            else:
+                round_s = clock.round_s
+                wait_s, overlap_s = latency.barrier_wait_s(clock.times), 0.0
             g = aggregation.aggregate(
                 params, jnp.asarray(fleet.data_sizes, jnp.float32),
-                rc.aggregation, active=jnp.asarray(final_active))
+                rc.aggregation, active=jnp.asarray(final_active),
+                staleness=self._staleness_arg(ac))
             params = aggregation.broadcast(g, self.n,
                                            sharding=self.sharding)
             status = "degraded" if excluded else "ok"
         rec = self._record(state, cohort, exec_plan.pairs,
-                           exec_plan.lengths, mean_loss, clock.round_s,
+                           exec_plan.lengths, mean_loss, round_s,
                            self._engine.cached_steps,
                            objective=exec_plan.objective,
                            replanned=replanned,
                            cut_cache=self._cut_cache_status(replanned),
                            status=status, failed=excluded,
-                           retries=rf.retry_total(fcfg.retries))
-        return rec, params, None, anchor
+                           retries=rf.retry_total(fcfg.retries),
+                           wait_s=wait_s, overlap_s=overlap_s)
+        if rc.overlap_planning:
+            self._overlap_prebuild(fleet, active)
+        return rec, params, None, anchor, event_clock
 
     def _fl_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
@@ -830,14 +1052,17 @@ class RoundDriver:
                                       server_cut=rc.server_cut,
                                       full_stack=True)
         sub = latency.subfleet(fleet, cohort)
+        sub_cycles = (self._cycles[cohort] if self._cycles is not None
+                      else None)
         round_s = latency.round_time_vanilla_fl(
-            sub, self.chan, self.workload,
-            cycles=self._cycles[cohort] if self._cycles is not None else None)
+            sub, self.chan, self.workload, cycles=sub_cycles)
+        wait_s = latency.barrier_wait_s(latency.local_full_stack_time(
+            sub.cpu_hz, self.workload, cycles=sub_cycles))
         rec = self._record(state, cohort, (), plan.lengths,
                            _mean_active_loss(losses, active,
                                              round_idx=state.round),
-                           round_s, 1)
-        return rec, params, None, state.plan
+                           round_s, 1, wait_s=wait_s)
+        return rec, params, None, state.plan, state.clock
 
     def _sl_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
@@ -864,9 +1089,11 @@ class RoundDriver:
         mean_loss = float(np.mean(losses))
         if not np.isfinite(mean_loss):
             raise NonFiniteLossError(state.round)
+        # sequential relay: each client hands off to the next — there is
+        # no barrier, so no idle to record (wait_s stays 0.0)
         rec = self._record(state, cohort, (), plan.lengths,
                            mean_loss, round_s, 1)
-        return rec, client, server, state.plan
+        return rec, client, server, state.plan, state.clock
 
     def _splitfed_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
@@ -892,16 +1119,25 @@ class RoundDriver:
         g = aggregation.aggregate(sub_params, sub_w, "fedavg")
         client = aggregation.broadcast(g, self.n)
         sub = latency.subfleet(fleet, cohort)
+        sub_cycles = (self._cycles[cohort] if self._cycles is not None
+                      else None)
         round_s = latency.round_time_splitfed(
             sub, self.chan, self.workload, client_layers=cut,
-            cycles=self._cycles[cohort] if self._cycles is not None else None)
+            cycles=sub_cycles)
+        # the per-batch fed-server barrier: idle = sum over clients of
+        # (slowest client-side batch - own), paid every batch
+        wait_s = latency.barrier_wait_s(latency.splitfed_client_times(
+            sub, self.chan, self.workload, client_layers=cut,
+            cycles=sub_cycles)) \
+            * self.workload.batches_per_epoch * self.workload.local_epochs
         per_client = np.stack([np.asarray(l, np.float64) for l in losses])
         bad = ~np.isfinite(per_client).all(axis=0)
         if bad.any():
             raise NonFiniteLossError(state.round, idx[bad])
         rec = self._record(state, cohort, (), plan.lengths,
-                           float(per_client.mean()), round_s, 1)
-        return rec, client, server, state.plan
+                           float(per_client.mean()), round_s, 1,
+                           wait_s=wait_s)
+        return rec, client, server, state.plan, state.clock
 
 
 def _record_from_dict(d: Dict) -> RoundRecord:
@@ -920,7 +1156,9 @@ def _record_from_dict(d: Dict) -> RoundRecord:
         replanned=bool(d["replanned"]), cut_cache=str(d["cut_cache"]),
         status=str(d["status"]),
         failed=tuple(int(c) for c in d["failed"]),
-        retries=int(d["retries"]))
+        retries=int(d["retries"]),
+        wait_s=float(d.get("wait_s", 0.0)),
+        overlap_s=float(d.get("overlap_s", 0.0)))
 
 
 def _plan_from_dict(d: Dict) -> RoundPlan:
@@ -941,6 +1179,48 @@ def _plan_from_dict(d: Dict) -> RoundPlan:
                        else float(d["seq_objective"])),
         cycles=(None if d.get("cycles") is None
                 else tuple(float(c) for c in d["cycles"])))
+
+
+class BatchValidationError(ValueError):
+    """``batch_fn`` returned a pytree violating the driver's client-axis
+    contract (every leaf stacked (N, ...) with a numeric dtype) — raised
+    at the driver boundary with the offending leaf named, instead of the
+    opaque vmap/scan trace error a shape mismatch produces deep inside
+    the engine step."""
+
+    def __init__(self, leaf_idx: int, detail: str):
+        self.leaf_idx = int(leaf_idx)
+        super().__init__(
+            f"batch_fn returned an invalid batch: leaf #{self.leaf_idx} "
+            f"{detail} — every leaf must be an array stacked over the "
+            f"client axis (leading dim N) with a numeric dtype")
+
+
+def _validated_batch_fn(fn: Callable[[], Dict], n: int) -> Callable[[], Dict]:
+    """Wrap ``batch_fn`` with the client-axis contract check (leading dim
+    N, numeric dtypes) so a bad data pipeline fails at the boundary with
+    ``BatchValidationError``, not rounds later inside a traced step."""
+
+    def validated() -> Dict:
+        batch = fn()
+        for k, leaf in enumerate(jax.tree_util.tree_leaves(batch)):
+            shape = getattr(leaf, "shape", None)
+            dtype = getattr(leaf, "dtype", None)
+            if shape is None or dtype is None:
+                raise BatchValidationError(
+                    k, f"is a {type(leaf).__name__}, not an array")
+            if len(shape) < 1 or int(shape[0]) != n:
+                raise BatchValidationError(
+                    k, f"has shape {tuple(shape)}; expected a leading "
+                       f"client dim of {n}")
+            np_dtype = np.dtype(dtype)
+            if not (np.issubdtype(np_dtype, np.number)
+                    or np_dtype == np.bool_):
+                raise BatchValidationError(
+                    k, f"has non-numeric dtype {np_dtype}")
+        return batch
+
+    return validated
 
 
 class NonFiniteLossError(RuntimeError):

@@ -72,6 +72,22 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--aggregation", choices=["paper", "fedavg"],
                     default="paper")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--async-rounds", action="store_true",
+                    help="event-driven async round execution: per-unit "
+                         "completion events replace the round-max barrier "
+                         "(DESIGN.md §12); at --staleness-bound 0 the "
+                         "trace is bit-identical to the synchronous driver")
+    ap.add_argument("--staleness-bound", type=int, default=0, metavar="S",
+                    help="bounded-staleness admission for --async-rounds: "
+                         "a unit may train from a model up to S merges old "
+                         "(its update is discounted 1/(1+s) at "
+                         "aggregation); 0 keeps barrier semantics")
+    ap.add_argument("--overlap-planning", action="store_true",
+                    help="overlap next-round planning with execution "
+                         "(--async-rounds, cost-driven pair policies): "
+                         "re-price the planner cache and pre-build the "
+                         "predicted plan's engine step off the critical "
+                         "path")
     fleet_cli.add_fleet_args(ap)
     fleet_cli.add_mesh_args(ap)
     fault_cli.add_fault_args(ap)
@@ -104,7 +120,10 @@ def main() -> None:
         lr=args.lr, aggregation=args.aggregation,
         overlap_boost=not args.no_overlap_boost,
         bucket_granularity=args.bucket_granularity, seed=args.seed,
-        faults=fault_cli.fault_config(args))
+        faults=fault_cli.fault_config(args),
+        async_rounds=args.async_rounds,
+        staleness_bound=args.staleness_bound,
+        overlap_planning=args.overlap_planning)
     # round-0 plan preview on the initial channel realization: the joint
     # plan (pairing x cut together) vs the sequential pair-then-cut plan
     plan0 = planning.build_joint_plan(

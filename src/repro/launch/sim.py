@@ -66,6 +66,23 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--server-cut", type=int, default=0,
                     help="sl/splitfed client-side depth (0 -> W//2)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--async-rounds", action="store_true",
+                    help="event-driven async round execution (fedpairing): "
+                         "per-unit completion events replace the round-max "
+                         "barrier (DESIGN.md §12); at --staleness-bound 0 "
+                         "the trace is bit-identical to the synchronous "
+                         "driver")
+    ap.add_argument("--staleness-bound", type=int, default=0, metavar="S",
+                    help="bounded-staleness admission for --async-rounds: "
+                         "a unit may train from a model up to S merges old "
+                         "(its update is discounted 1/(1+s) at "
+                         "aggregation); 0 keeps barrier semantics")
+    ap.add_argument("--overlap-planning", action="store_true",
+                    help="overlap next-round planning with execution "
+                         "(--async-rounds, cost-driven pair policies): "
+                         "re-price the planner cache and pre-build the "
+                         "predicted plan's engine step off the critical "
+                         "path")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="dump the round trace as JSON")
     fleet_cli.add_fleet_args(ap)
@@ -89,7 +106,10 @@ def run_sim(args) -> rounds.RoundState:
         overlap_boost=not args.no_overlap_boost,
         bucket_granularity=args.bucket_granularity,
         server_cut=args.server_cut, seed=args.seed,
-        faults=fault_cli.fault_config(args))
+        faults=fault_cli.fault_config(args),
+        async_rounds=args.async_rounds,
+        staleness_bound=args.staleness_bound,
+        overlap_planning=args.overlap_planning)
     fleet = latency.make_fleet(n=args.clients, seed=args.seed)
     # latency accounting sees the REAL architecture's boundary payloads
     # (per-cut residual-stream bytes) — what the cost-driven pairing

@@ -1,0 +1,330 @@
+"""Async pipelined rounds (DESIGN.md §12) — the ISSUE-9 contracts.
+
+* equality: staleness bound 0 + overlap off leaves the async driver's
+  trace (records, params, rng order) BIT-IDENTICAL to the synchronous
+  driver — across engines, participation, drift and fault injection
+  (property-sampled), and through checkpoint/resume,
+* monotonicity: the event clock is never slower than the barrier —
+  per round, per realization, for any staleness bound (property-sampled
+  at the latency level),
+* bounded staleness: per-unit staleness never exceeds the bound; the
+  staleness-weighted aggregation discounts stale updates 1/(1+s) and is
+  bit-identical to the unweighted path when every unit is fresh,
+* overlap planning: with no drift the predicted plan is adopted
+  (``predicted_adoptions``) and the trace matches overlap-off exactly,
+* satellites: the driver-boundary ``batch_fn`` contract
+  (``BatchValidationError``), admission-stream ordering, config guards,
+  checkpoint clock round-trip + sync/async mismatch rejection.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (aggregation, faults, latency, pairing,
+                        participation, planning, rounds)
+from repro.hypothesis_compat import given, settings, strategies as st
+
+# "async" is a keyword — the marker attribute needs getattr
+pytestmark = getattr(pytest.mark, "async")
+
+W = 4
+N = 4
+CFG = get_smoke_config("tinyllama-1.1b").with_overrides(num_layers=W)
+FLEET = latency.make_fleet(n=N, seed=0)
+CHAN = latency.ChannelModel()
+WORK = latency.WorkloadModel(num_layers=W)
+
+
+def _driver(engine="vmapped", **kw):
+    rc_kw = dict(algorithm="fedpairing", engine=engine, rounds=3,
+                 batches_per_round=2, participation=1.0, drift_sigma_m=2.0,
+                 donate=False, seed=0)
+    rc_kw.update(kw)
+    return rounds.RoundDriver(CFG, rounds.RoundConfig(**rc_kw), FLEET)
+
+
+def _fc(**kw):
+    base = dict(dropout=0.3, outage=0.2, straggler=0.3,
+                deadline_factor=1.5, retries=2, seed=7)
+    base.update(kw)
+    return faults.FaultConfig(**base)
+
+
+def _tree_equal(a, b):
+    for (path, x), (_, y) in zip(jax.tree_util.tree_flatten_with_path(a)[0],
+                                 jax.tree_util.tree_flatten_with_path(b)[0]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(path))
+
+
+# ---------------------------------------------------------------------------
+# config guards
+# ---------------------------------------------------------------------------
+
+class TestValidation:
+    def test_async_requires_fedpairing(self):
+        for alg in ("fl", "sl", "splitfed"):
+            with pytest.raises(ValueError, match="async"):
+                rounds.RoundConfig(algorithm=alg, async_rounds=True)
+        rounds.RoundConfig(algorithm="fedpairing", async_rounds=True)
+
+    def test_staleness_needs_async(self):
+        with pytest.raises(ValueError, match="staleness"):
+            rounds.RoundConfig(staleness_bound=1)
+        with pytest.raises(ValueError, match="staleness"):
+            rounds.RoundConfig(async_rounds=True, staleness_bound=-1)
+
+    def test_overlap_needs_async(self):
+        with pytest.raises(ValueError, match="overlap_planning"):
+            rounds.RoundConfig(overlap_planning=True)
+
+    def test_floor_rejects_negative_bound(self):
+        with pytest.raises(ValueError, match="bound"):
+            latency.event_clock_floor(latency.initial_event_clock(2), -1)
+
+
+# ---------------------------------------------------------------------------
+# §12 equality contract: S=0 async == sync, bit for bit
+# ---------------------------------------------------------------------------
+
+class TestBitIdentity:
+    @given(engine=st.sampled_from(("vmapped", "bucketed")),
+           part=st.sampled_from((0.5, 1.0)),
+           drift=st.sampled_from((0.0, 2.0)),
+           faulted=st.booleans())
+    @settings(max_examples=8, deadline=None)
+    def test_s0_trace_identical_to_sync(self, engine, part, drift, faulted):
+        kw = dict(participation=part, drift_sigma_m=drift,
+                  faults=_fc() if faulted else None)
+        s_sync = _driver(engine, **kw).run()
+        s_async = _driver(engine, async_rounds=True, **kw).run()
+        assert s_async.history == s_sync.history
+        _tree_equal(s_async.client_params, s_sync.client_params)
+
+    def test_s0_wait_matches_barrier_accounting(self):
+        """At bound 0 the async wait_s IS the synchronous barrier idle —
+        the same floats, not an analogous quantity."""
+        s_sync = _driver().run()
+        s_async = _driver(async_rounds=True).run()
+        for r_s, r_a in zip(s_sync.history, s_async.history):
+            assert r_a.wait_s == r_s.wait_s
+            assert r_a.overlap_s == r_s.overlap_s == 0.0
+
+    def test_resume_reproduces_async_history(self, tmp_path):
+        path = os.fspath(tmp_path / "ck.msgpack")
+        kw = dict(async_rounds=True, staleness_bound=2, faults=_fc())
+        d1 = _driver(**kw)
+        st1 = d1.init_state()
+        for _ in range(2):
+            st1 = d1.run_round(st1)
+        d1.save_state(st1, path)
+        d2 = _driver(**kw)
+        st2 = d2.load_state(path)
+        assert st2.clock == st1.clock    # event clock round-trips exactly
+        st2 = d2.run_round(st2)
+        full = _driver(**kw).run()
+        assert st2.history == full.history
+        _tree_equal(st2.client_params, full.client_params)
+
+    def test_clock_mode_mismatch_rejected(self, tmp_path):
+        path = os.fspath(tmp_path / "ck.msgpack")
+        d1 = _driver(async_rounds=True, staleness_bound=2)
+        d1.save_state(d1.run(rounds=1), path)
+        with pytest.raises(ValueError, match="async"):
+            _driver().load_state(path)
+        with pytest.raises(ValueError, match="staleness"):
+            _driver(async_rounds=True, staleness_bound=1).load_state(path)
+
+    def test_sync_checkpoint_loads_as_sync_default(self, tmp_path):
+        """Pre-§12 checkpoints carry no clock keys; they must keep
+        loading into a synchronous driver unchanged."""
+        path = os.fspath(tmp_path / "ck.msgpack")
+        d1 = _driver()
+        d1.save_state(d1.run(rounds=1), path)
+        st2 = _driver().load_state(path)
+        assert st2.clock is None
+
+
+# ---------------------------------------------------------------------------
+# event-clock monotonicity (latency level, property-sampled)
+# ---------------------------------------------------------------------------
+
+class TestClockMonotonicity:
+    @given(n=st.integers(2, 8), seed=st.integers(0, 10 ** 6),
+           bound=st.integers(0, 3))
+    @settings(max_examples=25, deadline=None)
+    def test_async_never_slower_than_barrier(self, n, seed, bound):
+        rng = np.random.default_rng(seed)
+        fleet = latency.make_fleet(n=n, seed=seed)
+        clock = latency.initial_event_clock(n)
+        for _ in range(4):
+            fleet = latency.drift_fleet(fleet, rng, 3.0)
+            pairs = pairing.fedpairing_pairing(fleet, CHAN)
+            partner = planning.partner_from_pairs(pairs, n)
+            units, times, upload_s = latency.round_clock_from_partner(
+                partner, fleet, CHAN, WORK)
+            sync_s = float(np.max(times)) + upload_s
+            prev_publish = clock.merges[-1]
+            clock, ac = latency.advance_event_clock(clock, units, times,
+                                                    upload_s, bound)
+            assert ac.round_s <= sync_s + 1e-9
+            assert ac.round_s >= 0.0 and ac.wait_s >= 0.0
+            assert ac.overlap_s >= 0.0
+            # publishes advance monotonically; nobody outruns the merge
+            assert clock.merges[-1] >= prev_publish
+            assert max(clock.avail) <= clock.merges[-1] + 1e-9
+            assert all(0 <= s <= bound for s in ac.staleness)
+            assert len(clock.merges) <= bound + 1
+
+    def test_s0_reproduces_barrier_bitwise(self):
+        units = ((0, 1), (2,))
+        times = np.asarray([7.25, 3.5])
+        clock = latency.initial_event_clock(3)
+        for _ in range(3):
+            clock, ac = latency.advance_event_clock(clock, units, times,
+                                                    1.125, 0)
+            assert ac.round_s == float(np.max(times)) + 1.125  # exact ==
+            assert ac.wait_s == latency.barrier_wait_s(times)
+            assert ac.overlap_s == 0.0 and ac.staleness == (0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness aggregation
+# ---------------------------------------------------------------------------
+
+class TestStalenessAggregation:
+    def test_zero_staleness_is_identity(self):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.asarray(rng.normal(size=(N, 5)), jnp.float32)}
+        agg_w = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+        base = aggregation.aggregate(params, agg_w, "paper")
+        zs = aggregation.aggregate(params, agg_w, "paper",
+                                   staleness=jnp.zeros(N, jnp.int32))
+        _tree_equal(base, zs)
+
+    def test_stale_update_downweighted(self):
+        import jax.numpy as jnp
+        params = {"w": jnp.asarray([[0.0], [1.0]], jnp.float32)}
+        agg_w = jnp.ones(2, jnp.float32)
+        g = aggregation.aggregate(params, agg_w, "paper",
+                                  staleness=jnp.asarray([0, 3], jnp.int32))
+        # weights 1 and 1/4: mean pulled toward the fresh client 0
+        np.testing.assert_allclose(np.asarray(g["w"]), [0.2], rtol=1e-6)
+
+    def test_driver_staleness_changes_merge_only_when_stale(self):
+        """An async run that stays synchronized (full participation can
+        still pipeline, but round 0 has nothing to be stale against)
+        aggregates round 0 exactly like sync."""
+        s_sync = _driver(rounds=1).run()
+        s_async = _driver(rounds=1, async_rounds=True,
+                          staleness_bound=2).run()
+        _tree_equal(s_async.client_params, s_sync.client_params)
+
+
+# ---------------------------------------------------------------------------
+# pipelining + overlap planning
+# ---------------------------------------------------------------------------
+
+class TestPipelining:
+    def test_bounded_staleness_never_slower_per_round(self):
+        s_sync = _driver().run()
+        s_async = _driver(async_rounds=True, staleness_bound=2).run()
+        for r_s, r_a in zip(s_sync.history, s_async.history):
+            assert r_a.sim_round_s <= r_s.sim_round_s + 1e-9
+        assert s_async.sim_time_s < s_sync.sim_time_s  # strictly pipelines
+        assert any(r.overlap_s > 0 for r in s_async.history)
+
+    def test_overlap_prediction_adopted_without_drift(self):
+        kw = dict(pair_policy="greedy-cost", split_policy="latency-opt",
+                  drift_sigma_m=0.0, async_rounds=True, staleness_bound=1)
+        d_off = _driver("bucketed", **kw)
+        s_off = d_off.run()
+        d_on = _driver("bucketed", overlap_planning=True, **kw)
+        s_on = d_on.run()
+        # adoption changes the trace in NO way — same plans, same clock
+        assert s_on.history == s_off.history
+        _tree_equal(s_on.client_params, s_off.client_params)
+        assert d_on.predicted_adoptions == 2    # rounds 1 and 2
+        assert d_off.predicted_adoptions == 0
+
+    def test_overlap_harmless_under_drift(self):
+        kw = dict(pair_policy="greedy-cost", split_policy="latency-opt",
+                  drift_sigma_m=3.0, async_rounds=True, staleness_bound=1)
+        s_off = _driver("bucketed", **kw).run()
+        d_on = _driver("bucketed", overlap_planning=True, **kw)
+        s_on = d_on.run()
+        # drift invalidates every prediction; the fresh re-plan path must
+        # be byte-for-byte what it was without the prebuild
+        assert s_on.history == s_off.history
+        assert d_on.predicted_adoptions == 0
+
+
+# ---------------------------------------------------------------------------
+# admission stream
+# ---------------------------------------------------------------------------
+
+class TestAdmissionStream:
+    def test_ordering_and_floor(self):
+        stream = participation.admission_stream(
+            np.asarray([3, 0, 2]), [5.0, 9.0, 1.0, 7.0], floor_s=4.0)
+        assert [e.client for e in stream] == [2, 0, 3]
+        assert [e.at_s for e in stream] == [4.0, 5.0, 7.0]
+
+    def test_tie_broken_by_client_id(self):
+        stream = participation.admission_stream(
+            np.asarray([2, 1]), [0.0, 3.0, 3.0], floor_s=0.0)
+        assert [(e.client, e.at_s) for e in stream] == [(1, 3.0), (2, 3.0)]
+
+    def test_scatter_roundtrip(self):
+        cohort = np.asarray([0, 2])
+        stream = participation.admission_stream(cohort, [2.0, 9.0, 6.0],
+                                                floor_s=3.0)
+        admit = participation.admission_times(4, stream)
+        np.testing.assert_array_equal(admit, [3.0, 0.0, 6.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# satellite: driver-boundary batch_fn contract
+# ---------------------------------------------------------------------------
+
+class TestBatchValidation:
+    def _run_one(self, batch_fn):
+        rc = rounds.RoundConfig(algorithm="fedpairing", rounds=1,
+                                batches_per_round=1, donate=False, seed=0)
+        d = rounds.RoundDriver(CFG, rc, FLEET, batch_fn=batch_fn)
+        return d.run_round(d.init_state())
+
+    def test_wrong_leading_dim_named(self):
+        bad = {"tokens": np.zeros((N + 1, 8), np.int32),
+               "targets": np.zeros((N + 1, 8), np.int32)}
+        with pytest.raises(rounds.BatchValidationError,
+                           match=f"leading client dim of {N}"):
+            self._run_one(lambda: bad)
+
+    def test_non_numeric_dtype_named(self):
+        bad = {"tokens": np.zeros((N, 8), np.int32),
+               "targets": np.array([["a"] * 8] * N)}
+        with pytest.raises(rounds.BatchValidationError,
+                           match="non-numeric dtype"):
+            self._run_one(lambda: bad)
+
+    def test_non_array_leaf_named(self):
+        with pytest.raises(rounds.BatchValidationError,
+                           match="not an array"):
+            self._run_one(lambda: {"tokens": [[1, 2]] * N})
+
+    def test_leaf_index_recorded(self):
+        bad = {"a": np.zeros((N, 2), np.float32),
+               "b": np.zeros((3, 2), np.float32)}
+        with pytest.raises(rounds.BatchValidationError) as ei:
+            self._run_one(lambda: bad)
+        assert ei.value.leaf_idx == 1
+
+    def test_valid_batch_passes(self):
+        st1 = self._run_one(rounds.make_lm_batch_fn(CFG, N, batch=1,
+                                                    seq=16, seed=0))
+        assert np.isfinite(st1.history[-1].mean_loss)
