@@ -6,6 +6,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                 machine-readable ``BENCH_pairing.json``
   * table2/*  — algorithm round times           (paper Table II)
   * fig2/*,fig3/* — convergence IID / Non-IID   (paper Figs. 2-3)
+  * convergence/* — aggregation-policy matrix (mean vs scaffold,
+                DESIGN.md §13) through the real round driver; writes
+                machine-readable ``BENCH_convergence.json``.
   * kernel/*  — kernel micro-benchmarks (framework)
   * fedstep/* — dense-masked vs length-bucketed fed step (DESIGN.md
                 §Perf); also writes machine-readable ``BENCH_fedstep.json``
@@ -38,7 +41,7 @@ def build_parser() -> argparse.ArgumentParser:
                          "fedstep,faults,shard,async")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink workloads (smoke/CI; applies to "
-                         "pairing/fedstep/roundtime)")
+                         "pairing/fedstep/roundtime/convergence)")
     return ap
 
 
@@ -55,7 +58,8 @@ def main() -> None:
         suites.append(functools.partial(bench_roundtime.run, tiny=args.tiny))
     if only is None or "convergence" in only:
         from benchmarks import bench_convergence
-        suites.append(bench_convergence.run)
+        suites.append(functools.partial(bench_convergence.run,
+                                        tiny=args.tiny))
     if only is None or "kernels" in only:
         from benchmarks import bench_kernels
         suites.append(bench_kernels.run)

@@ -1,13 +1,13 @@
 #!/usr/bin/env bash
 # Benchmark bit-rot guard (tier-1 flow): tiny-config pairing + fedstep +
-# roundtime + faults + shard + async suites must exit 0 and emit valid
-# machine-readable JSON.
+# roundtime + convergence + faults + shard + async suites must exit 0 and
+# emit valid machine-readable JSON.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run \
-    --only pairing,fedstep,roundtime,faults,shard,async --tiny
+    --only pairing,fedstep,roundtime,convergence,faults,shard,async --tiny
 
 python - <<'PY'
 import json
@@ -91,6 +91,37 @@ for name, e in fleets.items():
     assert e["bucketed_ms"] > 0, (name, e)
 print("bench_smoke: BENCH_fedstep_tiny.json OK "
       f"(speedups: {[e['speedup'] for e in fleets.values()]})")
+PY
+
+python - <<'PY'
+import json
+with open("BENCH_convergence_tiny.json") as f:
+    d = json.load(f)
+assert d["tiny"] is True, d.get("tiny")
+matrix = d.get("matrix", {})
+assert {"iid", "noniid"} <= set(matrix), matrix.keys()
+for dist in ("iid", "noniid"):
+    for pol in ("mean", "scaffold"):
+        e = matrix[dist].get(pol)
+        assert e is not None, (dist, pol)
+        for key in ("curve", "top1_at_rounds", "window_mean"):
+            assert key in e, (dist, pol, key)
+        assert len(e["curve"]) == d["rounds"], (dist, pol, e["curve"])
+        assert all(0.0 <= c <= 1.0 for c in e["curve"]), (dist, pol, e)
+# the registry contract: the 'mean' policy aggregated bit-identically to
+# a direct aggregate() call on EVERY engine (vmapped/bucketed/fl in
+# process, dist in a fabricated-device child) — asserted in-run too;
+# re-checked here so the JSON itself can't record a divergence
+ident = d["mean_bit_identical"]
+assert {"vmapped", "bucketed", "fl", "dist"} <= set(ident), ident.keys()
+assert all(ident.values()), ident
+# the scaffold gain is recorded (and asserted > 0) by the FULL-SIZE run;
+# tiny rounds are too short for the correction to arm — structure only
+for key in ("noniid_gain", "iid_noniid_gap", "gap_closed"):
+    assert key in d, key
+print("bench_smoke: BENCH_convergence_tiny.json OK "
+      f"(noniid_gain={d['noniid_gain']:+.4f}, "
+      f"gap_closed={d['gap_closed']}, mean_bit_identical={ident})")
 PY
 
 python - <<'PY'

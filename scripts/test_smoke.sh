@@ -40,6 +40,41 @@ print(f"docs-consistency: README.md <-> argparse OK "
       f"({len(in_code)} flags)")
 PY
 
+# marker-audit gate: every marker declared in pytest.ini must be
+# exercised by at least one collected test — a renamed/retired suite
+# can't leave a stage above silently selecting zero tests
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import configparser
+import sys
+
+import pytest
+
+cp = configparser.ConfigParser()
+cp.read("pytest.ini")
+declared = {line.split(":", 1)[0].strip()
+            for line in cp["pytest"]["markers"].strip().splitlines()}
+
+
+class _Audit:
+    def __init__(self):
+        self.seen = set()
+
+    def pytest_collection_finish(self, session):
+        for item in session.items:
+            self.seen.update(m.name for m in item.iter_markers())
+
+
+audit = _Audit()
+rc = pytest.main(["--collect-only", "-q", "-p", "no:cacheprovider",
+                  "--no-header", "-W", "ignore"], plugins=[audit])
+assert rc == 0, f"test collection failed (exit {rc})"
+unexercised = sorted(declared - audit.seen)
+assert not unexercised, \
+    f"pytest.ini declares markers no collected test carries: {unexercised}"
+print(f"marker-audit: every declared marker exercised OK "
+      f"({len(declared)} markers)")
+PY
+
 # planning + pairing suites first (fast, host-side): the RoundPlan and
 # joint-matching invariants gate everything downstream — fail here before
 # paying for the full suite
@@ -58,6 +93,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m het
 # synchronous driver, event-clock monotonicity, bounded-staleness
 # aggregation, overlap planning, the batch_fn boundary contract
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m async
+
+# aggregation-policy / convergence suite (DESIGN.md §13): the scaffold
+# vs mean non-IID regression, registry-mean bit-identity to the
+# pre-registry loop, control-variate invariants
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m convergence
 
 # fleet-axis sharding suite (DESIGN.md §11): placement rules, mesh
 # validation, the 1-device bit-identity contract, compat-shim dispatch

@@ -1,11 +1,27 @@
-"""Server-side model aggregation.
+"""Server-side model aggregation — the aggregation-policy registry.
 
-Two modes (see DESIGN.md §3 — the paper is internally inconsistent):
+Two weighting modes (see DESIGN.md §3 — the paper is internally
+inconsistent):
 * ``paper``  — Algorithm 2 verbatim: gradients were pre-weighted by a_i
                during local training, server takes the plain mean
                ``ω_g = (1/N) Σ ω_i``.
 * ``fedavg`` — classic McMahan weighting at the server:
                ``ω_g = Σ a_i ω_i`` (local updates unweighted).
+
+Orthogonal to the weighting mode, the *policy* registry (DESIGN.md §13,
+mirroring ``planning.SplitPolicy`` / ``pairing.PairingPolicy``) selects
+HOW the cohort's replicas become the next global model:
+
+* ``mean``     — the historical ``aggregate()`` below, stateless,
+                 bit-identical to the pre-registry driver by construction
+                 (the policy literally delegates to it).
+* ``scaffold`` — SCAFFOLD-style variance reduction (Karimireddy et al.,
+                 arXiv 1910.06378): a server control variate ``c_global``
+                 plus per-client variates ``c_local``, delta-based
+                 updates, partial-participation correction.  The round's
+                 jointly-trained pair models are attributed to BOTH
+                 members' variates weighted by their Eq. (6) layer shares
+                 (the pairing-composition rule, DESIGN.md §13).
 
 Mesh-awareness (DESIGN.md §11): both reductions run over the leading
 client axis, so when the replicas arrive sharded over the fleet mesh
@@ -15,47 +31,51 @@ separate collective code path, and the zero-weight hard-mask below is
 applied per shard BEFORE the combine, so an excluded replica's values are
 never read on any device.  ``broadcast`` accepts the fleet sharding so
 the post-round global model lands back on the client placement directly
-(device-to-device; fleet state lives sharded across rounds).
+(device-to-device; fleet state lives sharded across rounds), and the
+scaffold policy's per-client variate tree is placed with the same client
+rule (``init_state(sharding=...)``).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import dataclasses
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-def aggregate(client_params: Dict, agg_w: jnp.ndarray,
-              mode: str = "paper",
-              active: Optional[jnp.ndarray] = None,
-              staleness: Optional[jnp.ndarray] = None) -> Dict:
-    """client_params stacked (N, ...) -> global params.
+class EmptyCohortError(ValueError):
+    """``aggregate()`` was asked to average an empty cohort (all-False
+    ``active`` mask, zero-size client axis, or weights summing to zero) —
+    dividing would NaN the global params.  Raised with the round index
+    when the caller supplies one (like ``rounds.NonFiniteLossError``), so
+    the failing round is nameable from the stack trace alone; a round
+    with no survivors must be SKIPPED by the caller (``rounds`` /
+    ``faults``), never aggregated."""
 
-    ``active`` (N,) bool restricts the aggregation to a participating
-    cohort (partial participation): non-participants' replicas are
-    excluded — "paper" becomes the mean over the cohort, "fedavg" the
-    cohort-renormalized weighted mean.  An empty cohort (all-False
-    ``active``, or weights summing to zero) raises instead of silently
-    renormalizing by zero into NaN params — a round with no survivors
-    must be SKIPPED by the caller (``rounds`` / ``faults``), never
-    aggregated.
+    def __init__(self, round_idx: Optional[int] = None):
+        self.round = None if round_idx is None else int(round_idx)
+        where = "" if self.round is None else f" in round {self.round}"
+        super().__init__(
+            f"aggregate() called with an empty cohort{where} (aggregation "
+            f"weights sum to zero) — dividing would NaN the global params; "
+            f"skip the round instead")
 
-    ``staleness`` (N,) int — bounded-staleness async rounds (DESIGN.md
-    §12): client ``i`` trained from a model ``staleness[i]`` merges
-    behind the current one, so its replica's weight is scaled by
-    ``1/(1+staleness[i])`` before renormalization — stale updates still
-    count, just less, the standard async-FL discount.  Composes with
-    ``active`` and the zero-weight hard-mask below; ``None`` (the
-    synchronous path) or an all-zero vector (async at staleness bound 0)
-    leaves every weight untouched, preserving the §12 bit-identity
-    contract.
-    """
+
+def _unnormalized_weights(agg_w: jnp.ndarray, mode: str,
+                          active: Optional[jnp.ndarray],
+                          staleness: Optional[jnp.ndarray]
+                          ) -> Optional[jnp.ndarray]:
+    """The (N,) pre-normalization weight vector, or ``None`` for the
+    plain-mean fast path (mode "paper", no mask, no staleness) — the one
+    place the mode × mask × staleness composition is defined, shared by
+    ``aggregate`` and ``aggregation_weights``."""
     if staleness is not None and not bool(jnp.any(staleness)):
         staleness = None        # all fresh: keep the synchronous jaxpr
     if mode == "paper":
         if active is None and staleness is None:
-            return jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0),
-                                          client_params)
+            return None
         if active is None:
             w = jnp.ones_like(jnp.asarray(staleness, jnp.float32))
         else:
@@ -68,25 +88,74 @@ def aggregate(client_params: Dict, agg_w: jnp.ndarray,
         raise ValueError(f"unknown aggregation mode {mode!r}")
     if staleness is not None:
         w = w / (1.0 + jnp.asarray(staleness, jnp.float32))
-    total = jnp.sum(w)
-    if float(total) <= 0.0:
-        raise ValueError(
-            "aggregate() called with an empty cohort (aggregation weights "
-            "sum to zero) — dividing would NaN the global params; skip the "
-            "round instead")
-    w = w / total
+    return w
+
+
+def _masked_weighted_mean(w: jnp.ndarray, tree: Dict) -> Dict:
+    """``Σ_i w_i · tree[i]`` over the leading client axis with the
+    zero-weight hard-mask: 0 * nan is nan, and an EXCLUDED client's
+    values may legitimately be garbage (a late straggler that diverged) —
+    exclusion must mean its values are never read.  Bit-identical when
+    every weight is positive (jnp.where selects a unchanged)."""
 
     def wmean(a):
-        # hard-mask zero-weight replicas before the weighted sum: 0 * nan
-        # is nan, and an EXCLUDED client's params may legitimately be
-        # garbage (a late straggler that diverged) — exclusion must mean
-        # its values are never read.  Bit-identical when every weight is
-        # positive (jnp.where selects a unchanged).
         keep = (w > 0).reshape((-1,) + (1,) * (a.ndim - 1))
         masked = jnp.where(keep, a, jnp.zeros((), a.dtype))
         return jnp.tensordot(w.astype(a.dtype), masked, axes=(0, 0))
 
-    return jax.tree_util.tree_map(wmean, client_params)
+    return jax.tree_util.tree_map(wmean, tree)
+
+
+def aggregate(client_params: Dict, agg_w: jnp.ndarray,
+              mode: str = "paper",
+              active: Optional[jnp.ndarray] = None,
+              staleness: Optional[jnp.ndarray] = None,
+              round_idx: Optional[int] = None) -> Dict:
+    """client_params stacked (N, ...) -> global params.
+
+    ``active`` (N,) bool restricts the aggregation to a participating
+    cohort (partial participation): non-participants' replicas are
+    excluded — "paper" becomes the mean over the cohort, "fedavg" the
+    cohort-renormalized weighted mean.  An empty cohort (all-False
+    ``active``, or weights summing to zero) raises ``EmptyCohortError``
+    (naming the round when ``round_idx`` is given) instead of silently
+    renormalizing by zero into NaN params.
+
+    ``staleness`` (N,) int — bounded-staleness async rounds (DESIGN.md
+    §12): client ``i`` trained from a model ``staleness[i]`` merges
+    behind the current one, so its replica's weight is scaled by
+    ``1/(1+staleness[i])`` before renormalization — stale updates still
+    count, just less, the standard async-FL discount.  Composes with
+    ``active`` and the zero-weight hard-mask; ``None`` (the synchronous
+    path) or an all-zero vector (async at staleness bound 0) leaves
+    every weight untouched, preserving the §12 bit-identity contract.
+    """
+    w = _unnormalized_weights(agg_w, mode, active, staleness)
+    if w is None:
+        return jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0),
+                                      client_params)
+    total = jnp.sum(w)
+    if float(total) <= 0.0:
+        raise EmptyCohortError(round_idx)
+    return _masked_weighted_mean(w / total, client_params)
+
+
+def aggregation_weights(agg_w: jnp.ndarray, n: int, mode: str = "paper",
+                        active: Optional[jnp.ndarray] = None,
+                        staleness: Optional[jnp.ndarray] = None,
+                        round_idx: Optional[int] = None) -> jnp.ndarray:
+    """The normalized (N,) per-client weight vector ``aggregate`` reduces
+    with — what the variance-reduced policies consume to keep their
+    correction term on EXACTLY the weights of the base step (cohort mask,
+    staleness discount and hard-mask semantics included).  The plain-mean
+    fast path normalizes to the uniform 1/N vector."""
+    w = _unnormalized_weights(agg_w, mode, active, staleness)
+    if w is None:
+        return jnp.full((n,), 1.0 / n, jnp.float32)
+    total = jnp.sum(w)
+    if float(total) <= 0.0:
+        raise EmptyCohortError(round_idx)
+    return w / total
 
 
 def broadcast(global_params: Dict, n: int, sharding=None) -> Dict:
@@ -97,3 +166,255 @@ def broadcast(global_params: Dict, n: int, sharding=None) -> Dict:
     out = jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), global_params)
     return out if sharding is None else sharding.place(out)
+
+
+# ---------------------------------------------------------------------------
+# aggregation-policy registry (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AggContext:
+    """Round-side inputs the stateful policies need, handed over by the
+    driver per round (the stateless ``mean`` policy never sees one).
+
+    ``prev_global`` is the pre-round broadcast model x (snapshotted
+    before the donating engines consume the replica buffers);
+    ``partner``/``lengths`` come from the executed ``RoundPlan`` — the
+    DEGRADED plan under faults, so ownership attribution follows what
+    actually trained; ``lr``/``steps`` define the round's nominal local
+    step product K·η that turns a model delta back into a mean gradient.
+    """
+
+    prev_global: Dict
+    partner: np.ndarray          # (N,) executed pairing (self = solo)
+    lengths: np.ndarray          # (N,) per-flow bottom depths l_i
+    num_layers: int              # W
+    lr: float                    # nominal per-step learning rate η
+    steps: int                   # K = batches_per_round
+
+
+class AggregationPolicy:
+    """One rule mapping the cohort's trained replicas (plus optional
+    policy state) to the next global model.
+
+    ``stateful`` declares whether the policy carries cross-round state on
+    ``RoundState`` (checkpointed, sharded); stateful policies also need
+    the per-round ``AggContext``.  ``apply`` returns ``(global_params,
+    new_state)`` — stateless policies return their input state untouched.
+    """
+
+    spec: str = "?"
+    stateful: bool = False
+
+    def init_state(self, params_like: Dict, n: int, sharding=None):
+        """Fresh policy state for an N-client fleet (None if stateless)."""
+        return None
+
+    def apply(self, client_params: Dict, agg_w: jnp.ndarray,
+              mode: str = "paper", *,
+              active: Optional[jnp.ndarray] = None,
+              staleness: Optional[jnp.ndarray] = None,
+              state=None, ctx: Optional[AggContext] = None,
+              round_idx: Optional[int] = None) -> Tuple[Dict, object]:
+        raise NotImplementedError
+
+    # -- checkpoint hooks (rounds.save_state / load_state) ---------------
+
+    def state_tree(self, state) -> Optional[Dict]:
+        """The array leaves of ``state`` to checkpoint (None if none)."""
+        return None
+
+    def state_like(self, params_like: Dict, n: int) -> Optional[Dict]:
+        """A like-tree for restoring ``state_tree`` leaves."""
+        return None
+
+    def restore_state(self, tree: Optional[Dict], meta: Dict,
+                      sharding=None):
+        """Policy state back from its checkpointed leaves + host meta."""
+        return None
+
+
+class MeanAggregation(AggregationPolicy):
+    """The historical cohort-masked weighted mean — delegates to
+    ``aggregate()`` verbatim, so the registry's default is bit-identical
+    to the pre-registry driver by construction."""
+
+    spec = "mean"
+
+    def apply(self, client_params, agg_w, mode="paper", *, active=None,
+              staleness=None, state=None, ctx=None, round_idx=None):
+        return aggregate(client_params, agg_w, mode, active=active,
+                         staleness=staleness, round_idx=round_idx), state
+
+
+@dataclasses.dataclass
+class ScaffoldState:
+    """SCAFFOLD control-variate state (lives on ``RoundState.agg``).
+
+    ``c_global`` estimates the full-fleet mean gradient; ``c_local`` is
+    the stacked (N, ...) per-CLIENT variate tree (client-axis fleet
+    state: sharded over the mesh like the parameter replicas, DESIGN.md
+    §11).  ``applied`` is False until the first variate update — while
+    False the correction is skipped entirely, which keeps the first
+    scaffold round bit-identical to ``mean`` (mathematically the zero
+    variates contribute nothing; skipping keeps it exact at the bit
+    level too)."""
+
+    c_global: Dict
+    c_local: Dict
+    applied: bool = False
+
+
+class ScaffoldAggregation(AggregationPolicy):
+    """SCAFFOLD-over-pairs: variance-reduced aggregation for non-IID
+    cohorts (DESIGN.md §13).
+
+    Per round, with x the pre-round global model, y_i the trained
+    replicas, K·η the round's nominal local step product and w̃ the base
+    step's normalized weights (cohort mask × staleness discount):
+
+    1. base step        g  = Σ w̃_i y_i                    (``aggregate``)
+    2. correction       x⁺ = g + K·η · (Σ w̃_i c_i − c)
+       — the partial-participation correction: at full participation
+       Σ w̃ c_i tracks c and the term vanishes; under cohort sampling it
+       re-centers the sampled cohort's update toward the full-fleet
+       gradient estimate, which is exactly where the non-IID gap opens.
+    3. variate refresh  G_f = (x − y_f)/(K·η) per trained flow f — the
+       flow's observed mean gradient; each cohort member's new variate is
+       the Eq. (6) layer-share-weighted convex combination of the flows
+       it computed (the pair-ownership rule):
+
+           c_k⁺ = (s_own·G_k + s_part·G_p) / (s_own + s_part)
+           s_own  = l_k / W         (its own flow's bottom stack)
+           s_part = (W − l_p) / W   (the top stack of its partner's flow)
+
+       Solo flows (partner == self) reduce to c_k⁺ = G_k; complementary
+       pair cuts (l_p = W − l_k, the planner's invariant) reduce to the
+       pair mean (G_k + G_p)/2 — the pair co-owns ONE drift estimate,
+       weighted apart again only when granularity rounding or degraded
+       re-pairing makes the shares asymmetric.  Excluded clients (fault
+       hard-mask / outside the cohort) keep their variates and NEVER
+       move ``c_global``.
+    4. server variate   c ← c + (1/N) Σ_{k∈S} (c_k⁺ − c_k)
+       — SCAFFOLD's |S|/N partial-participation scaling of the cohort
+       mean delta.
+    """
+
+    spec = "scaffold"
+    stateful = True
+
+    def init_state(self, params_like, n, sharding=None):
+        c_global = jax.tree_util.tree_map(jnp.zeros_like, params_like)
+        c_local = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((n,) + a.shape, a.dtype), params_like)
+        if sharding is not None:
+            c_global = sharding.place_replicated(c_global)
+            c_local = sharding.place(c_local)
+        return ScaffoldState(c_global=c_global, c_local=c_local,
+                             applied=False)
+
+    def apply(self, client_params, agg_w, mode="paper", *, active=None,
+              staleness=None, state=None, ctx=None, round_idx=None):
+        if state is None or ctx is None:
+            raise ValueError(
+                "scaffold aggregation needs its ScaffoldState and the "
+                "round's AggContext (prev model, executed plan, K, lr) — "
+                "drive it through rounds.RoundDriver or supply both")
+        n = int(np.asarray(ctx.partner).shape[0])
+        g = aggregate(client_params, agg_w, mode, active=active,
+                      staleness=staleness, round_idx=round_idx)
+        w = aggregation_weights(agg_w, n, mode, active=active,
+                                staleness=staleness, round_idx=round_idx)
+        k_eta = float(ctx.steps) * float(ctx.lr)
+        if state.applied:
+            cbar = _masked_weighted_mean(w, state.c_local)
+            g = jax.tree_util.tree_map(
+                lambda x, cb, cg: x + jnp.asarray(k_eta, x.dtype)
+                * (cb - cg).astype(x.dtype),
+                g, cbar, state.c_global)
+
+        # -- variate refresh over the trained cohort ----------------------
+        act = (np.ones(n, bool) if active is None
+               else np.asarray(active, bool))
+        partner = np.asarray(ctx.partner, np.int64)
+        lengths = np.asarray(ctx.lengths, np.float64)
+        W = float(ctx.num_layers)
+        s_own = lengths / W
+        # the top stack of the partner's flow is what k computed for it;
+        # solo flows and excluded partners attribute nothing
+        s_part = np.where(partner != np.arange(n),
+                          (W - lengths[partner]) / W, 0.0)
+        s_part = s_part * act[partner].astype(np.float64)
+        denom = np.maximum(s_own + s_part, 1e-12)
+        act_j = jnp.asarray(act)
+        so_j, sp_j, dn_j = (jnp.asarray(v, jnp.float32)
+                            for v in (s_own, s_part, denom))
+
+        def refresh(x, y, c_old):
+            keep = act_j.reshape((-1,) + (1,) * (y.ndim - 1))
+            # hard-mask BEFORE use: an excluded replica's params may be
+            # garbage (faulted straggler) — its flow gradient must read 0
+            G = jnp.where(keep, (x - y) / jnp.asarray(k_eta, y.dtype),
+                          jnp.zeros((), y.dtype))
+            shape = (-1,) + (1,) * (y.ndim - 1)
+            c_new = (so_j.reshape(shape).astype(y.dtype) * G
+                     + sp_j.reshape(shape).astype(y.dtype) * G[partner]) \
+                / dn_j.reshape(shape).astype(y.dtype)
+            delta = jnp.where(keep, c_new - c_old, jnp.zeros((), y.dtype))
+            return jnp.where(keep, c_new, c_old), delta
+
+        new_local, deltas = {}, []
+        flat, treedef = jax.tree_util.tree_flatten(client_params)
+        flat_x = jax.tree_util.tree_leaves(ctx.prev_global)
+        flat_c = jax.tree_util.tree_leaves(state.c_local)
+        out_c, out_d = [], []
+        for x, y, c_old in zip(flat_x, flat, flat_c):
+            c_new, delta = refresh(x, y, c_old)
+            out_c.append(c_new)
+            out_d.append(delta)
+        c_local = jax.tree_util.tree_unflatten(treedef, out_c)
+        # c += (|S|/N) · mean_S(Δc) == (1/N) Σ_S Δc — excluded deltas are
+        # already zeroed, so the sum IS the cohort sum
+        c_global = jax.tree_util.tree_map(
+            lambda cg, d: cg + jnp.sum(d, axis=0) / n,
+            state.c_global,
+            jax.tree_util.tree_unflatten(treedef, out_d))
+        return g, ScaffoldState(c_global=c_global, c_local=c_local,
+                                applied=True)
+
+    # -- checkpoint hooks -------------------------------------------------
+
+    def state_tree(self, state):
+        return {"c_global": state.c_global, "c_local": state.c_local}
+
+    def state_like(self, params_like, n):
+        return {"c_global": params_like,
+                "c_local": jax.tree_util.tree_map(
+                    lambda a: np.zeros((n,) + a.shape,
+                                       np.asarray(a).dtype), params_like)}
+
+    def restore_state(self, tree, meta, sharding=None):
+        c_global = jax.tree_util.tree_map(jnp.asarray, tree["c_global"])
+        c_local = jax.tree_util.tree_map(jnp.asarray, tree["c_local"])
+        if sharding is not None:
+            c_global = sharding.place_replicated(c_global)
+            c_local = sharding.place(c_local)
+        return ScaffoldState(c_global=c_global, c_local=c_local,
+                             applied=bool(meta.get("agg_applied", True)))
+
+
+AGG_POLICY_SPECS: Tuple[str, ...] = ("mean", "scaffold")
+
+
+def get_aggregation_policy(spec) -> AggregationPolicy:
+    """Resolve a policy spec string (``mean`` | ``scaffold``) to an
+    ``AggregationPolicy``; passes policy instances through (the
+    benchmarks' recording wrappers)."""
+    if isinstance(spec, AggregationPolicy):
+        return spec
+    if spec == "mean":
+        return MeanAggregation()
+    if spec == "scaffold":
+        return ScaffoldAggregation()
+    raise ValueError(f"unknown aggregation policy {spec!r}; expected one "
+                     f"of {AGG_POLICY_SPECS}")

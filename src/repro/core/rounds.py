@@ -104,6 +104,10 @@ class RoundConfig:
                                         # replan_threshold, DESIGN.md §8)
     lr: float = 0.05
     aggregation: str = "paper"          # paper | fedavg (DESIGN.md §3)
+    agg_policy: str = "mean"            # aggregation-policy registry
+                                        # (mean | scaffold, DESIGN.md §13);
+                                        # orthogonal to the weighting mode
+                                        # above
     overlap_boost: bool = True
     bucket_granularity: int = 1
     server_cut: int = 0                 # sl/splitfed split; 0 -> W//2
@@ -162,6 +166,13 @@ class RoundConfig:
         if self.aggregation not in ("paper", "fedavg"):
             raise ValueError(f"aggregation must be 'paper' or 'fedavg', "
                              f"got {self.aggregation!r}")
+        agg_pol = aggregation.get_aggregation_policy(self.agg_policy)
+        if agg_pol.stateful and self.algorithm not in ("fedpairing", "fl"):
+            raise ValueError(
+                f"stateful aggregation policy {agg_pol.spec!r} keeps "
+                f"per-client control variates on the stacked replica axis "
+                f"(fedpairing, fl); algorithm {self.algorithm!r} trains a "
+                f"shared relay tree with no per-client axis to correct")
         if self.staleness_bound < 0:
             raise ValueError(f"staleness_bound must be >= 0, got "
                              f"{self.staleness_bound}")
@@ -256,6 +267,10 @@ class RoundState:
                                          # §12): per-client availability +
                                          # recent merge publishes; None on
                                          # the synchronous path
+    agg: Optional[object] = None         # aggregation-policy state
+                                         # (DESIGN.md §13): e.g. the
+                                         # scaffold control variates; None
+                                         # for stateless policies (mean)
 
 
 # ---------------------------------------------------------------------------
@@ -503,6 +518,10 @@ class RoundDriver:
         self.fault_model = faults.FaultModel(self.fault_cfg, self.n,
                                              seed=rc.seed)
         self._fail = self.fault_model.fail_prob()
+        # aggregation policy (DESIGN.md §13): resolved ONCE here so an
+        # unknown spec raises at construction; stateful policies keep
+        # their state on RoundState.agg (initialized/checkpointed below)
+        self.agg_policy = aggregation.get_aggregation_policy(rc.agg_policy)
         if rc.algorithm == "fedpairing":
             self._engine = _ENGINE_CLASSES[rc.engine](
                 cfg, rc, self.n, self._gparams, self.loss_fn)
@@ -523,7 +542,10 @@ class RoundDriver:
                           rng=np.random.default_rng(self.rc.seed),
                           sim_time_s=0.0, history=[],
                           clock=(latency.initial_event_clock(self.n)
-                                 if self.rc.async_rounds else None))
+                                 if self.rc.async_rounds else None),
+                          agg=self.agg_policy.init_state(
+                              self._gparams, self.n,
+                              sharding=self.sharding))
 
     def global_params(self, state: RoundState) -> Dict:
         """The post-broadcast global model.  For sl the single shared tree;
@@ -556,6 +578,9 @@ class RoundDriver:
                           "data_sizes": np.asarray(state.fleet.data_sizes)}}
         if state.server_params is not None:
             tree["server"] = state.server_params
+        agg_tree = self.agg_policy.state_tree(state.agg)
+        if agg_tree is not None:
+            tree["agg"] = agg_tree
         meta = {
             "version": 1,
             "algorithm": self.rc.algorithm,
@@ -573,6 +598,11 @@ class RoundDriver:
             # async event clock (DESIGN.md §12): plain float lists —
             # the msgpack round-trip preserves float64 exactly, so a
             # resumed async trace stays bit-identical
+            # aggregation policy (DESIGN.md §13): the variate ARRAYS ride
+            # in the leaf tree above; the host-side remainder (which
+            # policy, whether its correction has armed) rides here
+            "agg_policy": self.agg_policy.spec,
+            "agg_applied": bool(getattr(state.agg, "applied", False)),
             "async_rounds": bool(self.rc.async_rounds),
             "staleness_bound": int(self.rc.staleness_bound),
             "clock": (None if state.clock is None
@@ -621,6 +651,13 @@ class RoundDriver:
                 f"this driver has async_rounds={self.rc.async_rounds!r} / "
                 f"staleness_bound={self.rc.staleness_bound} — the event "
                 f"clock is part of the resumed trace")
+        ckpt_agg = meta.get("agg_policy", "mean")   # pre-§13 ckpts == mean
+        if ckpt_agg != self.agg_policy.spec:
+            raise ValueError(
+                f"checkpoint {path} was written with agg_policy="
+                f"{ckpt_agg!r}; this driver has agg_policy="
+                f"{self.agg_policy.spec!r} — the control-variate state is "
+                f"part of the resumed trace")
         g = self._gparams
         if self.rc.algorithm == "sl":
             client_like, server_like = g, g
@@ -634,6 +671,9 @@ class RoundDriver:
                           "data_sizes": self.fleet0.data_sizes}}
         if server_like is not None:
             like["server"] = server_like
+        agg_like = self.agg_policy.state_like(g, self.n)
+        if agg_like is not None:
+            like["agg"] = agg_like
         tree = ckpt_io.load_checkpoint(path, like)
         # jnp conversion copies (frombuffer leaves are read-only; the
         # donate=True engines need owned device buffers); a sharded
@@ -657,6 +697,11 @@ class RoundDriver:
         clock = (None if clock_meta is None else latency.EventClockState(
             avail=tuple(float(a) for a in clock_meta["avail"]),
             merges=tuple(float(m) for m in clock_meta["merges"])))
+        agg = (self.agg_policy.restore_state(tree["agg"], meta,
+                                             sharding=self.sharding)
+               if "agg" in tree
+               else self.agg_policy.init_state(self._gparams, self.n,
+                                               sharding=self.sharding))
         if fast_forward:
             for _ in range(int(meta["round"]) * self.rc.batches_per_round):
                 self.batch_fn()
@@ -664,7 +709,8 @@ class RoundDriver:
                           client_params=client, server_params=server,
                           rng=rng,
                           sim_time_s=float(meta["sim_time_s"]),
-                          history=history, plan=plan, clock=clock)
+                          history=history, plan=plan, clock=clock,
+                          agg=agg)
 
     # -- one round --------------------------------------------------------
 
@@ -689,18 +735,19 @@ class RoundDriver:
         active = np.zeros(self.n, bool)
         active[cohort] = True
         if cohort.size == 0:
-            record, client, server, plan, clock = self._empty_round(
+            record, client, server, plan, clock, agg = self._empty_round(
                 state, fleet, cohort)
         else:
             run = {"fedpairing": self._fedpairing_round,
                    "fl": self._fl_round, "sl": self._sl_round,
                    "splitfed": self._splitfed_round}
-            record, client, server, plan, clock = run[rc.algorithm](
+            record, client, server, plan, clock, agg = run[rc.algorithm](
                 state, fleet, cohort, active, pair_seed)
         return dataclasses.replace(
             state, round=state.round + 1, fleet=fleet, client_params=client,
             server_params=server, rng=rng, sim_time_s=record.sim_total_s,
-            history=state.history + [record], plan=plan, clock=clock)
+            history=state.history + [record], plan=plan, clock=clock,
+            agg=agg)
 
     def _record(self, state, cohort, pairs, lengths, mean_loss, round_s,
                 cached, objective=None, replanned=True,
@@ -739,7 +786,7 @@ class RoundDriver:
             clock, _ = latency.advance_event_clock(
                 clock, (), np.zeros(0), 0.0, self.rc.staleness_bound)
         return (rec, state.client_params, state.server_params, state.plan,
-                clock)
+                clock, state.agg)
 
     def round_plan(self, fleet: ClientFleet, partner: np.ndarray,
                    active: np.ndarray, num_layers: Optional[int] = None
@@ -892,6 +939,49 @@ class RoundDriver:
             return None
         return jnp.asarray(ac.staleness, jnp.int32)
 
+    # -- aggregation-policy plumbing (DESIGN.md §13) ----------------------
+
+    def _agg_snapshot(self, state: RoundState) -> Optional[Dict]:
+        """The pre-round global model x, copied BEFORE training (the
+        donate=True engines consume the replica buffers in place).  Row 0
+        of the stacked tree — all rows equal after the previous broadcast.
+        Only the stateful policies need it; the copy is skipped for
+        ``mean`` so the historical path pays nothing."""
+        if not self.agg_policy.stateful:
+            return None
+        return jax.tree_util.tree_map(lambda a: jnp.array(a[0]),
+                                      state.client_params)
+
+    def _agg_snapshot_from(self, g_prev: Dict) -> Optional[Dict]:
+        """Reuse a snapshot a caller already holds (the fault path's
+        rollback copy) — None for stateless policies, so ``_agg_ctx``
+        short-circuits identically to ``_agg_snapshot``."""
+        return g_prev if self.agg_policy.stateful else None
+
+    def _agg_ctx(self, g_prev: Optional[Dict], partner, lengths,
+                 eta: float) -> Optional[aggregation.AggContext]:
+        """The round's AggContext for the stateful policies (None for
+        stateless).  ``eta`` is the EFFECTIVE per-flow per-step rate —
+        lr/N on the fedpairing engines (the engine-normalization
+        contract in the module docstring), lr on the fl baseline."""
+        if g_prev is None:
+            return None
+        return aggregation.AggContext(
+            prev_global=g_prev, partner=np.asarray(partner, np.int64),
+            lengths=np.asarray(lengths, np.float64),
+            num_layers=self.cfg.num_layers, lr=float(eta),
+            steps=self.rc.batches_per_round)
+
+    def _aggregate(self, state: RoundState, params, fleet, active, ac,
+                   mode: str, ctx) -> Tuple[Dict, object]:
+        """One policy aggregation with the driver's standard arguments
+        (cohort mask, staleness discount, round index for the
+        EmptyCohortError)."""
+        return self.agg_policy.apply(
+            params, jnp.asarray(fleet.data_sizes, jnp.float32), mode,
+            active=jnp.asarray(active), staleness=self._staleness_arg(ac),
+            state=state.agg, ctx=ctx, round_idx=state.round)
+
     def _fedpairing_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
         plan, anchor, replanned = self._adaptive_plan(state, fleet, cohort,
@@ -901,6 +991,7 @@ class RoundDriver:
                                             plan, anchor, replanned)
         partner = plan.partner_array()
         agg_w = fedpair.pair_weights(fleet.data_sizes, partner)
+        g_prev = self._agg_snapshot(state)
         params = state.client_params
         losses = []
         for _ in range(rc.batches_per_round):
@@ -920,11 +1011,10 @@ class RoundDriver:
             clock, ac = state.clock, None
             round_s = float(np.max(times)) + upload_s
             wait_s, overlap_s = latency.barrier_wait_s(times), 0.0
-        g = aggregation.aggregate(params,
-                                  jnp.asarray(fleet.data_sizes, jnp.float32),
-                                  rc.aggregation,
-                                  active=jnp.asarray(active),
-                                  staleness=self._staleness_arg(ac))
+        g, agg = self._aggregate(
+            state, params, fleet, active, ac, rc.aggregation,
+            self._agg_ctx(g_prev, partner, plan.lengths_array(),
+                          eta=rc.lr / self.n))
         params = aggregation.broadcast(g, self.n, sharding=self.sharding)
         rec = self._record(state, cohort, plan.pairs, plan.lengths,
                            mean_loss, round_s, self._engine.cached_steps,
@@ -933,7 +1023,7 @@ class RoundDriver:
                            wait_s=wait_s, overlap_s=overlap_s)
         if rc.overlap_planning:
             self._overlap_prebuild(fleet, active)
-        return rec, params, None, anchor, clock
+        return rec, params, None, anchor, clock, agg
 
     def _fedpairing_faulted(self, state, fleet, cohort, active, plan,
                             anchor, replanned):
@@ -970,7 +1060,7 @@ class RoundDriver:
                           | set(clock.link_failed))
         final_active = exec_active.copy()
         final_active[[c for c in excluded if c < self.n]] = False
-        event_clock, ac = state.clock, None
+        event_clock, ac, agg = state.clock, None, state.agg
         if not clock.completed:
             # graceful with no survivor -> skipped; abort with any
             # failure -> aborted.  Params roll back to the pre-round
@@ -1013,10 +1103,14 @@ class RoundDriver:
             else:
                 round_s = clock.round_s
                 wait_s, overlap_s = latency.barrier_wait_s(clock.times), 0.0
-            g = aggregation.aggregate(
-                params, jnp.asarray(fleet.data_sizes, jnp.float32),
-                rc.aggregation, active=jnp.asarray(final_active),
-                staleness=self._staleness_arg(ac))
+            # variate attribution follows the DEGRADED plan and the
+            # post-fault survivor mask: an excluded client's variate
+            # stays put and never moves c_global (the hard-mask contract)
+            g, agg = self._aggregate(
+                state, params, fleet, final_active, ac, rc.aggregation,
+                self._agg_ctx(
+                    self._agg_snapshot_from(g_prev), partner,
+                    exec_plan.lengths_array(), eta=rc.lr / self.n))
             params = aggregation.broadcast(g, self.n,
                                            sharding=self.sharding)
             status = "degraded" if excluded else "ok"
@@ -1031,21 +1125,26 @@ class RoundDriver:
                            wait_s=wait_s, overlap_s=overlap_s)
         if rc.overlap_planning:
             self._overlap_prebuild(fleet, active)
-        return rec, params, None, anchor, event_clock
+        return rec, params, None, anchor, event_clock, agg
 
     def _fl_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
         if self._baseline_step is None:
             self._baseline_step = baselines.make_fl_step(self.loss_fn,
                                                          lr=rc.lr)
+        g_prev = self._agg_snapshot(state)
         params = state.client_params
         losses = []
         for _ in range(rc.batches_per_round):
             params, l = self._baseline_step(params, self.batch_fn())
             losses.append(np.asarray(l))
-        g = aggregation.aggregate(params,
-                                  jnp.asarray(fleet.data_sizes, jnp.float32),
-                                  "fedavg", active=jnp.asarray(active))
+        # fl is the degenerate pairing (everyone solo, full stack): the
+        # scaffold ownership rule reduces to classic per-client variates
+        g, agg = self._aggregate(
+            state, params, fleet, active, None, "fedavg",
+            self._agg_ctx(g_prev, np.arange(self.n),
+                          np.full(self.n, self.cfg.num_layers),
+                          eta=rc.lr))
         params = aggregation.broadcast(g, self.n, sharding=self.sharding)
         plan = planning.baseline_plan(self.n, self.cfg.num_layers,
                                       active=active,
@@ -1062,7 +1161,7 @@ class RoundDriver:
                            _mean_active_loss(losses, active,
                                              round_idx=state.round),
                            round_s, 1, wait_s=wait_s)
-        return rec, params, None, state.plan, state.clock
+        return rec, params, None, state.plan, state.clock, agg
 
     def _sl_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
@@ -1093,7 +1192,7 @@ class RoundDriver:
         # no barrier, so no idle to record (wait_s stays 0.0)
         rec = self._record(state, cohort, (), plan.lengths,
                            mean_loss, round_s, 1)
-        return rec, client, server, state.plan, state.clock
+        return rec, client, server, state.plan, state.clock, state.agg
 
     def _splitfed_round(self, state, fleet, cohort, active, pair_seed):
         rc = self.rc
@@ -1116,7 +1215,8 @@ class RoundDriver:
             losses.append(np.asarray(l))
         # round end: FedAvg the cohort's bottoms, broadcast to everyone
         sub_w = jnp.asarray(fleet.data_sizes[idx], jnp.float32)
-        g = aggregation.aggregate(sub_params, sub_w, "fedavg")
+        g = aggregation.aggregate(sub_params, sub_w, "fedavg",
+                                  round_idx=state.round)
         client = aggregation.broadcast(g, self.n)
         sub = latency.subfleet(fleet, cohort)
         sub_cycles = (self._cycles[cohort] if self._cycles is not None
@@ -1137,7 +1237,7 @@ class RoundDriver:
         rec = self._record(state, cohort, (), plan.lengths,
                            float(per_client.mean()), round_s, 1,
                            wait_s=wait_s)
-        return rec, client, server, state.plan, state.clock
+        return rec, client, server, state.plan, state.clock, state.agg
 
 
 def _record_from_dict(d: Dict) -> RoundRecord:

@@ -33,7 +33,7 @@ import argparse
 import time
 
 from repro.configs import ARCH_IDS, get_smoke_config
-from repro.core import latency, planning, rounds
+from repro.core import aggregation, latency, planning, rounds
 from repro.core.latency import ChannelModel
 from repro.launch import fault_cli, fleet_cli
 
@@ -71,6 +71,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-overlap-boost", action="store_true")
     ap.add_argument("--aggregation", choices=["paper", "fedavg"],
                     default="paper")
+    ap.add_argument("--agg-policy", choices=list(aggregation
+                                                 .AGG_POLICY_SPECS),
+                    default="mean",
+                    help="aggregation-policy registry (DESIGN.md §13): "
+                         "mean (historical weighted mean) | scaffold "
+                         "(control-variate variance reduction for non-IID "
+                         "cohorts)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--async-rounds", action="store_true",
                     help="event-driven async round execution: per-unit "
@@ -118,6 +125,7 @@ def main() -> None:
         batches_per_round=args.batches_per_round,
         participation=args.participation, drift_sigma_m=args.drift,
         lr=args.lr, aggregation=args.aggregation,
+        agg_policy=args.agg_policy,
         overlap_boost=not args.no_overlap_boost,
         bucket_granularity=args.bucket_granularity, seed=args.seed,
         faults=fault_cli.fault_config(args),

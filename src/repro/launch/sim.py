@@ -20,7 +20,7 @@ import json
 import time
 
 from repro.configs import ARCH_IDS, get_smoke_config
-from repro.core import latency, rounds
+from repro.core import aggregation, latency, rounds
 from repro.core.latency import ChannelModel
 from repro.launch import fault_cli, fleet_cli
 
@@ -61,6 +61,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--aggregation", choices=["paper", "fedavg"],
                     default="paper")
+    ap.add_argument("--agg-policy", choices=list(aggregation
+                                                 .AGG_POLICY_SPECS),
+                    default="mean",
+                    help="aggregation-policy registry (DESIGN.md §13): "
+                         "mean (historical weighted mean) | scaffold "
+                         "(control-variate variance reduction for non-IID "
+                         "cohorts; fedpairing/fl)")
     ap.add_argument("--no-overlap-boost", action="store_true")
     ap.add_argument("--bucket-granularity", type=int, default=1)
     ap.add_argument("--server-cut", type=int, default=0,
@@ -103,6 +110,7 @@ def run_sim(args) -> rounds.RoundState:
         batches_per_round=args.batches_per_round,
         participation=args.participation, drift_sigma_m=args.drift,
         lr=args.lr, aggregation=args.aggregation,
+        agg_policy=args.agg_policy,
         overlap_boost=not args.no_overlap_boost,
         bucket_granularity=args.bucket_granularity,
         server_cut=args.server_cut, seed=args.seed,

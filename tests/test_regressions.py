@@ -9,10 +9,11 @@ drift:
 * ``fleet_phase_ranges`` — the uniform SPMD envelope on the extreme
   L=1 vs W-1 fleet (and its covering property under granularity).
 """
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import fedbucket
+from repro.core import aggregation, fedbucket
 from repro.kernels import ops
 from repro.kernels.ref import ce_chunk_size, fit_chunk
 
@@ -109,3 +110,64 @@ class TestFleetPhaseRangesExtreme:
         assert plan.protocol_blocks == plan.dense_blocks // 2
         # exactly two scan shapes per phase on this two-length fleet
         assert plan.num_compiled_shapes <= 4
+
+
+class TestEmptyCohortError:
+    """``aggregation.aggregate()`` on an empty cohort — the raise every
+    baseline path (fl / sl-shaped direct calls / splitfed sub-cohort)
+    depends on but nothing exercised: EmptyCohortError must fire for
+    both weighting modes, stay a ValueError with "empty cohort" in the
+    message (the fault suite matches on it), and name the round index
+    the way ``rounds.NonFiniteLossError`` does."""
+
+    N, W = 4, 3
+
+    def _stacked(self):
+        rng = np.random.default_rng(0)
+        return {"w": jnp.asarray(rng.normal(size=(self.N, self.W, 2)))}
+
+    def test_fl_shaped_all_inactive_fedavg_raises(self):
+        # the fl round's exact call shape: fedavg weights + cohort mask
+        w = jnp.asarray(np.full(self.N, 10.0), jnp.float32)
+        with pytest.raises(aggregation.EmptyCohortError,
+                           match="empty cohort"):
+            aggregation.aggregate(self._stacked(), w, "fedavg",
+                                  active=jnp.zeros(self.N, bool))
+
+    def test_paper_mode_all_inactive_raises(self):
+        w = jnp.ones(self.N, jnp.float32)
+        with pytest.raises(aggregation.EmptyCohortError,
+                           match="empty cohort"):
+            aggregation.aggregate(self._stacked(), w, "paper",
+                                  active=jnp.zeros(self.N, bool))
+
+    def test_splitfed_shaped_zero_weights_raise(self):
+        # the splitfed round aggregates the SUB-cohort with its data
+        # sizes as fedavg weights — all-zero sizes must refuse, not NaN
+        sub = {"w": jnp.ones((2, self.W))}
+        with pytest.raises(aggregation.EmptyCohortError,
+                           match="empty cohort"):
+            aggregation.aggregate(sub, jnp.zeros(2, jnp.float32), "fedavg")
+
+    def test_round_index_is_named(self):
+        w = jnp.ones(self.N, jnp.float32)
+        with pytest.raises(aggregation.EmptyCohortError,
+                           match="round 7") as ei:
+            aggregation.aggregate(self._stacked(), w, "fedavg",
+                                  active=jnp.zeros(self.N, bool),
+                                  round_idx=7)
+        assert ei.value.round == 7
+
+    def test_is_a_value_error(self):
+        # tests/test_faults.py matches pytest.raises(ValueError, ...)
+        assert issubclass(aggregation.EmptyCohortError, ValueError)
+
+    def test_staleness_discount_cannot_rescue_empty_cohort(self):
+        # the 1/(1+s) discount composes with the mask; an all-masked
+        # cohort stays empty whatever the staleness vector says
+        w = jnp.ones(self.N, jnp.float32)
+        with pytest.raises(aggregation.EmptyCohortError,
+                           match="empty cohort"):
+            aggregation.aggregate(self._stacked(), w, "paper",
+                                  active=jnp.zeros(self.N, bool),
+                                  staleness=jnp.arange(self.N))
